@@ -1,0 +1,45 @@
+"""Shared helpers for the figure benchmarks."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.types import PlannerConfig
+from repro.streaming import run_experiment
+
+
+def timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def sweep_methods(vals, window, fracs, methods, cfg=None, queries=("AVG",)):
+    """{(method, frac): (mean NRMSE per query, wan_bytes)}."""
+    cfg = cfg or PlannerConfig()
+    out = {}
+    for m in methods:
+        for f in fracs:
+            r = run_experiment(vals, window, f, m, cfg=cfg,
+                               query_names=queries)
+            out[(m, f)] = ({q: float(np.nanmean(r["nrmse"][q]))
+                            for q in queries}, r["wan_bytes"])
+    return out
+
+
+def bytes_to_reach(curve, target_err, query="AVG"):
+    """Smallest wan_bytes among budget points whose error <= target."""
+    best = None
+    for (m, f), (errs, bts) in curve.items():
+        if errs[query] <= target_err and (best is None or bts < best):
+            best = bts
+    return best
+
+
+def fmt(v):
+    if v is None:
+        return "n/a"
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)

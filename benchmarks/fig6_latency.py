@@ -1,0 +1,52 @@
+"""Fig. 6: edge planning latency vs stream count and arrival frequency.
+
+The paper reports <400 ms at 50 streams (SLSQP on an i7).  We report the
+jit-warm latency of the full Algorithm-1 plan (stats + models + IPM solve)
+per window; compile time is excluded (amortized across windows in steady
+state) and reported once separately.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import plan_window
+from repro.core.types import PlannerConfig, WindowBatch
+
+
+def _window(k, n, seed=0):
+    rng = np.random.default_rng(seed)
+    base = rng.normal(0, 1, n)
+    vals = np.stack([base * rng.uniform(0.5, 2.0) +
+                     rng.normal(0, 0.5, n) + rng.uniform(-5, 5)
+                     for _ in range(k)]).astype(np.float32)
+    return WindowBatch.from_numpy(vals)
+
+
+def _plan_latency(k, n, model):
+    w = _window(k, n)
+    cfg = PlannerConfig(model=model)
+    budget = int(0.3 * k * n)
+    plan_window(w, budget, cfg)             # compile / warm
+    t0 = time.perf_counter()
+    reps = 3
+    for i in range(reps):
+        plan_window(WindowBatch.from_numpy(np.asarray(_window(k, n, i).values)),
+                    budget, cfg)
+    return (time.perf_counter() - t0) / reps * 1e3
+
+
+def run():
+    rows = []
+    for model in ("model", "mean"):
+        for k in (5, 10, 25, 50):
+            t0 = time.perf_counter()
+            ms = _plan_latency(k, 48, model)
+            us = (time.perf_counter() - t0) * 1e6
+            rows.append((f"fig6/latency_{model}_k{k}", us,
+                         f"{ms:.1f}ms_per_window (paper<400ms@50)"))
+    for n in (12, 24, 48, 96):
+        ms = _plan_latency(10, n, "model")
+        rows.append((f"fig6/latency_points{n}", 0.0, f"{ms:.1f}ms_per_window"))
+    return rows

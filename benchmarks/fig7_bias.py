@@ -1,0 +1,32 @@
+"""Fig. 7: bias-tolerance sweep (epsilon = x * SE of edge var estimate),
+Smart City @50% budget: AVG error falls and VAR error rises with tolerance."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.types import PlannerConfig
+from repro.data import smartcity_like
+from repro.streaming import run_experiment
+
+
+def run():
+    rows = []
+    vals, _ = smartcity_like(3072, seed=5)
+    for model in ("model", "mean"):
+        avg_err, var_err = {}, {}
+        t0 = time.perf_counter()
+        for se in (0.5, 1.0, 2.0, 3.0):
+            cfg = PlannerConfig(epsilon_policy="k_se", epsilon_scale=se,
+                                model=model)
+            r = run_experiment(vals, 256, 0.5, model, cfg=cfg,
+                               query_names=("AVG", "VAR"))
+            avg_err[se] = float(np.nanmean(r["nrmse"]["AVG"]))
+            var_err[se] = float(np.nanmean(r["nrmse"]["VAR"]))
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append((f"fig7/{model}_avg_vs_tolerance", us,
+                     " ".join(f"{k}SE:{v:.4f}" for k, v in avg_err.items())))
+        rows.append((f"fig7/{model}_var_vs_tolerance", 0.0,
+                     " ".join(f"{k}SE:{v:.4f}" for k, v in var_err.items())))
+    return rows

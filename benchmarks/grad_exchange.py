@@ -1,0 +1,57 @@
+"""Beyond-paper benchmark: the paper's planner as cross-pod gradient
+compression — DCN bytes/step and quality proxy at several budgets.
+
+Runs the real trainer (8 host devices, 2 pods) in a subprocess per budget
+and reports sync fraction + final loss vs the full-sync baseline.
+"""
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+import time
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _run(budget, steps=30):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    args = [sys.executable, "-m", "repro.launch.train", "--arch", "yi-9b",
+            "--steps", str(steps), "--batch", "8", "--seq", "32",
+            "--pods", "2", "--model-parallel", "2", "--lr", "8e-3",
+            "--log-every", str(steps // 3)]
+    if budget is not None:
+        args += ["--edge-exchange", "--dcn-budget", str(budget),
+                 "--exchange-window", "10"]
+    r = subprocess.run(args, capture_output=True, text=True, env=env,
+                       cwd=ROOT, timeout=540)
+    loss = None
+    frac = 1.0
+    for line in r.stdout.splitlines():
+        m = re.search(r"last=([0-9.]+)", line)
+        if m:
+            loss = float(m.group(1))
+        m = re.search(r"sync fraction=([0-9.]+)", line)
+        if m:
+            frac = float(m.group(1))
+    return loss, frac, r.returncode
+
+
+def run():
+    rows = []
+    t0 = time.perf_counter()
+    base_loss, _, rc = _run(None)
+    us = (time.perf_counter() - t0) * 1e6
+    rows.append(("grad_exchange/full_sync_loss", us,
+                 f"{base_loss} rc={rc}"))
+    for budget in (0.5, 0.25):
+        t0 = time.perf_counter()
+        loss, frac, rc = _run(budget)
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append((f"grad_exchange/budget_{budget}", us,
+                     f"loss={loss} sync_frac={frac:.2f} rc={rc} "
+                     f"dcn_bytes~{frac*100:.0f}%_of_full"))
+    return rows

@@ -1,0 +1,69 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads artifacts/dryrun/*.json and prints per (arch x shape x mesh x tag):
+the three terms (compute / memory / collective, seconds), the dominant
+bottleneck, and MODEL_FLOPS / HLO_FLOPS (useful-compute ratio).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load(tag=None, mesh=None):
+    recs = []
+    for fn in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        r = json.load(open(fn))
+        if tag and r.get("tag") != tag:
+            continue
+        if mesh and r.get("mesh") != mesh:
+            continue
+        recs.append(r)
+    return recs
+
+
+def run():
+    rows = []
+    for r in load():
+        name = f"roofline/{r['arch']}_{r['shape']}_{r['mesh']}_{r.get('tag','')}"
+        if r.get("status") != "ok":
+            rows.append((name, 0.0, r.get("status", "?")))
+            continue
+        rf = r["roofline"]
+        rows.append((name, r.get("compile_seconds", 0) * 1e6,
+                     f"compute={rf['compute_s']*1e3:.1f}ms "
+                     f"mem={rf['memory_s']*1e3:.1f}ms "
+                     f"coll={rf['collective_s']*1e3:.1f}ms "
+                     f"dom={rf['dominant']} "
+                     f"useful={r['useful_flops_ratio']:.2f}"))
+    if not rows:
+        rows.append(("roofline/none", 0.0,
+                     "run `python -m repro.launch.dryrun --all` first"))
+    return rows
+
+
+def table(tag="baseline", mesh="single"):
+    """Markdown table for EXPERIMENTS.md."""
+    lines = ["| arch | shape | compute_s | memory_s | collective_s (ici/dcn) "
+             "| dominant | MODEL/HLO flops | bound frac |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in load(tag=tag, mesh=mesh):
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"{r.get('status')} | — | — |")
+            continue
+        rf = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {rf['compute_s']:.3f} | "
+            f"{rf['memory_s']:.3f} | {rf['collective_s']:.3f} "
+            f"({rf['ici_s']:.3f}/{rf['dcn_s']:.3f}) | {rf['dominant']} | "
+            f"{r['useful_flops_ratio']:.3f} | "
+            f"{rf['roofline_fraction']:.3f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(table())

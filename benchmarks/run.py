@@ -1,0 +1,48 @@
+"""Benchmark harness — one module per paper figure/table.
+
+``python -m benchmarks.run [--only fig4,fig5] [--skip grad_exchange]``
+prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import traceback
+
+MODULES = [
+    "fig3_heuristic", "fig4_turbine", "fig5_smartcity", "fig6_latency",
+    "fig7_bias", "fig8_correlation", "fig9_iid", "fig10_models",
+    "fig11_costs", "fig12_multi_predictor", "kernel_bench",
+    "roofline_report", "grad_exchange",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    ap.add_argument("--skip", default="")
+    args = ap.parse_args()
+    only = [m.strip() for m in args.only.split(",") if m.strip()]
+    skip = [m.strip() for m in args.skip.split(",") if m.strip()]
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in MODULES:
+        if only and name not in only:
+            continue
+        if name in skip:
+            continue
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            for row_name, us, derived in mod.run():
+                print(f"{row_name},{us:.1f},{derived}")
+            sys.stdout.flush()
+        except Exception:
+            failures += 1
+            print(f"{name},0.0,ERROR: {traceback.format_exc(limit=2)!r}")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Geo-distributed streaming with faults: two edge sites, WAN payload drops,
+and a permanently straggling device — the paper's imputation doubles as
+straggler mitigation (DESIGN.md §4).
+
+    PYTHONPATH=src python examples/geo_streaming.py
+"""
+import numpy as np
+
+from repro.core.types import PlannerConfig
+from repro.data import smartcity_like, turbine_like
+from repro.streaming import CloudNode, EdgeNode, StreamingExperiment, Transport
+from repro.data.streams import windows_from_matrix
+
+
+def run_site(name, vals, straggler=None, drop=0.0):
+    exp = StreamingExperiment(
+        edge=EdgeNode(cfg=PlannerConfig(seed=0), budget_fraction=0.25,
+                      method="model", straggler_drop=straggler),
+        cloud=CloudNode(query_names=("AVG", "VAR")),
+        transport=Transport(drop_prob=drop, seed=1),
+    )
+    r = exp.run(windows_from_matrix(vals, 256))
+    print(f"site={name:10s} wan={r['wan_bytes']:7d}B "
+          f"({r['wan_bytes']/r['full_bytes']:.0%} of raw) "
+          f"AVG_nrmse={np.nanmean(r['nrmse']['AVG']):.4f} "
+          f"VAR_nrmse={np.nanmean(r['nrmse']['VAR']):.4f} "
+          f"dropped_windows={r['gaps']}")
+
+
+def main():
+    city, _ = smartcity_like(2048, seed=0)
+    farm, _ = turbine_like(2048, seed=1, k=6)
+
+    print("-- healthy sites --")
+    run_site("city", city)
+    run_site("wind-farm", farm)
+
+    print("-- wind-farm sensor 1 misses every deadline (straggler) --")
+    run_site("wind-farm", farm, straggler=lambda wid, i: i == 1)
+
+    print("-- city uplink drops 30% of payloads (stale-window serving) --")
+    run_site("city", city, drop=0.3)
+
+
+if __name__ == "__main__":
+    main()

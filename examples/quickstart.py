@@ -1,0 +1,36 @@
+"""Quickstart: edge-sampled transmission of dependent streams.
+
+Runs the full Algorithm-1 pipeline (window -> stats -> predictors -> compact
+models -> eq.-1 solve -> WAN payload -> cloud reconstruction -> aggregate
+queries) on the Smart-City synthetic and compares WAN bytes + NRMSE against
+ApproxIoT-style stratified sampling.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core.types import PlannerConfig
+from repro.data import smartcity_like
+from repro.streaming import run_experiment
+
+
+def main():
+    vals, meta = smartcity_like(n_points=2048, seed=0)
+    print(f"dataset: {meta['name']}  k={meta['k']} streams x "
+          f"{vals.shape[1]} tuples")
+    print(f"{'method':12s} {'budget':>6s} {'WAN bytes':>10s} "
+          f"{'AVG':>8s} {'VAR':>8s} {'MAX':>8s}")
+    for method in ("approx_iot", "s_voila", "mean", "model"):
+        for frac in (0.2, 0.4):
+            r = run_experiment(vals, 256, frac, method,
+                               cfg=PlannerConfig(seed=0))
+            n = r["nrmse"]
+            print(f"{method:12s} {frac:6.0%} {r['wan_bytes']:10d} "
+                  f"{np.nanmean(n['AVG']):8.4f} {np.nanmean(n['VAR']):8.4f} "
+                  f"{np.nanmean(n['MAX']):8.4f}")
+    print("\n'model' = this paper (edge sampling + cloud imputation).")
+    print("Note how it reaches baseline error levels with fewer WAN bytes.")
+
+
+if __name__ == "__main__":
+    main()

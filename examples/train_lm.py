@@ -1,0 +1,29 @@
+"""End-to-end training driver example.
+
+Default: a fast CPU demo (smoke config, 150 steps, loss visibly decreases).
+The ~100M-parameter driver the deliverable asks for is the same entry point
+with bigger flags (expect ~hours on this CPU container; on real TPUs this is
+the jitted production path):
+
+  PYTHONPATH=src python examples/train_lm.py -- \
+      --arch starcoder2-3b --d-model 768 --n-layers 12 --full \
+      --steps 300 --batch 16 --seq 256            # ~100M params
+
+Multi-pod + the paper's gradient exchange (8 virtual devices, 2 pods):
+
+  PYTHONPATH=src python examples/train_lm.py -- \
+      --host-devices 8 --pods 2 --model-parallel 2 \
+      --edge-exchange --dcn-budget 0.4 --steps 100
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    if argv[:1] == ["--"]:
+        argv = argv[1:]
+    if not argv:
+        argv = ["--arch", "starcoder2-3b", "--steps", "150", "--batch", "8",
+                "--seq", "64", "--lr", "8e-3", "--log-every", "25"]
+    main(argv)

@@ -1,0 +1,5 @@
+"""repro — Wolfrath & Chandra (2022) edge-sampled dependent-stream
+transmission, reproduced and scaled to a multi-pod JAX training/serving
+framework.  See README.md / DESIGN.md / EXPERIMENTS.md."""
+
+__version__ = "0.1.0"

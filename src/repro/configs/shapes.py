@@ -1,0 +1,52 @@
+"""ShapeDtypeStruct input builders for every (arch x shape) cell.
+
+``input_specs(cfg, shape_name)`` returns the abstract inputs the corresponding
+step function lowers against (weak-type-correct, shardable, no allocation).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES
+from repro.models.config import ModelConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+def train_inputs(cfg: ModelConfig, seq: int, batch: int) -> dict:
+    d = {
+        "tokens": SDS((batch, seq), jnp.int32),
+        "labels": SDS((batch, seq), jnp.int32),
+    }
+    if cfg.frontend == "vision_stub":
+        d["patch_embeds"] = SDS((batch, cfg.n_patches, cfg.d_model),
+                                cfg.activation_dtype)
+        d["positions"] = SDS((batch, seq + cfg.n_patches, 3), jnp.int32)
+    elif cfg.frontend == "audio_stub":
+        d["encoder_embeds"] = SDS((batch, cfg.encoder.seq_len, cfg.d_model),
+                                  cfg.activation_dtype)
+    return d
+
+
+def prefill_inputs(cfg: ModelConfig, seq: int, batch: int) -> dict:
+    d = train_inputs(cfg, seq, batch)
+    del d["labels"]
+    return d
+
+
+def decode_inputs(cfg: ModelConfig, batch: int) -> dict:
+    d = {"tokens": SDS((batch, 1), jnp.int32)}
+    if cfg.frontend == "audio_stub":
+        d["encoder_embeds"] = SDS((batch, cfg.encoder.seq_len, cfg.d_model),
+                                  cfg.activation_dtype)
+    return d
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    seq, batch, kind = SHAPES[shape_name]
+    if kind == "train":
+        return train_inputs(cfg, seq, batch)
+    if kind == "prefill":
+        return prefill_inputs(cfg, seq, batch)
+    return decode_inputs(cfg, batch)

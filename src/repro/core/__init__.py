@@ -1,0 +1,20 @@
+"""The paper's contribution: edge sampling + cloud imputation of dependent
+data streams (Wolfrath & Chandra, 2022)."""
+from repro.core.types import (Allocation, CompactModel, EdgePayload,
+                              PlannerConfig, StreamStats, WindowBatch)
+from repro.core.stats import window_stats, pearson_corr, spearman_corr
+from repro.core.models import fit_models, mean_model, evaluate_model
+from repro.core.predictor import heuristic_predictors, optimal_predictors
+from repro.core.solver import ProblemData, build_problem, solve
+from repro.core.planner import plan_window, plan_with_baseline
+from repro.core.reconstruct import reconstruct_window
+from repro.core import queries
+
+__all__ = [
+    "Allocation", "CompactModel", "EdgePayload", "PlannerConfig",
+    "StreamStats", "WindowBatch", "window_stats", "pearson_corr",
+    "spearman_corr", "fit_models", "mean_model", "evaluate_model",
+    "heuristic_predictors", "optimal_predictors", "ProblemData",
+    "build_problem", "solve", "plan_window", "plan_with_baseline",
+    "reconstruct_window", "queries",
+]

@@ -1,0 +1,57 @@
+"""Bias-tolerance (epsilon_i) selection policies (§IV-C, appendix B)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.types import StreamStats
+
+
+def alpha_fraction(stats: StreamStats, alpha: float = 0.05) -> np.ndarray:
+    """eps_i = alpha * sigma_i^2 — tolerate biasing VAR by a fixed fraction."""
+    return alpha * np.maximum(np.asarray(stats.var, np.float64), 1e-12)
+
+
+def k_standard_errors(stats: StreamStats, k_se: float = 1.0) -> np.ndarray:
+    """eps_i = k * sqrt(Var[sigma_hat^2])  (eq. 8, the paper's default).
+
+    Bias in the cloud estimator is allowed to scale with the *uncertainty* of
+    the edge estimator: precise edge estimates force conservative imputation.
+    """
+    se = np.sqrt(np.maximum(np.asarray(stats.var_of_var, np.float64), 0.0))
+    return k_se * np.maximum(se, 1e-12)
+
+
+def exact_mse_cap(stats: StreamStats, n_real: np.ndarray, n_imp: np.ndarray,
+                  n_std: np.ndarray) -> np.ndarray:
+    """Appendix B: |Bias| <= sqrt(Var_std[s^2] - Var_new[s^2]) guarantees the
+    imputing estimator's MSE is no worse than a standard n_std-sample scheme.
+
+    Non-convex in (n_r, n_s), so per the paper we use it as a *post-hoc cap*:
+    given a candidate allocation, return the implied bound (callers shrink n_s
+    until eq. 7's bias fits under it — see planner.apply_exact_mse_cap).
+    """
+    var = np.asarray(stats.var, np.float64)
+    m4 = np.asarray(stats.m4, np.float64)
+
+    def var_of_s2(n):
+        n = np.maximum(n, 2.0)
+        return np.maximum((m4 - (n - 3.0) / (n - 1.0) * var**2) / n, 0.0)
+
+    v_std = var_of_s2(np.asarray(n_std, np.float64))
+    nr = np.maximum(np.asarray(n_real, np.float64), 2.0)
+    ns = np.maximum(np.asarray(n_imp, np.float64), 0.0)
+    tot = np.maximum(nr + ns - 1.0, 1.0)
+    # Var_new[s^2] ~ ((nr-1)^2 Var[s_r^2] + (ns-1)^2 Var[s_s^2]) / (nr+ns-1)^2;
+    # imputed values are deterministic given the predictor sample, so their
+    # conditional variance term is dominated by the real-sample term.
+    v_new = ((nr - 1.0) ** 2 * var_of_s2(nr)) / tot**2
+    return np.sqrt(np.maximum(v_std - v_new, 0.0))
+
+
+def make_epsilon(policy: str, stats: StreamStats, scale: float) -> np.ndarray:
+    if policy == "alpha":
+        return alpha_fraction(stats, alpha=scale)
+    if policy in ("k_se", "exact_mse"):
+        # exact_mse starts from the 1-SE default and is capped post-solve
+        return k_standard_errors(stats, k_se=scale)
+    raise ValueError(f"unknown epsilon policy: {policy}")

@@ -1,0 +1,187 @@
+"""Algorithm 1 — the edge-side stream sampling planner.
+
+    while window timer running: cache inbound tuples
+    estimate sigma_i^2 (and dependence)
+    heuristic predictor selection
+    solve eq. 1 for n_r, n_s
+    forward samples + compact models to the cloud
+
+One call to :func:`plan_window` performs everything after the cache step and
+returns the :class:`EdgePayload` that crosses the WAN plus diagnostics.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import epsilon as eps_mod
+from repro.core import models as models_mod
+from repro.core import predictor as pred_mod
+from repro.core import samplers
+from repro.core import solver as solver_mod
+from repro.core import stats as stats_mod
+from repro.core import thinning
+from repro.core.types import Allocation, CompactModel, EdgePayload, PlannerConfig, WindowBatch
+
+
+@dataclasses.dataclass
+class PlanDiagnostics:
+    stats: object
+    allocation: Allocation
+    eps: np.ndarray
+    strides: Optional[np.ndarray]
+    predictor: np.ndarray
+    solver_feasible: bool
+
+
+def apply_exact_mse_cap(p: solver_mod.ProblemData, stats, nr: np.ndarray,
+                        ns: np.ndarray) -> np.ndarray:
+    """Appendix-B post-hoc cap: shrink n_s until eq.-7 bias fits under the
+    exact-MSE bound (the bound itself is non-convex, so it cannot live inside
+    the program — see appendix B)."""
+    n_std = nr + ns   # the standard scheme we must not be worse than
+    cap = eps_mod.exact_mse_cap(stats, nr, ns, n_std)
+    out = ns.copy()
+    for i in range(len(ns)):
+        while out[i] > 0:
+            tot = nr[i] + out[i] - 1.0
+            if tot <= 0:
+                break
+            bias = (out[i] * p.sigma2[i] - (out[i] - 1.0) * p.explained_var[i]) / tot
+            if bias <= cap[i] + 1e-12:
+                break
+            out[i] -= 1
+    return out
+
+
+def plan_window(batch: WindowBatch, budget: float, cfg: PlannerConfig,
+                key: Optional[jax.Array] = None) -> tuple[EdgePayload, PlanDiagnostics]:
+    if key is None:
+        key = jax.random.PRNGKey(cfg.seed ^ int(batch.window_id))
+
+    values = np.asarray(batch.values)
+    counts = np.asarray(batch.counts)
+    strides = None
+    if cfg.iid_mode == "thinning":
+        values, counts, strides = thinning.thin_window(values, counts)
+
+    vals_j = jnp.asarray(values)
+    cnts_j = jnp.asarray(counts)
+    stats = stats_mod.window_stats(vals_j, cnts_j, dependence=cfg.dependence)
+
+    # --- predictor selection (heuristic §IV-A, or caller-fixed for the
+    # Fig.-3 optimal-assignment comparison) ---
+    multi = cfg.model == "multi"
+    if cfg.fixed_predictors is not None:
+        predictor = np.asarray(cfg.fixed_predictors, np.int64)
+    elif multi:
+        predictor = np.asarray(
+            pred_mod.heuristic_predictors_multi(stats.corr))     # (k, 2)
+    else:
+        predictor = np.asarray(pred_mod.heuristic_predictors(stats.corr))
+
+    # --- compact models (§IV-B; "multi" = beyond-paper §V-G) ---
+    mean_imp = cfg.model == "mean"
+    if mean_imp:
+        model = models_mod.mean_model(vals_j, cnts_j, jnp.asarray(predictor))
+    elif multi:
+        model = models_mod.fit_models_multi(vals_j, cnts_j,
+                                            jnp.asarray(predictor))
+    else:
+        degree = 1 if cfg.model == "linear" else 3
+        model = models_mod.fit_models(vals_j, cnts_j, jnp.asarray(predictor), degree=degree)
+
+    # --- epsilon policy (§IV-C) ---
+    eps = eps_mod.make_epsilon(cfg.epsilon_policy, stats, cfg.epsilon_scale)
+
+    # --- objective variance under m-dependence (eq. 9) ---
+    sigma2_obj = None
+    if cfg.iid_mode == "m_dependence":
+        sigma2_obj = thinning.m_dependence_sigma2(values, counts, cfg.m_lags)
+
+    # --- model upload overhead comes out of the budget (constraint 1f) ---
+    # An exact per-stream indicator ("model shipped iff n_s>0") is non-convex,
+    # so we reserve the upload for every stream up front (conservative: nearly
+    # all streams impute in practice).  Budget is in 4-byte sample units.
+    if mean_imp:
+        per_model_bytes = 4.0
+    elif multi:
+        per_model_bytes = 4 * 4 + 4 * 4 + 8      # coeffs + loc/scale x2 + idx
+    else:
+        per_model_bytes = model.param_bytes()
+    budget_net = max(budget - per_model_bytes / 4.0 * len(counts), 2.0)
+
+    problem = solver_mod.build_problem(
+        stats, model, eps, budget_net,
+        cost_real=cfg.cost_per_sample,
+        sigma2_obj=sigma2_obj,
+    )
+    alloc = solver_mod.solve(problem, method=cfg.solver)
+    nr = np.asarray(alloc.n_real, np.int64)
+    ns = np.asarray(alloc.n_imputed, np.int64)
+
+    if cfg.epsilon_policy == "exact_mse":
+        ns = apply_exact_mse_cap(problem, stats, nr, ns)
+
+    # --- draw the actual real samples and assemble the WAN payload ---
+    real_values = samplers.draw_samples(key, vals_j, cnts_j, nr)
+    # imputation is keyed to the *front* of the predictor's real sample, so
+    # cap n_s at what actually shipped
+    for i in range(len(ns)):
+        if multi:
+            ns[i] = min(ns[i], len(real_values[int(predictor[i, 0])]),
+                        len(real_values[int(predictor[i, 1])]))
+        else:
+            ns[i] = min(ns[i], len(real_values[int(predictor[i])]))
+
+    payload = EdgePayload(
+        window_id=int(batch.window_id),
+        n_real=np.asarray([len(v) for v in real_values], np.int64),
+        n_imputed=ns,
+        real_values=real_values,
+        model=None if mean_imp else model,
+        mean_imputation=mean_imp,
+        predictor=predictor,
+        stats_digest={"mean": np.asarray(stats.mean), "var": np.asarray(stats.var)},
+    )
+    diag = PlanDiagnostics(stats=stats, allocation=alloc, eps=np.asarray(alloc.eps_used),
+                           strides=strides, predictor=predictor,
+                           solver_feasible=bool(alloc.feasible))
+    return payload, diag
+
+
+def plan_with_baseline(batch: WindowBatch, budget: int, method: str,
+                       key: Optional[jax.Array] = None, seed: int = 0):
+    """Baseline samplers (§V-A3) behind the same payload interface:
+    method in {'srs', 'approx_iot', 's_voila'} — sampling only, no imputation."""
+    if key is None:
+        key = jax.random.PRNGKey(seed ^ (int(batch.window_id) * 9176))
+    values = np.asarray(batch.values)
+    counts = np.asarray(batch.counts)
+    stats = stats_mod.window_stats(batch.values, batch.counts, dependence="pearson")
+    sigma = np.sqrt(np.maximum(np.asarray(stats.var), 0.0))
+    if method == "srs":
+        alloc = samplers.srs_allocation(counts, int(budget))
+    elif method == "approx_iot":
+        alloc = samplers.stratified_allocation(counts, int(budget))
+    elif method == "s_voila":
+        alloc = samplers.svoila_allocation(counts.astype(np.float64), sigma, int(budget))
+    else:
+        raise ValueError(method)
+    real_values = samplers.draw_samples(key, batch.values, batch.counts, alloc)
+    k = len(counts)
+    payload = EdgePayload(
+        window_id=int(batch.window_id),
+        n_real=np.asarray([len(v) for v in real_values], np.int64),
+        n_imputed=np.zeros(k, np.int64),
+        real_values=real_values,
+        model=None,
+        mean_imputation=True,
+        predictor=np.zeros(k, np.int64),
+        stats_digest={"mean": np.asarray(stats.mean), "var": np.asarray(stats.var)},
+    )
+    return payload

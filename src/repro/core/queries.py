@@ -1,0 +1,56 @@
+"""Cloud-side aggregate queries and error metrics (§V-A4).
+
+Queries run over the *reconstructed* window (real + imputed samples).  The
+error metric is NRMSE (eq. 10), normalized by the mean of the true aggregate
+per stream across windows.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def avg(x: np.ndarray) -> float:
+    return float(np.mean(x)) if len(x) else float("nan")
+
+
+def var(x: np.ndarray) -> float:
+    return float(np.var(x, ddof=1)) if len(x) > 1 else float("nan")
+
+
+def vmin(x: np.ndarray) -> float:
+    return float(np.min(x)) if len(x) else float("nan")
+
+
+def vmax(x: np.ndarray) -> float:
+    return float(np.max(x)) if len(x) else float("nan")
+
+
+def median(x: np.ndarray) -> float:
+    return float(np.median(x)) if len(x) else float("nan")
+
+
+def quantile(x: np.ndarray, q: float) -> float:
+    return float(np.quantile(x, q)) if len(x) else float("nan")
+
+
+QUERIES = {"AVG": avg, "VAR": var, "MIN": vmin, "MAX": vmax, "MEDIAN": median}
+
+
+def nrmse(estimates: np.ndarray, truth: np.ndarray) -> float:
+    """eq. 10 for one stream: RMSE over windows / mean |true aggregate|.
+
+    estimates/truth: (T,) per-window aggregate values.
+    """
+    est = np.asarray(estimates, np.float64)
+    tru = np.asarray(truth, np.float64)
+    ok = np.isfinite(est) & np.isfinite(tru)
+    if not ok.any():
+        return float("nan")
+    rmse = np.sqrt(np.mean((est[ok] - tru[ok]) ** 2))
+    denom = max(abs(np.mean(tru[ok])), 1e-9)
+    return float(rmse / denom)
+
+
+def nrmse_table(estimates: np.ndarray, truth: np.ndarray) -> np.ndarray:
+    """(k, T) x (k, T) -> (k,) per-stream NRMSE."""
+    return np.asarray([nrmse(estimates[i], truth[i]) for i in range(len(truth))])

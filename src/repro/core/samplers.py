@@ -1,0 +1,99 @@
+"""Baseline stream samplers the paper compares against (§V-A3, appendix C).
+
+All allocators take per-stream sizes/stats and a total sample budget and
+return integer allocations (largest-remainder rounding, capped at N_i).
+Actual index selection is SRS-within-stream via jax PRNG.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _largest_remainder(frac: np.ndarray, budget: int, cap: np.ndarray) -> np.ndarray:
+    frac = np.maximum(frac, 0.0)
+    tot = frac.sum()
+    if tot <= 0:
+        frac = np.minimum(np.ones_like(frac), cap)
+        tot = max(frac.sum(), 1.0)
+    share = frac / tot * budget
+    base = np.minimum(np.floor(share).astype(np.int64), cap.astype(np.int64))
+    left = int(budget - base.sum())
+    if left > 0:
+        order = np.argsort(-(share - np.floor(share)))
+        for j in order:
+            if left == 0:
+                break
+            if base[j] < cap[j]:
+                base[j] += 1
+                left -= 1
+        # second pass: dump remaining anywhere with headroom
+        for j in np.argsort(-(cap - base)):
+            if left == 0:
+                break
+            add = int(min(left, cap[j] - base[j]))
+            base[j] += add
+            left -= add
+    return base
+
+
+def srs_allocation(n_obs: np.ndarray, budget: int) -> np.ndarray:
+    """Simple random sample over the pooled window => E[n_i] ∝ N_i."""
+    return _largest_remainder(n_obs.astype(np.float64), budget, n_obs)
+
+
+def stratified_allocation(n_obs: np.ndarray, budget: int) -> np.ndarray:
+    """ApproxIoT-style stratified/proportional allocation: n_i ∝ N_i with
+    every stratum represented (min 1 where budget allows)."""
+    k = len(n_obs)
+    base = np.minimum(np.ones(k, np.int64), n_obs.astype(np.int64))
+    if base.sum() > budget:
+        base = srs_allocation(n_obs, budget)
+        return base
+    rest = _largest_remainder(n_obs.astype(np.float64), budget - int(base.sum()),
+                              n_obs - base)
+    return base + rest
+
+
+def svoila_allocation(n_obs: np.ndarray, sigma: np.ndarray, budget: int) -> np.ndarray:
+    """S-VOILA: variance-driven (Neyman) allocation n_i ∝ N_i * sigma_i."""
+    return _largest_remainder(n_obs * np.maximum(sigma, 1e-9), budget, n_obs)
+
+
+def neyman_cost_allocation(n_obs: np.ndarray, sigma: np.ndarray,
+                           cost: np.ndarray, budget_cost: float) -> np.ndarray:
+    """Appendix C 'Optimal Allocation': n_i ∝ N_i sigma_i / sqrt(c_i), subject
+    to a *cost* budget sum c_i n_i <= budget_cost."""
+    w = n_obs * np.maximum(sigma, 1e-9) / np.sqrt(np.maximum(cost, 1e-9))
+    tot = w.sum()
+    if tot <= 0:
+        w = np.ones_like(w)
+        tot = w.sum()
+    # continuous allocation honoring the cost budget, then floor + greedy fill
+    lam = budget_cost / float(np.sum(cost * w / tot))
+    n = np.minimum(np.floor(w / tot * lam).astype(np.int64), n_obs.astype(np.int64))
+    left = budget_cost - float(cost @ n)
+    order = np.argsort(-(w / cost))
+    for j in order:
+        while n[j] < n_obs[j] and cost[j] <= left:
+            n[j] += 1
+            left -= cost[j]
+    return n
+
+
+def draw_samples(key: jax.Array, values: jnp.ndarray, counts: jnp.ndarray,
+                 alloc: np.ndarray) -> list[np.ndarray]:
+    """SRS without replacement inside each stream's valid prefix."""
+    out = []
+    vals = np.asarray(values)
+    cnts = np.asarray(counts)
+    for i, n_i in enumerate(np.asarray(alloc)):
+        key, sub = jax.random.split(key)
+        n_i = int(min(n_i, cnts[i]))
+        if n_i <= 0:
+            out.append(np.zeros((0,), np.float32))
+            continue
+        perm = np.asarray(jax.random.permutation(sub, int(cnts[i])))[:n_i]
+        out.append(vals[i, perm].astype(np.float32))
+    return out

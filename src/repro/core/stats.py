@@ -1,0 +1,164 @@
+"""Windowed stream statistics (§II-B, §IV-C of the paper).
+
+Everything here is masked (per-stream valid counts), pure-jnp and jit-able.
+The Pallas `stream_stats` kernel in ``repro.kernels`` computes the same
+quantities fused in one HBM pass; ``repro.kernels.stream_stats.ref`` delegates
+to these functions as the oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import Array, StreamStats, WindowBatch
+
+_EPS = 1e-12
+
+
+def _mask(values: Array, counts: Array) -> Array:
+    n_max = values.shape[-1]
+    idx = jnp.arange(n_max)[None, :]
+    return (idx < counts[:, None]).astype(values.dtype)
+
+
+def masked_mean(values: Array, counts: Array) -> Array:
+    m = _mask(values, counts)
+    n = jnp.maximum(counts.astype(values.dtype), 1.0)
+    return jnp.sum(values * m, axis=-1) / n
+
+
+def masked_central_moments(values: Array, counts: Array):
+    """Returns (mean, var_unbiased, m2_biased, m4) per stream."""
+    m = _mask(values, counts)
+    n = jnp.maximum(counts.astype(values.dtype), 1.0)
+    mean = jnp.sum(values * m, axis=-1) / n
+    d = (values - mean[:, None]) * m
+    m2 = jnp.sum(d * d, axis=-1) / n
+    m4 = jnp.sum(d**4, axis=-1) / n
+    var = m2 * n / jnp.maximum(n - 1.0, 1.0)
+    return mean, var, m2, m4
+
+
+def var_of_var_estimator(var: Array, m4: Array, counts: Array) -> Array:
+    """eq. 8:  Var[sigma_hat^2] = (mu4 - (N-3)/(N-1) sigma^4) / N.
+
+    Plug-in with the sample fourth central moment; clipped at 0 (the plug-in
+    can go slightly negative for tiny N / near-degenerate streams).
+    """
+    n = jnp.maximum(counts.astype(var.dtype), 2.0)
+    out = (m4 - (n - 3.0) / (n - 1.0) * var**2) / n
+    return jnp.maximum(out, 0.0)
+
+
+def masked_cov(values: Array, counts: Array) -> Array:
+    """Pairwise (k,k) covariance over positions valid in *both* streams.
+
+    Streams are time-aligned within the window, so pairing by position is the
+    natural estimator.  Unbiased (n_pair - 1) normalization.
+    """
+    m = _mask(values, counts)
+    n_pair = m @ m.T  # (k,k) number of co-valid positions
+    n_pair_c = jnp.maximum(n_pair, 1.0)
+    s1 = (values * m) @ m.T  # sum_i over co-valid with j
+    # pairwise means differ per (i,j); compute E[xy] - E[x]E[y] over co-valid set
+    sxy = (values * m) @ (values * m).T
+    mean_i = s1 / n_pair_c
+    mean_j = mean_i.T
+    cov = sxy / n_pair_c - mean_i * mean_j
+    cov = cov * n_pair_c / jnp.maximum(n_pair_c - 1.0, 1.0)
+    return cov
+
+
+def pearson_corr(values: Array, counts: Array) -> Array:
+    cov = masked_cov(values, counts)
+    d = jnp.sqrt(jnp.maximum(jnp.diagonal(cov), _EPS))
+    corr = cov / (d[:, None] * d[None, :])
+    corr = jnp.clip(corr, -1.0, 1.0)
+    return corr
+
+
+def rank_transform(values: Array, counts: Array) -> Array:
+    """Per-stream ranks of the valid prefix (invalid slots pushed to the end).
+
+    Continuous-data ranks (no tie averaging); ranks are 0..N_i-1 scaled to
+    [0, 1] so downstream masked stats remain well-conditioned.
+    """
+    n_max = values.shape[-1]
+    big = jnp.finfo(values.dtype).max
+    m = _mask(values, counts)
+    masked = jnp.where(m > 0, values, big)
+    order = jnp.argsort(masked, axis=-1)
+    ranks = jnp.argsort(order, axis=-1).astype(values.dtype)
+    denom = jnp.maximum(counts.astype(values.dtype) - 1.0, 1.0)[:, None]
+    return jnp.where(m > 0, ranks / denom, 0.0)
+
+
+def spearman_corr(values: Array, counts: Array) -> Array:
+    return pearson_corr(rank_transform(values, counts), counts)
+
+
+@functools.partial(jax.jit, static_argnames=("dependence",))
+def window_stats(values: Array, counts: Array, dependence: str = "pearson") -> StreamStats:
+    mean, var, _m2, m4 = masked_central_moments(values, counts)
+    vov = var_of_var_estimator(var, m4, counts)
+    cov = masked_cov(values, counts)
+    if dependence == "spearman":
+        corr = spearman_corr(values, counts)
+    else:
+        corr = pearson_corr(values, counts)
+    return StreamStats(count=counts, mean=mean, var=var, m4=m4,
+                       var_of_var=vov, cov=cov, corr=corr)
+
+
+def window_stats_batch(batch: WindowBatch, dependence: str = "pearson") -> StreamStats:
+    return window_stats(batch.values, batch.counts, dependence=dependence)
+
+
+def autocovariance(x: Array, n_valid: Array, max_lag: int) -> Array:
+    """Autocovariances gamma_1..gamma_max_lag of a single stream (masked).
+
+    Used for the m-dependence penalty (eq. 9) and the PACF (§V-F).
+    """
+    n_max = x.shape[-1]
+    idx = jnp.arange(n_max)
+    m = (idx < n_valid).astype(x.dtype)
+    n = jnp.maximum(jnp.sum(m), 1.0)
+    mean = jnp.sum(x * m) / n
+    d = (x - mean) * m
+
+    def gamma(lag):
+        a = d[: n_max - lag]
+        b = d[lag:]
+        pair = m[: n_max - lag] * m[lag:]
+        return jnp.sum(a * b * pair) / n
+
+    return jnp.stack([gamma(l) for l in range(1, max_lag + 1)])
+
+
+def pacf(x: Array, n_valid: Array, max_lag: int) -> Array:
+    """Partial autocorrelations via Durbin–Levinson on sample autocovariances."""
+    n_max = x.shape[-1]
+    idx = jnp.arange(n_max)
+    m = (idx < n_valid).astype(x.dtype)
+    n = jnp.maximum(jnp.sum(m), 1.0)
+    mean = jnp.sum(x * m) / n
+    d = (x - mean) * m
+    gamma0 = jnp.sum(d * d) / n
+    gammas = jnp.concatenate([gamma0[None], autocovariance(x, n_valid, max_lag)])
+
+    # Durbin–Levinson (host-friendly small loop; max_lag is static & small)
+    phi_prev = jnp.zeros((max_lag,))
+    pacfs = []
+    v = gamma0
+    for kk in range(1, max_lag + 1):
+        num = gammas[kk] - jnp.sum(phi_prev[: kk - 1] * gammas[1:kk][::-1])
+        phi_kk = num / jnp.maximum(v, _EPS)
+        pacfs.append(phi_kk)
+        if kk > 1:
+            upd = phi_prev[: kk - 1] - phi_kk * phi_prev[: kk - 1][::-1]
+            phi_prev = phi_prev.at[: kk - 1].set(upd)
+        phi_prev = phi_prev.at[kk - 1].set(phi_kk)
+        v = v * (1.0 - phi_kk**2)
+    return jnp.stack(pacfs)

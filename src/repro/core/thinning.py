@@ -1,0 +1,73 @@
+"""IID-assumption relaxations (§IV-D, §V-F).
+
+* Thinning: keep every s-th tuple, s = 1 + (number of significant PACF lags).
+  The paper's recommendation — works without user tuning.
+* m-dependence: inflate the objective variance by 2 * sum_{j<=m} gamma_j
+  (eq. 9); convexity unaffected (the penalty is constant w.r.t. n).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import stats as S
+
+
+def significant_lags(x: np.ndarray, n_valid: int, max_lag: int = 8) -> int:
+    """Count of leading PACF lags outside the ±1.96/sqrt(N) band."""
+    p = np.asarray(S.pacf(jnp.asarray(x, jnp.float32), jnp.asarray(n_valid), max_lag))
+    band = 1.96 / np.sqrt(max(n_valid, 2))
+    sig = 0
+    for v in p:
+        if abs(v) > band:
+            sig += 1
+        else:
+            break
+    return sig
+
+
+def thinning_stride(x: np.ndarray, n_valid: int, max_lag: int = 8) -> int:
+    """Smallest stride s with |ACF(s)| inside the ±1.96/sqrt(N) band —
+    subsampling at that stride leaves ~uncorrelated tuples (Markov-chain
+    thinning, §IV-D).  Capped at max_lag + 1."""
+    n = int(n_valid)
+    band = 1.96 / np.sqrt(max(n, 2))
+    g = np.asarray(S.autocovariance(jnp.asarray(x[:n], jnp.float32),
+                                    jnp.asarray(n), max_lag))
+    var = float(np.var(x[:n])) + 1e-12
+    acf = g / var
+    for lag, v in enumerate(acf, start=1):
+        if abs(v) <= band:
+            return lag
+    return max_lag + 1
+
+
+def thin_window(values: np.ndarray, counts: np.ndarray, max_lag: int = 8):
+    """Per-stream stride subsampling.  Returns (values', counts', strides)."""
+    k, n_max = values.shape
+    out = np.zeros_like(values)
+    new_counts = np.zeros_like(counts)
+    strides = np.ones(k, np.int64)
+    for i in range(k):
+        n = int(counts[i])
+        s = thinning_stride(values[i], n, max_lag)
+        kept = values[i, :n][::s]
+        out[i, : len(kept)] = kept
+        new_counts[i] = len(kept)
+        strides[i] = s
+    return out, new_counts, strides
+
+
+def m_dependence_sigma2(values: np.ndarray, counts: np.ndarray, m: int) -> np.ndarray:
+    """Effective per-stream variance for the objective under m-dependence:
+    sigma_eff^2 = sigma^2 + 2 sum_{j=1}^m gamma_j  (eq. 9), floored at a small
+    positive multiple of sigma^2 (the autocovariance sum can be negative)."""
+    k = values.shape[0]
+    out = np.zeros(k)
+    for i in range(k):
+        v = jnp.asarray(values[i], jnp.float32)
+        n = jnp.asarray(int(counts[i]))
+        _, var, _, _ = S.masked_central_moments(v[None, :], jnp.asarray([int(counts[i])]))
+        g = np.asarray(S.autocovariance(v, n, m))
+        out[i] = max(float(var[0]) + 2.0 * float(g.sum()), 0.05 * float(var[0]) + 1e-12)
+    return out

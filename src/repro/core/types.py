@@ -1,0 +1,153 @@
+"""Core datatypes for the edge-sampling / cloud-imputation system.
+
+Shapes follow the paper's notation (Table I): a tumbling window holds k
+streams; stream i contributed ``N_i`` tuples.  Windows are stored densely as
+``(k, N_max)`` with a per-stream valid count so everything stays jit-able.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class WindowBatch:
+    """One tumbling window of k streams.
+
+    values: (k, N_max) float32 — tuple values, junk past ``counts``.
+    counts: (k,) int32 — N_i, number of valid tuples for stream i.
+    window_id: scalar int32.
+    """
+
+    values: Array
+    counts: Array
+    window_id: Array
+
+    @property
+    def k(self) -> int:
+        return self.values.shape[0]
+
+    @property
+    def n_max(self) -> int:
+        return self.values.shape[1]
+
+    @staticmethod
+    def from_numpy(values: np.ndarray, counts=None, window_id: int = 0) -> "WindowBatch":
+        values = jnp.asarray(values, jnp.float32)
+        if counts is None:
+            counts = jnp.full((values.shape[0],), values.shape[1], jnp.int32)
+        else:
+            counts = jnp.asarray(counts, jnp.int32)
+        return WindowBatch(values=values, counts=counts, window_id=jnp.asarray(window_id, jnp.int32))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class StreamStats:
+    """Per-window sufficient statistics (masked, unbiased where standard).
+
+    All fields are (k,) except ``corr``/``cov`` which are (k, k).
+    ``var_of_var`` is eq. 8: Var[sigma_hat^2] = (mu4 - (N-3)/(N-1) sigma^4)/N.
+    """
+
+    count: Array
+    mean: Array
+    var: Array          # unbiased sample variance
+    m4: Array           # fourth central moment (biased/plug-in)
+    var_of_var: Array   # eq. 8
+    cov: Array          # (k,k) sample covariance (pairwise, unbiased)
+    corr: Array         # (k,k) dependence matrix (Pearson or Spearman)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CompactModel:
+    """Compact representation of E[X_i | X_{p_i}] for all k streams at once.
+
+    coeffs: (k, 4) polynomial coefficients (c0 + c1 u + c2 u^2 + c3 u^3) in
+        *standardized* predictor units u = (x_p - loc) / scale.  Linear models
+        simply carry zeros for c2, c3.
+    loc/scale: (k,) standardization of the predictor column.
+    explained_var: (k,) Var[E[X_i|X_{p_i}]] — variance of fitted values; the
+        V_i that enters the bias bound (eqs. 3, 7, 11).
+    predictor: (k,) int32 — p_i.
+    """
+
+    coeffs: Array
+    loc: Array
+    scale: Array
+    explained_var: Array
+    predictor: Array
+
+    def param_bytes(self) -> int:
+        """WAN footprint of one stream's model (float32 coeffs + loc/scale + idx)."""
+        return 4 * 4 + 2 * 4 + 4
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Allocation:
+    """Solution of the eq.-1 program (after rounding).
+
+    n_real / n_imputed: (k,) int32.
+    objective: scalar — relaxed optimum of eq. 2.
+    feasible: scalar bool — solver certified feasibility.
+    eps_used: (k,) — possibly restored epsilon (see solver docs).
+    """
+
+    n_real: Array
+    n_imputed: Array
+    objective: Array
+    feasible: Array
+    eps_used: Array
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgePayload:
+    """What actually crosses the WAN for one window (host-side container)."""
+
+    window_id: int
+    n_real: np.ndarray                 # (k,) int
+    n_imputed: np.ndarray              # (k,) int
+    real_values: list[np.ndarray]      # per stream, the sampled tuples (float32)
+    model: Optional[CompactModel]      # None => mean imputation (loc carries mean)
+    mean_imputation: bool
+    predictor: np.ndarray              # (k,) int
+    stats_digest: dict                 # small header: per-stream mean (for weights)
+
+    def wan_bytes(self, sample_bytes: int = 4) -> int:
+        data = int(sum(int(n) * sample_bytes for n in self.n_real))
+        header = 8 + 2 * len(self.n_real)  # window id + per-stream counts (uint16)
+        if self.model is None:
+            # mean imputation still ships one float per imputing stream
+            per = 4
+        elif isinstance(self.model, dict):   # multi-predictor (§V-G)
+            per = 4 * 4 + 4 * 4 + 8
+        else:
+            per = self.model.param_bytes()
+        model_bytes = per * int(np.sum(self.n_imputed > 0))
+        return data + header + model_bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class PlannerConfig:
+    """Tunables for the Algorithm-1 planner."""
+
+    dependence: str = "spearman"          # "pearson" | "spearman"  (§IV-B)
+    model: str = "cubic"                  # "linear" | "cubic" | "mean"
+    epsilon_policy: str = "k_se"          # "k_se" | "alpha" | "exact_mse"
+    epsilon_scale: float = 1.0            # k in k·SE, or alpha
+    iid_mode: str = "iid"                 # "iid" | "thinning" | "m_dependence"
+    m_lags: int = 1                       # for m_dependence
+    cost_per_sample: Optional[np.ndarray] = None  # (k,) heterogeneous costs; None => 1
+    weight_mode: str = "inv_mean"         # footnote 3: minimize coefficient of variation
+    solver: str = "ipm"                   # "ipm" (JAX) | "slsqp" (scipy oracle)
+    seed: int = 0
+    fixed_predictors: Optional[np.ndarray] = None  # override §IV-A heuristic

@@ -1,0 +1,5 @@
+from repro.data.streams import (home_like, turbine_like, smartcity_like,
+                                mvn_pair, windows_from_matrix, DATASETS)
+
+__all__ = ["home_like", "turbine_like", "smartcity_like", "mvn_pair",
+           "windows_from_matrix", "DATASETS"]

@@ -1,0 +1,77 @@
+"""Deterministic synthetic LM token pipeline (offline container).
+
+A fixed order-1 Markov chain over the vocabulary gives the model real
+structure to learn (loss decreases measurably within a few hundred steps),
+while staying fully reproducible and dependency-free.  Batches are generated
+host-side, sharded on the fly, with a simple double-buffer prefetch.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Iterator, Optional
+
+import numpy as np
+
+
+class MarkovTokenStream:
+    """Order-1 Markov chain with a banded+sparse transition structure."""
+
+    def __init__(self, vocab: int, seed: int = 0, branch: int = 16):
+        rng = np.random.default_rng(seed)
+        self.vocab = vocab
+        self.branch = min(branch, vocab)
+        # each token transitions to `branch` successors with dirichlet weights
+        self.succ = rng.integers(0, vocab, size=(vocab, self.branch))
+        probs = rng.dirichlet(np.ones(self.branch) * 0.3, size=vocab)
+        self.probs = probs.astype(np.float64)
+
+    def sample(self, rng: np.random.Generator, batch: int, seq: int) -> np.ndarray:
+        out = np.empty((batch, seq + 1), np.int64)
+        out[:, 0] = rng.integers(0, self.vocab, size=batch)
+        for t in range(seq):
+            cur = out[:, t]
+            # vectorized categorical draw per row
+            u = rng.random(batch)
+            cdf = np.cumsum(self.probs[cur], axis=1)
+            idx = (u[:, None] > cdf).sum(axis=1)
+            out[:, t + 1] = self.succ[cur, np.minimum(idx, self.branch - 1)]
+        return out
+
+
+class LMBatcher:
+    """Yields {'tokens','labels'} numpy batches with background prefetch."""
+
+    def __init__(self, vocab: int, batch: int, seq: int, seed: int = 0,
+                 extras: Optional[dict] = None, prefetch: int = 2):
+        self.stream = MarkovTokenStream(vocab, seed)
+        self.batch, self.seq = batch, seq
+        self.extras = extras or {}
+        self.rng = np.random.default_rng(seed + 1)
+        self._q: queue.Queue = queue.Queue(maxsize=prefetch)
+        self._stop = False
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _make(self):
+        toks = self.stream.sample(self.rng, self.batch, self.seq)
+        b = {"tokens": toks[:, :-1].astype(np.int32),
+             "labels": toks[:, 1:].astype(np.int32)}
+        for k, shape_dtype in self.extras.items():
+            shape, dtype = shape_dtype
+            b[k] = np.zeros((self.batch, *shape), dtype)
+        return b
+
+    def _worker(self):
+        while not self._stop:
+            try:
+                self._q.put(self._make(), timeout=0.5)
+            except queue.Full:
+                continue
+
+    def __iter__(self) -> Iterator[dict]:
+        while True:
+            yield self._q.get()
+
+    def close(self):
+        self._stop = True

@@ -1,0 +1,114 @@
+"""Synthetic stand-ins for the paper's evaluation datasets (§V-A2).
+
+The container is offline, so the three real datasets (Smart* Home [33],
+ENGIE La-Haute-Borne Turbine [34], Aarhus Smart City [16]) are replaced by
+statistically matched generators.  Each generator documents the properties it
+matches; EXPERIMENTS.md validates the paper's *claims* on these, not the
+exact figures.
+
+All generators return (values, meta): values is (k, T_total) float32 in tuple
+order; slice into tumbling windows with :func:`windows_from_matrix`.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.types import WindowBatch
+
+
+def _ar1(rng, n, phi, sigma):
+    x = np.zeros(n)
+    e = rng.normal(0.0, sigma, n)
+    for t in range(1, n):
+        x[t] = phi * x[t - 1] + e[t]
+    return x
+
+
+def home_like(n_points: int = 4096, seed: int = 0):
+    """Home dataset stand-in: temperature from 3 Massachusetts homes.
+
+    Matched properties: k=3, strong mutual correlation (pairwise ~0.8-0.9),
+    shared diurnal cycle + per-home AR(1) drift + sensor measurement noise
+    (the noise floor puts NRMSE in the paper's Fig.-3 regime), deg-F scale.
+    """
+    rng = np.random.default_rng(seed)
+    t = np.arange(n_points)
+    diurnal = 8.0 * np.sin(2 * np.pi * t / 288.0)          # 5-min samples, 24h period
+    base = 70.0 + diurnal + _ar1(rng, n_points, 0.95, 0.8)
+    homes = []
+    for i in range(3):
+        offset = rng.normal(0.0, 1.5)
+        local = _ar1(rng, n_points, 0.8, 0.6)
+        noise = rng.normal(0.0, 2.0, n_points)             # sensor noise
+        homes.append(base + offset + local + noise)
+    vals = np.stack(homes).astype(np.float32)
+    return vals, {"name": "home", "k": 3}
+
+
+def turbine_like(n_points: int = 4096, seed: int = 0, k: int = 8):
+    """Turbine dataset stand-in (ENGIE wind farm sensor suite).
+
+    Matched properties (§V-C): heterogeneous sensors — wind speed, power
+    (tightly coupled to wind via a cubic-ish power curve, rho ~0.9), rotor
+    speed (rho ~0.9 with wind), nacelle/ambient temperatures (rho ~0.3-0.5
+    with power through load), and near-independent auxiliary channels
+    (rho < 0.05).  Pairwise correlations span <0.05, 0.3-0.5, ~0.9.
+    """
+    rng = np.random.default_rng(seed)
+    wind = 8.0 + _ar1(rng, n_points, 0.97, 0.25) + 1.5 * np.sin(
+        2 * np.pi * np.arange(n_points) / 1024.0)
+    wind = np.maximum(wind, 0.5)
+    power = np.clip(0.4 * wind**3, 0, 2050) + rng.normal(0, 18.0, n_points)
+    rotor = 1.8 * wind + rng.normal(0, 0.7, n_points)
+    temp_nacelle = 40.0 + 0.006 * power + _ar1(rng, n_points, 0.9, 0.5)
+    temp_ambient = 12.0 + 0.002 * power + _ar1(rng, n_points, 0.95, 0.4)
+    streams = [wind, power, rotor, temp_nacelle, temp_ambient]
+    while len(streams) < k:                      # independent aux channels
+        streams.append(50.0 + _ar1(rng, n_points, 0.9, 2.0))
+    vals = np.stack(streams[:k]).astype(np.float32)
+    return vals, {"name": "turbine", "k": k}
+
+
+def smartcity_like(n_points: int = 4096, seed: int = 0):
+    """Smart-City (Aarhus) stand-in: weather / pollution / parking / traffic.
+
+    Matched properties (§V-D): radically different marginal distributions,
+    modest cross-quantity correlations (~0.4-0.6, e.g. parking occupancy vs
+    temperature through a shared diurnal driver), noisy, count-valued traffic.
+    """
+    rng = np.random.default_rng(seed)
+    t = np.arange(n_points)
+    diurnal = np.sin(2 * np.pi * t / 288.0)
+    activity = np.maximum(diurnal + 0.35 * _ar1(rng, n_points, 0.9, 0.3), -1.0)
+
+    temp = 15.0 + 6.0 * diurnal + _ar1(rng, n_points, 0.97, 0.25)
+    humidity = np.clip(65.0 - 8.0 * diurnal + _ar1(rng, n_points, 0.95, 0.8), 5, 100)
+    no2 = np.maximum(30.0 + 14.0 * activity + _ar1(rng, n_points, 0.9, 2.5), 0.1)
+    parking = np.clip(120.0 + 70.0 * activity + _ar1(rng, n_points, 0.9, 6.0), 0, 250)
+    traffic = rng.poisson(np.maximum(20.0 + 15.0 * activity, 0.5)).astype(np.float64)
+    vals = np.stack([temp, humidity, no2, parking, traffic]).astype(np.float32)
+    return vals, {"name": "smartcity", "k": 5}
+
+
+def mvn_pair(rho: float, n_points: int = 4096, seed: int = 0,
+             mean: float = 30.0, var: float = 16.0):
+    """Fig.-8 synthetic: two streams ~ MVN(mean=30, var=16, corr=rho) —
+    reproduced exactly as the paper specifies (§V-F 'Correlation Effects')."""
+    rng = np.random.default_rng(seed)
+    cov = np.array([[var, rho * var], [rho * var, var]])
+    vals = rng.multivariate_normal([mean, mean], cov, size=n_points).T
+    return vals.astype(np.float32), {"name": f"mvn_rho{rho}", "k": 2}
+
+
+def windows_from_matrix(values: np.ndarray, window: int) -> list[WindowBatch]:
+    """Slice (k, T) tuple matrix into tumbling windows of ``window`` tuples."""
+    k, total = values.shape
+    n_win = total // window
+    out = []
+    for w in range(n_win):
+        chunk = values[:, w * window:(w + 1) * window]
+        out.append(WindowBatch.from_numpy(chunk, window_id=w))
+    return out
+
+
+DATASETS = {"home": home_like, "turbine": turbine_like, "smartcity": smartcity_like}

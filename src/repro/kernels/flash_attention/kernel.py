@@ -1,0 +1,126 @@
+"""Flash attention (forward), TPU Pallas — online-softmax tiling.
+
+§Perf A4: the dense-train roofline is dominated by materialized
+(B,H,S,T) f32 score tensors; this kernel keeps score tiles VMEM-resident
+(never touching HBM) so attention's HBM traffic collapses to Q/K/V/O.
+Serving (prefill) is forward-only, so this kernel covers those cells
+directly; the fused backward is documented future work (dense-train cells
+keep the banded/dense paths).
+
+Grid: (B, H, S/Qblk, T/Kblk), kv innermost; the running max / denominator /
+accumulator live in VMEM scratch across the kv sweep (TPU grids execute
+minor-most sequentially).  Causal and sliding-window masks are applied from
+block positions; fully-masked kv blocks are skipped with @pl.when.
+
+GQA: the kv head index is derived from the q head via the BlockSpec index
+map (h // rep) — no materialized head expansion.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_QBLK = 128
+DEFAULT_KBLK = 128
+_NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, window: int, kblk: int, nk: int,
+            seq_q: int, seq_k: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    qblk = q_ref.shape[1]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * qblk
+    k_start = ki * kblk
+    # block-level skip: causal (kv block entirely in the future) and window
+    # (kv block entirely before the window of every query in the block)
+    live = True
+    if causal:
+        live = k_start <= q_start + qblk - 1
+    if window > 0:
+        live = jnp.logical_and(live, k_start + kblk - 1 >= q_start - window + 1) \
+            if not isinstance(live, bool) else (k_start + kblk - 1 >= q_start - window + 1)
+
+    @pl.when(live)
+    def _step():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)          # (Qblk, hd)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)          # (Kblk, hd)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qp = q_start + jax.lax.broadcasted_iota(jnp.int32, (qblk, kblk), 0)
+        kp = k_start + jax.lax.broadcasted_iota(jnp.int32, (qblk, kblk), 1)
+        mask = kp < seq_k
+        if causal:
+            mask = mask & (kp <= qp)
+        if window > 0:
+            mask = mask & (qp - kp < window)
+        s = jnp.where(mask, s, _NEG)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0, :, 0, :] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "qblk", "kblk", "interpret", "seq_k_valid"))
+def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
+                           qblk: int = DEFAULT_QBLK, kblk: int = DEFAULT_KBLK,
+                           interpret: bool = False, seq_k_valid: int = 0):
+    """q (B,S,H,hd), k/v (B,T,KV,hd) with H % KV == 0; S % qblk == T % kblk
+    == 0 (ops.py pads; seq_k_valid = true key count before padding).
+    Returns (B,S,H,hd) in q.dtype."""
+    b, s, h, hd = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    assert h % kv == 0 and s % qblk == 0 and t % kblk == 0
+    rep = h // kv
+    nq, nk = s // qblk, t // kblk
+    scale = 1.0 / np.sqrt(hd)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window, kblk=kblk,
+        nk=nk, seq_q=s, seq_k=seq_k_valid or t)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, qblk, 1, hd), lambda b_, h_, qi, ki: (b_, qi, h_, 0)),
+            pl.BlockSpec((1, kblk, 1, hd),
+                         lambda b_, h_, qi, ki: (b_, ki, h_ // rep, 0)),
+            pl.BlockSpec((1, kblk, 1, hd),
+                         lambda b_, h_, qi, ki: (b_, ki, h_ // rep, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, qblk, 1, hd),
+                               lambda b_, h_, qi, ki: (b_, qi, h_, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, s, h, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((qblk,), jnp.float32),      # running max
+            pltpu.VMEM((qblk,), jnp.float32),      # running denominator
+            pltpu.VMEM((qblk, hd), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

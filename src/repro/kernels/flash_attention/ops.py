@@ -1,0 +1,36 @@
+"""jit'd wrapper: padding to block multiples + backend dispatch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention.kernel import (DEFAULT_KBLK, DEFAULT_QBLK,
+                                                  flash_attention_pallas)
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window",
+                                             "use_kernel", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    use_kernel: bool = True, interpret: bool = False):
+    """Padded, GQA-aware flash attention. Padding keys sit at positions
+    >= T and are masked inside the kernel (seq_k bound); padded queries are
+    sliced off the output."""
+    if not use_kernel:
+        return flash_attention_ref(q, k, v, causal=causal, window=window)
+    b, s, h, hd = q.shape
+    t = k.shape[1]
+    qblk = min(DEFAULT_QBLK, max(8, 1 << int(np.ceil(np.log2(max(s, 1))))))
+    kblk = min(DEFAULT_KBLK, max(8, 1 << int(np.ceil(np.log2(max(t, 1))))))
+    sp = int(np.ceil(s / qblk) * qblk)
+    tp = int(np.ceil(t / kblk) * kblk)
+    qpd = jnp.pad(q, ((0, 0), (0, sp - s), (0, 0), (0, 0)))
+    kpd = jnp.pad(k, ((0, 0), (0, tp - t), (0, 0), (0, 0)))
+    vpd = jnp.pad(v, ((0, 0), (0, tp - t), (0, 0), (0, 0)))
+    out = flash_attention_pallas(qpd, kpd, vpd, causal=causal, window=window,
+                                 qblk=qblk, kblk=kblk, interpret=interpret,
+                                 seq_k_valid=t)
+    return out[:, :s]

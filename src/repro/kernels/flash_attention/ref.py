@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the flash-attention kernel (GQA, causal, window)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q (B,S,H,hd), k/v (B,T,KV,hd) -> (B,S,H,hd)."""
+    b, s, h, hd = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    rep = h // kv
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    scores = jnp.einsum("bshk,bthk->bhst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / np.sqrt(hd)
+    qp = jnp.arange(s)[:, None]
+    kp = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask = mask & (kp <= qp)
+    if window > 0:
+        mask = mask & (qp - kp < window)
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhst,bthk->bshk", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

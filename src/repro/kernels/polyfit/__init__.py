@@ -1,0 +1,3 @@
+from repro.kernels.polyfit.ops import vandermonde_moments
+
+__all__ = ["vandermonde_moments"]

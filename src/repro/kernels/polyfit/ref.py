@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the polyfit kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def polyfit_ref(y: jax.Array, u: jax.Array):
+    """(k,N),(k,N) -> (pu (k,7) [sum u^0..u^6], py (k,4) [sum y u^0..u^3])."""
+    y = y.astype(jnp.float32)
+    u = u.astype(jnp.float32)
+    pu = jnp.stack([jnp.sum(u**m, axis=1) for m in range(7)], axis=1)
+    py = jnp.stack([jnp.sum(y * u**m, axis=1) for m in range(4)], axis=1)
+    return pu, py

@@ -1,0 +1,3 @@
+from repro.kernels.stream_stats.ops import window_moments_xxt
+
+__all__ = ["window_moments_xxt"]

@@ -1,0 +1,53 @@
+"""jit'd wrapper: padding, backend dispatch, derived statistics."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.stream_stats.kernel import (DEFAULT_TK, DEFAULT_TN,
+                                               stream_stats_pallas)
+from repro.kernels.stream_stats.ref import stream_stats_ref
+
+
+def _on_tpu() -> bool:
+    return jax.devices()[0].platform == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def window_moments_xxt(x: jax.Array, use_kernel: bool = True,
+                       interpret: bool = False):
+    """Raw power sums + cross products of a full window (k, N).
+
+    Zero-pads to tile multiples (exact for sums/products), dispatches to the
+    Pallas kernel on TPU (or interpret mode when requested) and the jnp
+    oracle otherwise.
+    """
+    k, n = x.shape
+    if not use_kernel:
+        return stream_stats_ref(x)
+    tk = min(DEFAULT_TK, max(1, k))
+    tn = min(DEFAULT_TN, max(128, 1 << int(np.ceil(np.log2(max(n, 1))))))
+    kp = int(np.ceil(k / tk) * tk)
+    np_ = int(np.ceil(n / tn) * tn)
+    xp = jnp.pad(x, ((0, kp - k), (0, np_ - n)))
+    mom, xxt = stream_stats_pallas(xp, tk=tk, tn=tn, interpret=interpret)
+    return mom[:k], xxt[:k, :k]
+
+
+def derived_stats(mom: jax.Array, xxt: jax.Array, n: int):
+    """(S1..S4, XXt, N) -> mean, var(unbiased), m4, cov(unbiased).
+
+    Matches repro.core.stats for full (unmasked) windows.
+    """
+    nf = jnp.asarray(float(n), jnp.float32)
+    s1, s2, s3, s4 = mom[:, 0], mom[:, 1], mom[:, 2], mom[:, 3]
+    mean = s1 / nf
+    m2 = s2 / nf - mean**2
+    var = m2 * nf / jnp.maximum(nf - 1.0, 1.0)
+    m4 = (s4 - 4 * mean * s3 + 6 * mean**2 * s2 - 3 * mean**4 * nf) / nf
+    cov = (xxt / nf - mean[:, None] * mean[None, :]) \
+        * nf / jnp.maximum(nf - 1.0, 1.0)
+    return mean, var, jnp.maximum(m4, 0.0), cov

@@ -1,0 +1,425 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay the first statements in this module (before any
+jax-importing import): jax locks the device count at first init, and the
+production meshes need 512 placeholder host devices.
+
+For each cell this script:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. lowers + compiles the right step function against ShapeDtypeStruct
+     inputs (no allocation),
+  3. records memory_analysis / cost_analysis / HLO collective bytes,
+  4. derives the three roofline terms (TPU v5e constants), and
+  5. writes artifacts/dryrun/<arch>__<shape>__<mesh>.json.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma3-12b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both
+  python -m repro.launch.dryrun --list
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, supported_shapes
+from repro.configs.shapes import input_specs
+from repro.launch.hlo_stats import collective_stats
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import make_decode_step, make_prefill, make_train_step
+from repro.models import transformer as T
+from repro.optim.adamw import abstract_train_state, cosine_schedule
+from repro.parallel import mesh_context, tree_shardings
+from repro.parallel.sharding import _divisible
+
+# --- TPU v5e hardware constants (per chip) ---
+PEAK_FLOPS = 197e12        # bf16
+HBM_BW = 819e9             # bytes/s
+ICI_BW = 50e9              # bytes/s per link
+DCN_BW = 3e9               # bytes/s per chip (multislice DCN, assumed)
+
+# microbatch counts: activation-memory lever (see EXPERIMENTS.md §Perf)
+MICROBATCHES = {
+    ("jamba_1_5_large_398b", "train_4k"): 16,
+    ("qwen3_moe_30b_a3b", "train_4k"): 8,
+    ("deepseek_moe_16b", "train_4k"): 8,
+    ("gemma3_12b", "train_4k"): 4,
+    ("yi_9b", "train_4k"): 4,
+    ("chatglm3_6b", "train_4k"): 4,
+    ("starcoder2_3b", "train_4k"): 2,
+    ("whisper_large_v3", "train_4k"): 4,
+    ("qwen2_vl_2b", "train_4k"): 2,
+    ("mamba2_780m", "train_4k"): 2,
+}
+
+
+def _batch_axes(mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_shardings(specs: dict, mesh) -> dict:
+    """Shard every input's leading (batch) dim over (pod, data)."""
+    ba = _batch_axes(mesh)
+    bsize = int(np.prod([mesh.shape[a] for a in ba])) if ba else 1
+
+    def one(sds):
+        b = sds.shape[0]
+        spec = [None] * len(sds.shape)
+        if ba and b % bsize == 0 and b >= bsize:
+            spec[0] = ba
+        return jax.ShapeDtypeStruct(sds.shape, sds.dtype,
+                                    sharding=NamedSharding(mesh, P(*spec)))
+
+    return {k: one(v) for k, v in specs.items()}
+
+
+def cache_shardings(cfg, mesh, cache_sds, shape_name):
+    """Decode-cache sharding: batch over (pod,data); KV sequence over 'model'
+    (plus 'data' for the 500k single-request cell = sequence parallelism)."""
+    ba = _batch_axes(mesh)
+    if shape_name == "long_500k":
+        seq_ax = tuple(a for a in ("data", "model") if a in mesh.axis_names)
+    else:
+        seq_ax = ("model",)
+
+    from jax.tree_util import keystr, tree_map_with_path
+
+    def one(path, sds):
+        p = keystr(path)
+        shape = sds.shape
+        spec = [None] * len(shape)
+        if p.endswith("['len']") or "write_idx" in p:
+            return jax.ShapeDtypeStruct(shape, sds.dtype,
+                                        sharding=NamedSharding(mesh, P()))
+        if "enc_out" in p:             # (B, frames, d): batch-sharded
+            if _divisible(shape[0], mesh, ba):
+                spec[0] = ba
+            return jax.ShapeDtypeStruct(shape, sds.dtype,
+                                        sharding=NamedSharding(mesh, P(*spec)))
+        # leading dim is n_blocks (scan-stacked); dim 1 is batch
+        if len(shape) >= 2 and _divisible(shape[1], mesh, ba):
+            spec[1] = ba
+        if "'k'" in p or "'v'" in p:
+            if _divisible(shape[2], mesh, seq_ax):
+                spec[2] = seq_ax
+            elif _divisible(shape[2], mesh, ("model",)):
+                spec[2] = ("model",)
+        elif "'pos'" in p:
+            if _divisible(shape[2], mesh, seq_ax):
+                spec[2] = seq_ax
+            elif _divisible(shape[2], mesh, ("model",)):
+                spec[2] = ("model",)
+        elif "'conv'" in p:
+            if _divisible(shape[3], mesh, ("model",)):
+                spec[3] = "model"
+        elif "'ssm'" in p:
+            if _divisible(shape[2], mesh, ("model",)):
+                spec[2] = "model"
+        return jax.ShapeDtypeStruct(shape, sds.dtype,
+                                    sharding=NamedSharding(mesh, P(*spec)))
+
+    return tree_map_with_path(one, cache_sds)
+
+
+def state_shardings(cfg, mesh, zero_pod: bool = False):
+    """Sharded abstract TrainState.  zero_pod extends the FSDP axis of the
+    f32 master params and Adam moments across the pod axis as well (ZeRO over
+    pod x data) — required to FIT 398B-scale state in 16 GB/chip."""
+    params_sds = T.abstract_params(cfg)
+    state_sds = abstract_train_state(params_sds)
+    shardings = tree_shardings(state_sds, mesh)
+    if zero_pod and "pod" in mesh.axis_names:
+        def widen(sh):
+            spec = tuple(("data", "pod") if ax == "data"
+                         or (isinstance(ax, tuple) and "data" in ax) else ax
+                         for ax in sh.spec)
+            return NamedSharding(mesh, P(*spec))
+        shardings = jax.tree.map(widen, shardings)
+
+    def attach(sds, sh):
+        return jax.ShapeDtypeStruct(sds.shape, sds.dtype, sharding=sh)
+
+    return jax.tree.map(attach, state_sds, shardings)
+
+
+def params_shardings(cfg, mesh, bf16: bool = False):
+    """Serving params; bf16=True lowers against bf16 checkpoints (halves the
+    weight-read traffic that dominates memory-bound decode)."""
+    params_sds = T.abstract_params(cfg)
+    shardings = tree_shardings(params_sds, mesh)
+
+    def attach(sds, sh):
+        dt = jnp.bfloat16 if (bf16 and sds.dtype == jnp.float32
+                              and len(sds.shape) >= 2) else sds.dtype
+        return jax.ShapeDtypeStruct(sds.shape, dt, sharding=sh)
+
+    return jax.tree.map(attach, params_sds, shardings)
+
+
+# reduced cells for CI: same machinery, tiny configs, 4/8-device meshes
+SMOKE_SHAPES = {
+    "train_4k": (64, 8, "train"),
+    "prefill_32k": (64, 4, "prefill"),
+    "decode_32k": (64, 4, "decode"),
+    "long_500k": (128, 2, "decode"),
+}
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               microbatches=None, sp_rules=None, smoke: bool = False,
+               attn: str = None, cast_bf16: bool = False,
+               edge_exchange: float = 0.0, zero3: str = None):
+    """Lower + compile one cell; returns (compiled, lowered, meta)."""
+    import dataclasses
+    cfg = get_config(arch, smoke=smoke)
+    if attn:
+        cfg = dataclasses.replace(cfg, attn_impl=attn)
+    if zero3:
+        cfg = dataclasses.replace(cfg, zero3=zero3)
+    if smoke:
+        shape = (2, 2, 2) if multi_pod else (2, 2)
+        axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+        need = int(np.prod(shape))
+        mesh = jax.make_mesh(shape, axes, devices=jax.devices()[:need])
+        seq, batch, kind = SMOKE_SHAPES[shape_name]
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        seq, batch, kind = SHAPES[shape_name]
+    rules = dict(sp_rules or {})
+
+    from repro.configs.shapes import (decode_inputs, prefill_inputs,
+                                      train_inputs)
+    if kind == "train":
+        specs = train_inputs(cfg, seq, batch)
+    elif kind == "prefill":
+        specs = prefill_inputs(cfg, seq, batch)
+    else:
+        specs = decode_inputs(cfg, batch)
+    specs = batch_shardings(specs, mesh)
+
+    with mesh_context(mesh, rules):
+        if kind == "train":
+            mb = microbatches if microbatches is not None else \
+                MICROBATCHES.get((arch.replace("-", "_"), shape_name), 1)
+            mb = min(mb, batch)          # smoke cells: tiny batches
+            lr = cosine_schedule(3e-4, 100, 10_000)
+            exchange = None
+            n_pods = 1
+            if edge_exchange > 0 and multi_pod:
+                from repro.models import transformer as _T
+                from repro.optim.edge_exchange import (EdgeGradController,
+                                                       full_sync_plan,
+                                                       make_stacked_exchange)
+                plan = full_sync_plan(_T.abstract_params(cfg))
+                # static plan at the given DCN budget: keep the largest-
+                # disagreement fraction synced; for the dry-run we emulate a
+                # converged plan by syncing every (1/frac)-th tensor by size
+                paths = sorted(plan.sync)
+                import numpy as _np
+                sizes = {p: 1 for p in paths}
+                keep = max(1, int(len(paths) * edge_exchange))
+                sync = {p: (i % max(1, len(paths) // keep) == 0)
+                        for i, p in enumerate(paths)}
+                plan = dataclasses.replace(plan, sync=sync)
+                exchange = make_stacked_exchange(plan)
+                n_pods = 2
+            step = make_train_step(cfg, lr, microbatches=mb,
+                                   cast_params_bf16=cast_bf16,
+                                   grad_exchange=exchange, n_pods=n_pods)
+            state = state_shardings(cfg, mesh,
+                                    zero_pod=(zero3 in ("step", "block")))
+            lowered = jax.jit(step).lower(state, specs)
+        elif kind == "prefill":
+            step = make_prefill(cfg, max_seq=seq)
+            params = params_shardings(cfg, mesh, bf16=cast_bf16)
+            lowered = jax.jit(step).lower(params, specs)
+        else:  # decode
+            step = make_decode_step(cfg)
+            params = params_shardings(cfg, mesh, bf16=cast_bf16)
+            cache_sds = T.abstract_cache(cfg, batch, seq)
+            cache = cache_shardings(cfg, mesh, cache_sds, shape_name)
+            lowered = jax.jit(step).lower(params, cache, specs)
+        compiled = lowered.compile()
+    meta = {"mesh_shape": dict(mesh.shape), "kind": kind,
+            "seq": seq, "batch": batch}
+    return compiled, lowered, meta, cfg
+
+
+def analyse(compiled, meta, cfg, multi_pod: bool) -> dict:
+    from repro.launch.hlo_stats import HloCostModel
+
+    ms = meta["mesh_shape"]
+    chips = int(np.prod(list(ms.values())))
+    pod_size = chips // ms["pod"] if "pod" in ms else 0
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    # raw cost_analysis counts while bodies once => useless for scanned
+    # stacks; kept for reference only.
+    raw_flops = float(cost.get("flops", 0.0))
+    raw_bytes = float(cost.get("bytes accessed", 0.0))
+    hlo = compiled.as_text()
+    model = HloCostModel(hlo, pod_size=pod_size)
+    tot = model.totals()
+    flops = tot["flops"]               # trip-scaled dot FLOPs, per device
+    bytes_acc = tot["mem"]             # trip-scaled HBM-visible bytes
+    coll = {"per_op": tot["per_op"], "total_bytes": tot["total_bytes"],
+            "dcn_bytes": tot["dcn"], "ici_bytes": tot["ici"]}
+
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes"):
+            mem[f] = int(getattr(ma, f, 0))
+    except Exception as e:                                    # pragma: no cover
+        mem["error"] = repr(e)
+
+    # roofline terms (seconds); cost/HLO stats are per-device post-SPMD
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_acc / HBM_BW
+    ici_s = coll["ici_bytes"] / ICI_BW
+    dcn_s = coll["dcn_bytes"] / DCN_BW
+    collective_s = ici_s + dcn_s
+
+    n_params = cfg.param_count()
+    n_active = cfg.active_param_count()
+    tokens = meta["batch"] * (meta["seq"] if meta["kind"] != "decode" else 1)
+    if meta["kind"] == "train":
+        model_flops = 6.0 * n_active * tokens
+    else:
+        model_flops = 2.0 * n_active * tokens
+    hlo_flops_global = flops * chips
+    useful_ratio = model_flops / hlo_flops_global if hlo_flops_global else 0.0
+
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s, "ici_s": ici_s, "dcn_s": dcn_s}
+    dominant = max(("compute_s", "memory_s", "collective_s"),
+                   key=lambda k: terms[k])
+    bound_s = max(terms["compute_s"], terms["memory_s"], terms["collective_s"])
+    return {
+        "chips": chips,
+        "flops_per_device": flops,
+        "bytes_per_device": bytes_acc,
+        "raw_cost_analysis": {"flops": raw_flops, "bytes": raw_bytes,
+                              "note": "while bodies counted once"},
+        "collectives": coll,
+        "memory_analysis": mem,
+        "roofline": {**terms, "dominant": dominant,
+                     "roofline_fraction": compute_s / bound_s if bound_s else 0.0},
+        "model_flops_global": model_flops,
+        "hlo_flops_global": hlo_flops_global,
+        "useful_flops_ratio": useful_ratio,
+        "params": n_params,
+        "active_params": n_active,
+    }
+
+
+def run_cell(arch, shape_name, multi_pod, out_dir: Path, tag="baseline",
+             microbatches=None, sp_rules=None, smoke: bool = False,
+             attn: str = None, cast_bf16: bool = False,
+             edge_exchange: float = 0.0, zero3: str = None) -> dict:
+    mesh_name = "multi" if multi_pod else "single"
+    status = supported_shapes(arch).get(shape_name, "ok")
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "tag": tag}
+    if status != "ok":
+        rec["status"] = status
+        print(f"[dryrun] {arch} {shape_name} {mesh_name}: {status}")
+        return rec
+    t0 = time.time()
+    try:
+        compiled, lowered, meta, cfg = lower_cell(
+            arch, shape_name, multi_pod, microbatches=microbatches,
+            sp_rules=sp_rules, smoke=smoke, attn=attn, cast_bf16=cast_bf16,
+            edge_exchange=edge_exchange, zero3=zero3)
+        rec.update(meta)
+        rec.update(analyse(compiled, meta, cfg, multi_pod))
+        rec["status"] = "ok"
+        rec["compile_seconds"] = time.time() - t0
+        r = rec["roofline"]
+        print(f"[dryrun] {arch} {shape_name} {mesh_name} OK "
+              f"compute={r['compute_s']*1e3:.2f}ms mem={r['memory_s']*1e3:.2f}ms "
+              f"coll={r['collective_s']*1e3:.2f}ms dom={r['dominant']} "
+              f"({rec['compile_seconds']:.0f}s)")
+    except Exception as e:
+        rec["status"] = f"error:{type(e).__name__}"
+        rec["error"] = traceback.format_exc()[-4000:]
+        print(f"[dryrun] {arch} {shape_name} {mesh_name} FAILED: {e}",
+              file=sys.stderr)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    fn = out_dir / f"{arch.replace('-', '_')}__{shape_name}__{mesh_name}__{tag}.json"
+    fn.write_text(json.dumps(rec, indent=1, default=str))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--attn", default=None, choices=[None, "dense", "banded"])
+    ap.add_argument("--zero3", default=None, choices=[None, "off", "step", "block"])
+    ap.add_argument("--cast-bf16", action="store_true")
+    ap.add_argument("--edge-exchange", type=float, default=0.0,
+                    help="sync fraction for the paper's cross-pod exchange")
+    ap.add_argument("--optimized", action="store_true",
+                    help="per-arch best §Perf flags (see EXPERIMENTS.md)")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+    if args.optimized:
+        args.tag = args.tag if args.tag != "baseline" else "optimized"
+        args.cast_bf16 = True
+        args.attn = args.attn or "banded"   # only activates on window archs
+
+    cells = []
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch.replace("-", "_")]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                cells.append((a, s, mp))
+
+    if args.list:
+        for a, s, mp in cells:
+            sup = supported_shapes(a).get(s, "ok")
+            print(f"{a} {s} {'multi' if mp else 'single'} [{sup}]")
+        return
+
+    out_dir = Path(args.out)
+    bad = 0
+    for a, s, mp in cells:
+        zero3 = args.zero3
+        mb = args.microbatches
+        if args.optimized and zero3 is None:
+            zero3 = "block" if "jamba" in a else "step"
+            if "jamba" in a and mb is None:
+                mb = 8
+        rec = run_cell(a, s, mp, out_dir, tag=args.tag,
+                       microbatches=mb, attn=args.attn,
+                       cast_bf16=args.cast_bf16, zero3=zero3,
+                       edge_exchange=args.edge_exchange)
+        if rec.get("status", "").startswith("error"):
+            bad += 1
+    sys.exit(1 if bad else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Production mesh construction (single-pod 16x16, multi-pod 2x16x16).
+
+A function, not a module-level constant: importing this module never touches
+jax device state (the dry-run overrides the device count *before* jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    import numpy as np
+    need = int(np.prod(shape))
+    devices = jax.devices()[:need]
+    if len(devices) < need:
+        raise RuntimeError(
+            f"production mesh needs {need} devices, found {len(jax.devices())}"
+            " — run under launch/dryrun.py (it forces 512 host devices)")
+    return jax.make_mesh(shape, axes, devices=devices)
+
+
+def make_local_mesh(model_parallel: int = 1, pods: int = 1):
+    """Mesh over whatever devices exist (tests / examples / CPU smoke)."""
+    n = len(jax.devices())
+    assert n % (model_parallel * pods) == 0, (n, model_parallel, pods)
+    data = n // (model_parallel * pods)
+    if pods > 1:
+        return jax.make_mesh((pods, data, model_parallel),
+                             ("pod", "data", "model"))
+    return jax.make_mesh((data, model_parallel), ("data", "model"))

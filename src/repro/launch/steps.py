@@ -1,0 +1,161 @@
+"""Step-function factories shared by the dry-run, the trainer and serving.
+
+``make_train_step(cfg)`` supports microbatched gradient accumulation (a
+``lax.scan`` over microbatches — the main activation-memory lever at the
+assigned global batch sizes) and an optional cross-pod gradient exchange hook
+(the paper's technique; see repro.optim.edge_exchange).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models import transformer as T
+from repro.optim.adamw import TrainState, adamw_update
+
+
+def _split_microbatches(batch: dict, n: int) -> dict:
+    def r(x):
+        b = x.shape[0]
+        assert b % n == 0, (b, n)
+        return x.reshape(n, b // n, *x.shape[1:])
+    return jax.tree.map(r, batch)
+
+
+def make_train_step(cfg: ModelConfig, lr_fn: Callable, *, microbatches: int = 1,
+                    grad_exchange: Optional[Callable] = None, n_pods: int = 1,
+                    weight_decay: float = 0.1, clip_norm: float = 1.0,
+                    cast_params_bf16: bool = False):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    With ``grad_exchange`` (and n_pods > 1), gradients are computed per pod
+    via vmap over a leading pod axis (sharded over "pod"), then combined by
+    the exchange (selective cross-pod sync + imputation — the paper's
+    technique).  Plain path otherwise.
+
+    cast_params_bf16: cast the f32 master params to bf16 ONCE per step,
+    outside the microbatch scan — FSDP all-gathers then move 2-byte weights
+    and are loop-invariant (XLA hoists them out of the scan).  Grads flow
+    back to the f32 masters through the cast.
+    """
+
+    def loss_fn(params, mb):
+        return T.forward_train(params, mb, cfg)
+
+    def _cast(params):
+        if not cast_params_bf16:
+            return params
+        from repro.parallel.sharding import _active, gathered_shardings
+        out = jax.tree.map(
+            lambda p: p.astype(jnp.bfloat16)
+            if p.dtype == jnp.float32 and p.ndim >= 2 else p, params)
+        ctx = _active()
+        if ctx is None:
+            return out
+        mesh = ctx[0]
+        if cfg.zero3 != "block":
+            # step-level ZeRO-3: gather the bf16 copy across the FSDP axis
+            # once per step (hoisted); "block" models gather inside the layer
+            # scan instead (transformer._stack) — the whole gathered tree
+            # would blow HBM (jamba-398B: 50 GB/device)
+            shard = gathered_shardings(out, mesh)
+            out = jax.tree.map(jax.lax.with_sharding_constraint, out, shard)
+        elif "pod" in mesh.axis_names:
+            # block mode + pod-sharded masters: pull the bf16 copy across the
+            # pod axis ONCE per step (DCN ~params_bf16/(data*model) per chip);
+            # the per-block data-axis gathers stay on ICI
+            from repro.parallel.sharding import tree_pspecs
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            def drop_pod(s):
+                return P(*(tuple(a for a in ax if a != "pod") if
+                           isinstance(ax, tuple) else
+                           (None if ax == "pod" else ax) for ax in s))
+
+            specs = tree_pspecs(out, mesh)
+            out = jax.tree.map(
+                lambda x, s: jax.lax.with_sharding_constraint(
+                    x, NamedSharding(mesh, drop_pod(s)))
+                if x.ndim >= 2 else x, out, specs)
+        return out
+
+    def compute_grads(params, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            return loss, metrics, grads
+        mbs = _split_microbatches(batch, microbatches)
+        zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def acc(carry, mb):
+            g_sum, loss_sum = carry
+            (loss, _m), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+            g_sum = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                                 g_sum, g)
+            return (g_sum, loss_sum + loss), None
+
+        (g_sum, loss_sum), _ = jax.lax.scan(acc, (zero_g, 0.0), mbs)
+        grads = jax.tree.map(lambda g: g / microbatches, g_sum)
+        return loss_sum / microbatches, {}, grads
+
+    def train_step(state: TrainState, batch: dict):
+        fwd_params = _cast(state.params)   # outside the microbatch scan:
+        # the bf16 FSDP all-gathers become loop-invariant and hoist
+        if grad_exchange is None or n_pods == 1:
+            loss, metrics, grads = compute_grads(fwd_params, batch)
+            if grad_exchange is not None:
+                grads, ex_m = grad_exchange(grads, state.m)
+                metrics = {**metrics, **ex_m}
+        else:
+            # (B, ...) -> (pods, B/pods, ...), dim 0 sharded over "pod"
+            from repro.parallel.sharding import (_active,
+                                                 logical_sharding_constraint,
+                                                 mesh_context)
+            pod_batch = _split_microbatches(batch, n_pods)
+
+            def pod_grads(params, mb):
+                loss, _m, g = compute_grads(params, mb)
+                return loss, g
+
+            ctx = _active()
+            if ctx is not None:
+                # inside the vmapped pod region, "batch" = in-pod batch
+                with mesh_context(ctx[0], {"batch": ("data",),
+                                           "pods": ("pod",)}):
+                    pod_batch = jax.tree.map(
+                        lambda x: logical_sharding_constraint(
+                            x, ("pods", "batch") + (None,) * (x.ndim - 2)),
+                        pod_batch)
+                    loss_p, grads_p = jax.vmap(pod_grads, in_axes=(None, 0))(
+                        fwd_params, pod_batch)
+            else:
+                loss_p, grads_p = jax.vmap(pod_grads, in_axes=(None, 0))(
+                    fwd_params, pod_batch)
+            loss = jnp.mean(loss_p)
+            grads, metrics = grad_exchange(grads_p, state.m)
+
+        lr = lr_fn(state.step)
+        new_state, opt_metrics = adamw_update(
+            state, grads, lr, weight_decay=weight_decay, clip_norm=clip_norm)
+        metrics = {**metrics, **opt_metrics, "loss": loss}
+        return new_state, metrics
+
+    return train_step
+
+
+def make_prefill(cfg: ModelConfig, max_seq: int):
+    def prefill_step(params, batch):
+        return T.prefill(params, batch, cfg, max_seq)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode(params, cache, batch):
+        extras = {k: v for k, v in batch.items() if k != "tokens"} or None
+        return T.decode_step(params, cache, batch["tokens"], cfg,
+                             batch_extras=extras)
+    return decode

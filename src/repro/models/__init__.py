@@ -1,0 +1,9 @@
+from repro.models.config import (EncoderConfig, ModelConfig, MoEConfig,
+                                 SSMConfig)
+from repro.models.transformer import (abstract_cache, abstract_params,
+                                      decode_step, forward_train, init_cache,
+                                      init_params, prefill)
+
+__all__ = ["EncoderConfig", "ModelConfig", "MoEConfig", "SSMConfig",
+           "abstract_cache", "abstract_params", "decode_step",
+           "forward_train", "init_cache", "init_params", "prefill"]

@@ -1,0 +1,363 @@
+"""Generic decoder (+ optional encoder) assembling the architecture zoo.
+
+The layer stack compiles as ``lax.scan`` over *period blocks* (see
+ModelConfig.pattern) with scan-stacked parameters, keeping the HLO compact
+for 48-72 layer models, with optional per-block remat.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.parallel.sharding import logical_sharding_constraint as shard
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------- init
+
+def _moe_at(cfg: ModelConfig, pos: int) -> bool:
+    if cfg.moe is None:
+        return False
+    return pos % cfg.moe.every == cfg.moe.every - 1
+
+
+def _position_init(key, cfg: ModelConfig, pos: int, cross: bool):
+    kind = cfg.pattern[pos]
+    ks = jax.random.split(key, 6)
+    p = {"norm1": L.rmsnorm_init(cfg.d_model)}
+    if kind == "mamba":
+        p["mixer"] = L.mamba_init(ks[0], cfg)
+    else:
+        p["mixer"] = L.attention_init(ks[0], cfg)
+    if cross:
+        p["norm_cross"] = L.rmsnorm_init(cfg.d_model)
+        p["cross"] = L.attention_init(ks[1], cfg, cross=True)
+    if _moe_at(cfg, pos):
+        p["norm2"] = L.rmsnorm_init(cfg.d_model)
+        p["moe"] = L.moe_init(ks[2], cfg.d_model, cfg.moe)
+    elif cfg.d_ff > 0:
+        p["norm2"] = L.rmsnorm_init(cfg.d_model)
+        p["mlp"] = L.mlp_init(ks[2], cfg.d_model, cfg.d_ff)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, cfg.period + 4)
+    nb = cfg.n_blocks
+
+    def stack_init(pos):
+        def one(k):
+            return _position_init(k, cfg, pos, cross=cfg.encoder is not None)
+        return jax.vmap(one)(jax.random.split(ks[pos], nb))
+
+    params = {
+        "embed": L._embed_init(ks[-1], (cfg.vocab, cfg.d_model)),
+        "final_norm": L.rmsnorm_init(cfg.d_model),
+        "blocks": tuple(stack_init(p) for p in range(cfg.period)),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L._dense_init(ks[-2], (cfg.vocab, cfg.d_model),
+                                          in_axis=-1)
+    if cfg.encoder is not None:
+        enc_cfg = cfg
+        def enc_one(k):
+            p = {"norm1": L.rmsnorm_init(cfg.d_model),
+                 "mixer": L.attention_init(k, enc_cfg),
+                 "norm2": L.rmsnorm_init(cfg.d_model),
+                 "mlp": L.mlp_init(jax.random.fold_in(k, 1), cfg.d_model, cfg.d_ff)}
+            return p
+        params["encoder"] = {
+            "blocks": jax.vmap(enc_one)(
+                jax.random.split(ks[-3], cfg.encoder.n_layers)),
+            "final_norm": L.rmsnorm_init(cfg.d_model),
+        }
+    return params
+
+
+def abstract_params(cfg: ModelConfig) -> dict:
+    """ShapeDtypeStruct tree (no allocation) for AOT lowering."""
+    return jax.eval_shape(lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------- blocks
+
+def _apply_position(p, x, positions, cfg: ModelConfig, pos: int,
+                    enc_out=None, cache=None):
+    kind = cfg.pattern[pos]
+    aux = {}
+    if kind == "mamba":
+        h, new_cache = L.mamba_apply(p["mixer"], L.rmsnorm(p["norm1"], x, cfg.norm_eps),
+                                     cfg, cache=cache)
+    else:
+        window = cfg.window if kind == "local" else 0
+        h, new_cache = L.attention_apply(
+            p["mixer"], L.rmsnorm(p["norm1"], x, cfg.norm_eps), positions, cfg,
+            window=window, cache=cache)
+    x = x + h
+    if enc_out is not None and "cross" in p:
+        h, _ = L.attention_apply(p["cross"],
+                                 L.rmsnorm(p["norm_cross"], x, cfg.norm_eps),
+                                 positions, cfg, kv_x=enc_out, causal=False)
+        x = x + h
+    if "moe" in p:
+        h, aux = L.moe_apply(p["moe"], L.rmsnorm(p["norm2"], x, cfg.norm_eps), cfg.moe)
+        x = x + h
+    elif "mlp" in p:
+        x = x + L.mlp_apply(p["mlp"], L.rmsnorm(p["norm2"], x, cfg.norm_eps))
+    return x, new_cache, aux
+
+
+def _stack(cfg: ModelConfig, params, x, positions, enc_out=None,
+           caches=None, remat: bool = True, collect_cache: bool = False):
+    """scan over n_blocks; per block apply the period pattern in order.
+
+    caches: optional tuple over period positions of stacked cache pytrees.
+    Returns (x, new_caches or None, aux_sum dict).
+    """
+    period = cfg.period
+
+    def block(carry, xs):
+        x, aux_sum = carry
+        p_all = xs[0]
+        if cfg.zero3 == "block":
+            from repro.parallel.sharding import _active, gather_block_constraint
+            ctx = _active()
+            if ctx is not None:
+                p_all = gather_block_constraint(p_all, ctx[0])
+        c_all = xs[1] if caches is not None else (None,) * period
+        new_caches = []
+        for pos in range(period):
+            x, nc, aux = _apply_position(p_all[pos], x, positions, cfg, pos,
+                                         enc_out=enc_out, cache=c_all[pos])
+            new_caches.append(nc)
+            for k_, v_ in aux.items():
+                aux_sum[k_] = aux_sum.get(k_, 0.0) + v_
+        x = shard(x, ("batch", "seq", "embed"))
+        out = tuple(new_caches) if collect_cache or caches is not None else None
+        return (x, aux_sum), out
+
+    if remat:
+        block = jax.checkpoint(
+            block, policy=jax.checkpoint_policies.nothing_saveable)
+
+    aux0 = {"moe_lb": jnp.asarray(0.0), "moe_z": jnp.asarray(0.0)} \
+        if cfg.moe is not None else {}
+    xs = (params["blocks"],) if caches is None else (params["blocks"], caches)
+    (x, aux_sum), ys = jax.lax.scan(block, (x, aux0), xs)
+    return x, ys, aux_sum
+
+
+def _encode(params, cfg: ModelConfig, embeds: Array) -> Array:
+    """Bidirectional encoder (whisper-style) over precomputed frame embeds."""
+    positions = jnp.broadcast_to(jnp.arange(embeds.shape[1])[None, :],
+                                 embeds.shape[:2])
+
+    def block(x, p):
+        h, _ = L.attention_apply(p["mixer"], L.rmsnorm(p["norm1"], x, cfg.norm_eps),
+                                 positions, cfg, causal=False)
+        x = x + h
+        x = x + L.mlp_apply(p["mlp"], L.rmsnorm(p["norm2"], x, cfg.norm_eps))
+        return x, None
+
+    x, _ = jax.lax.scan(block, embeds.astype(cfg.activation_dtype),
+                        params["encoder"]["blocks"])
+    return L.rmsnorm(params["encoder"]["final_norm"], x, cfg.norm_eps)
+
+
+def _embed_tokens(params, cfg: ModelConfig, tokens: Array) -> Array:
+    x = params["embed"].astype(cfg.activation_dtype)[tokens]
+    if cfg.scale_embed:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def _lm_logits(params, cfg: ModelConfig, x: Array) -> Array:
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,vd->bsv", x, head.astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    if cfg.logit_softcap > 0:
+        c = cfg.logit_softcap
+        logits = jnp.tanh(logits / c) * c
+    return shard(logits, ("batch", "seq", "vocab"))
+
+
+def _prepare_inputs(params, cfg: ModelConfig, batch: dict):
+    """Token embeds + modality stubs -> (x, positions, enc_out, label_mask_pad)."""
+    tokens = batch["tokens"]
+    x = _embed_tokens(params, cfg, tokens)
+    b, s = tokens.shape
+    positions = batch.get("positions")
+    enc_out = None
+    pad = 0
+    if cfg.frontend == "vision_stub":
+        patches = batch["patch_embeds"].astype(x.dtype)      # (B, P, d)
+        x = jnp.concatenate([patches, x], axis=1)
+        pad = patches.shape[1]
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(s + pad)[None, :, None],
+                                         (b, s + pad, 3))
+    elif cfg.frontend == "audio_stub":
+        enc_out = _encode(params, cfg, batch["encoder_embeds"])
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1])[None, :],
+                                     (b, x.shape[1]))
+    x = shard(x, ("batch", "seq", "embed"))
+    return x, positions, enc_out, pad
+
+
+# ---------------------------------------------------------------- train fwd
+
+def forward_train(params, batch: dict, cfg: ModelConfig):
+    """Next-token cross-entropy. batch: tokens (B,S), labels (B,S) with -1 =
+    masked, plus modality stubs. Returns (loss, metrics)."""
+    x, positions, enc_out, pad = _prepare_inputs(params, cfg, batch)
+    x, _, aux = _stack(cfg, params, x, positions, enc_out=enc_out, remat=True)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if pad:
+        x = x[:, pad:, :]
+    logits = _lm_logits(params, cfg, x)                      # (B,S,V) f32
+
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    ce = (logz - gold) * mask
+    ntok = jnp.maximum(mask.sum(), 1.0)
+    loss = ce.sum() / ntok
+    metrics = {"ce": loss, "ntokens": ntok}
+    for k_, v_ in aux.items():
+        loss = loss + v_ / max(cfg.n_layers, 1)
+        metrics[k_] = v_
+    return loss, metrics
+
+
+# ---------------------------------------------------------------- serving
+
+def ring_size(cfg: ModelConfig, pos: int, max_seq: int) -> int:
+    if cfg.pattern[pos] == "local":
+        return min(max_seq, cfg.window + 8)
+    return max_seq
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None) -> dict:
+    """Allocate the decode cache (attn KV ring per layer; mamba conv+ssm)."""
+    dtype = dtype or cfg.activation_dtype
+    nb = cfg.n_blocks
+    extra = {}
+    if cfg.frontend == "audio_stub":
+        # encoder output computed once at prefill, reused every decode step
+        extra["enc_out"] = jnp.zeros(
+            (batch, cfg.encoder.seq_len, cfg.d_model), dtype)
+    caches = []
+    for pos in range(cfg.period):
+        if cfg.pattern[pos] == "mamba":
+            s = cfg.ssm
+            d_in = s.expand * cfg.d_model
+            nh = d_in // s.head_dim
+            ch = d_in + 2 * s.n_groups * s.d_state
+            caches.append({
+                "conv": jnp.zeros((nb, batch, s.conv_width - 1, ch), dtype),
+                "ssm": jnp.zeros((nb, batch, nh, s.head_dim, s.d_state),
+                                 jnp.float32),
+            })
+        else:
+            eff = ring_size(cfg, pos, max_seq)
+            caches.append({
+                "k": jnp.zeros((nb, batch, eff, cfg.n_kv, cfg.head_dim), dtype),
+                "v": jnp.zeros((nb, batch, eff, cfg.n_kv, cfg.head_dim), dtype),
+                "pos": jnp.full((nb, batch, eff), -1, jnp.int32),
+                "write_idx": jnp.zeros((nb,), jnp.int32),
+            })
+    return {"layers": tuple(caches), "len": jnp.asarray(0, jnp.int32),
+            **extra}
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_seq))
+
+
+def _with_write_idx(cfg: ModelConfig, layer_caches: tuple, pos_scalar) -> tuple:
+    """Set each attention layer's ring write index to len % ring."""
+    out = []
+    for pos in range(cfg.period):
+        c = layer_caches[pos]
+        if cfg.pattern[pos] == "mamba":
+            out.append(c)
+            continue
+        ring = c["k"].shape[2]          # (nb, B, T, kv, hd)
+        nb = c["k"].shape[0]
+        c = dict(c)
+        c["write_idx"] = jnp.full((nb,), pos_scalar % ring, jnp.int32)
+        out.append(c)
+    return tuple(out)
+
+
+def decode_step(params, cache: dict, tokens: Array, cfg: ModelConfig,
+                batch_extras: Optional[dict] = None):
+    """One decode step: tokens (B, 1). Returns (logits (B,1,V), new cache)."""
+    b = tokens.shape[0]
+    pos_scalar = cache["len"]
+    x = _embed_tokens(params, cfg, tokens)
+    positions = jnp.broadcast_to(pos_scalar[None, None], (b, 1))
+    if cfg.rope == "mrope":
+        positions = jnp.broadcast_to(pos_scalar[None, None, None], (b, 1, 3))
+    enc_out = None
+    if cfg.frontend == "audio_stub":
+        if "enc_out" in cache:         # cached at prefill (no re-encode)
+            enc_out = cache["enc_out"]
+        elif batch_extras is not None:
+            enc_out = _encode(params, cfg, batch_extras["encoder_embeds"])
+
+    layer_caches = _with_write_idx(cfg, cache["layers"], pos_scalar)
+
+    def block(carry, xs):
+        x = carry
+        p_all, c_all = xs
+        new_caches = []
+        for pos in range(cfg.period):
+            x, nc, _ = _apply_position(p_all[pos], x, positions, cfg, pos,
+                                       enc_out=enc_out, cache=c_all[pos])
+            new_caches.append(nc)
+        return x, tuple(new_caches)
+
+    x, new_layer_caches = jax.lax.scan(block, x, (params["blocks"], layer_caches))
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = _lm_logits(params, cfg, x)
+    new_cache = {"layers": new_layer_caches, "len": cache["len"] + 1}
+    if "enc_out" in cache:
+        new_cache["enc_out"] = cache["enc_out"]
+    return logits, new_cache
+
+
+def prefill(params, batch: dict, cfg: ModelConfig, max_seq: int):
+    """Run the prompt through the stack, returning (last_logits, cache)."""
+    x, positions, enc_out, pad = _prepare_inputs(params, cfg, batch)
+    b, s = x.shape[0], x.shape[1]
+    cache = init_cache(cfg, b, max_seq)
+    layer_caches = _with_write_idx(cfg, cache["layers"], jnp.asarray(0, jnp.int32))
+
+    def block(carry, xs):
+        x = carry
+        p_all, c_all = xs
+        new_caches = []
+        for pos in range(cfg.period):
+            x, nc, _ = _apply_position(p_all[pos], x, positions, cfg, pos,
+                                       enc_out=enc_out, cache=c_all[pos])
+            new_caches.append(nc)
+        return x, tuple(new_caches)
+
+    x, new_layer_caches = jax.lax.scan(block, x, (params["blocks"], layer_caches))
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = _lm_logits(params, cfg, x[:, -1:, :])
+    out_cache = {"layers": new_layer_caches, "len": jnp.asarray(s, jnp.int32)}
+    if enc_out is not None:
+        out_cache["enc_out"] = enc_out.astype(cfg.activation_dtype)
+    return logits, out_cache

@@ -1,0 +1,5 @@
+from repro.optim.adamw import (TrainState, adamw_init, adamw_update,
+                               cosine_schedule, global_norm)
+
+__all__ = ["TrainState", "adamw_init", "adamw_update", "cosine_schedule",
+           "global_norm"]

@@ -1,0 +1,79 @@
+"""AdamW with decoupled weight decay, grad clipping and cosine schedule.
+
+Mixed precision: master params and moments in f32 (sharded FSDP+TP per
+``repro.parallel.sharding``); the forward casts to bf16 at use.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class TrainState:
+    params: dict
+    m: dict
+    v: dict
+    step: jax.Array
+
+
+def adamw_init(params) -> TrainState:
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return TrainState(params=params,
+                      m=jax.tree.map(zeros, params),
+                      v=jax.tree.map(zeros, params),
+                      step=jnp.asarray(0, jnp.int32))
+
+
+def abstract_train_state(params_sds) -> TrainState:
+    return jax.eval_shape(adamw_init, params_sds)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int,
+                    floor: float = 0.1) -> Callable:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def adamw_update(state: TrainState, grads, lr, *, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.1, clip_norm=1.0) -> tuple[TrainState, dict]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-9))
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / bc1
+        vh = v / bc2
+        delta = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p - lr * delta).astype(p.dtype), m, v
+
+    flat, treedef = jax.tree.flatten(state.params)
+    gflat = jax.tree.leaves(grads)
+    mflat = jax.tree.leaves(state.m)
+    vflat = jax.tree.leaves(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat, gflat, mflat, vflat)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return TrainState(params=new_p, m=new_m, v=new_v, step=step), metrics

@@ -1,0 +1,233 @@
+"""CorrelatedGradientExchange — the paper's edge-sampling/imputation applied
+to cross-pod (DCN/"WAN") gradient synchronization.
+
+Mapping (DESIGN.md §2): each parameter tensor's per-pod gradient is a
+dependent "device stream"; one optimizer step is a tuple; the pod is the
+edge (cheap ICI reduction); the cross-pod mesh axis is the WAN.  Pods'
+gradients for the same tensor are strongly correlated (they estimate the
+same expected gradient), so instead of all-reducing every tensor across
+pods every step, the planner *samples*: tensors with high cross-pod
+agreement are skipped (imputed at the receiver via the identity model
+E[g_q | g_p] = g_p — a degenerate-but-faithful compact model whose explained
+variance is measured, not assumed), and only disagreeing tensors are synced.
+
+Faithfulness to eq. 1:
+  * streams i = parameter tensors (k streams), N_i = n_pods tuples/window.
+  * n_r,i ∈ {n_pods (sync), 1 (skip)} after rounding — the two feasible
+    bucket levels for a static XLA communication pattern (the plan is a
+    *static* compile-time object; re-planning recompiles, amortized over a
+    window of steps, exactly like a real framework's bucketing).
+  * c_i(n_r, n_s) = tensor bytes — constraint 1f bounds DCN bytes/step.
+  * sigma_i^2 = measured cross-pod disagreement (the gradient-noise scale);
+    the eq.-2 objective therefore allocates sync bandwidth to tensors whose
+    global-mean estimate is noisiest — Neyman allocation over tensors.
+  * eq.-7 bias bound: skipping sync biases downward the second-moment
+    statistics Adam's v estimates; epsilon_i bounds that bias by at most
+    k standard errors of the window estimate (§IV-C policy).
+
+Telemetry (the paper's "compact model upload") is a per-tensor scalar pair
+(disagreement, magnitude) psum'd across pods — O(k) floats per window.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import epsilon as eps_mod
+from repro.core import solver as solver_mod
+from repro.core.types import StreamStats
+
+
+@dataclasses.dataclass(frozen=True)
+class ExchangePlan:
+    """Static per-tensor sync decision (compile-time constant)."""
+
+    sync: dict          # path str -> bool
+    window: int = 50    # steps between re-plans
+    measure: bool = True
+
+    def fraction_synced(self, sizes: dict) -> float:
+        tot = sum(sizes.values())
+        s = sum(sz for p, sz in sizes.items() if self.sync.get(p, True))
+        return s / max(tot, 1)
+
+
+def _paths(tree) -> list[str]:
+    from jax.tree_util import tree_flatten_with_path, keystr
+    leaves, _ = tree_flatten_with_path(tree)
+    return [keystr(p) for p, _ in leaves]
+
+
+def full_sync_plan(grads_abstract) -> ExchangePlan:
+    """Paper-faithful baseline: every tensor syncs every step."""
+    return ExchangePlan(sync={p: True for p in _paths(grads_abstract)})
+
+
+def make_stacked_exchange(plan: ExchangePlan, imputation: str = "momentum"):
+    """Exchange over a *stacked* pod axis (leading dim of every grad leaf,
+    sharded over the mesh's "pod" axis).  Synced tensors: mean over the pod
+    dim (XLA lowers this to the cross-pod all-reduce — the only DCN bytes).
+    Skipped tensors: imputed from the consistent momentum (zero DCN bytes).
+
+    Works entirely in auto-SPMD (no shard_map) — XLA's partial-manual
+    partitioner CHECK-fails on pod collectives with auto-sharded operands
+    (see EXPERIMENTS.md §Perf notes), so this formulation is also the robust
+    one at scale.
+    """
+    from jax.tree_util import keystr, tree_flatten_with_path, tree_unflatten
+
+    def exchange(grads_stacked, momentum):
+        leaves, treedef = tree_flatten_with_path(grads_stacked)
+        m_leaves = jax.tree.leaves(momentum)
+        out, diag_num, diag_den = [], [], []
+        for (path, gp), m in zip(leaves, m_leaves):
+            p = keystr(path)
+            if plan.sync.get(p, True):
+                g = jnp.mean(gp, axis=0)
+                out.append(g)
+                if plan.measure:
+                    d = gp.astype(jnp.float32) - g.astype(jnp.float32)[None]
+                    diag_num.append(jnp.mean(jnp.sum(
+                        d * d, axis=tuple(range(1, d.ndim)))))
+                    diag_den.append(jnp.sum(g.astype(jnp.float32) ** 2))
+                else:
+                    diag_num.append(jnp.asarray(0.0))
+                    diag_den.append(jnp.asarray(0.0))
+            else:
+                imput = m.astype(gp.dtype) if imputation == "momentum" \
+                    else jnp.zeros(gp.shape[1:], gp.dtype)
+                out.append(imput)
+                diag_num.append(jnp.asarray(0.0))
+                diag_den.append(jnp.asarray(0.0))
+        metrics = {"pod_disagreement": jnp.stack(diag_num),
+                   "pod_magnitude": jnp.stack(diag_den)} if plan.measure else {}
+        return tree_unflatten(treedef, out), metrics
+
+    return exchange
+
+
+def make_grad_exchange(plan: ExchangePlan, axis: str = "pod",
+                       imputation: str = "momentum"):
+    """Returns fn(grads, momentum)->(grads, metrics) for use INSIDE shard_map
+    over ``axis`` (grads are pod-local means on entry, *consistent* global
+    estimates on exit — every pod computes the identical update).
+
+    Skipped tensors are imputed from a value all pods already share:
+      * "momentum": g_hat = Adam first moment (the tensor's own temporal
+        predictor stream — the m-dependence view of §IV-D); zero extra bytes.
+      * "zero": g_hat = 0 (pure lazy sync; pair with error-feedback residual).
+    Synced tensors pay the DCN pmean.  Telemetry is O(k) scalars — the
+    paper's compact stats header.
+    """
+    from jax.tree_util import keystr, tree_flatten_with_path, tree_unflatten
+
+    def exchange(grads, momentum):
+        leaves, treedef = tree_flatten_with_path(grads)
+        m_leaves = jax.tree.leaves(momentum)
+        out, diag_num, diag_den = [], [], []
+        for (path, g), m in zip(leaves, m_leaves):
+            p = keystr(path)
+            if plan.sync.get(p, True):
+                synced = jax.lax.pmean(g, axis)
+                out.append(synced)
+                d = g.astype(jnp.float32) - synced.astype(jnp.float32)
+                diag_num.append(jnp.sum(d * d))
+                diag_den.append(jnp.sum(synced.astype(jnp.float32) ** 2))
+            else:
+                imput = m.astype(g.dtype) if imputation == "momentum" \
+                    else jnp.zeros_like(g)
+                out.append(imput)
+                diag_num.append(jnp.asarray(0.0))
+                diag_den.append(jnp.asarray(0.0))
+        metrics = {}
+        if plan.measure and diag_num:
+            metrics["pod_disagreement"] = jax.lax.pmean(
+                jnp.stack(diag_num), axis)
+            metrics["pod_magnitude"] = jax.lax.pmean(
+                jnp.stack(diag_den), axis)
+        return tree_unflatten(treedef, out), metrics
+
+    return exchange
+
+
+@dataclasses.dataclass
+class EdgeGradController:
+    """Host-side window planner (Algorithm 1 applied to gradient streams).
+
+    Consumes the per-tensor telemetry scalars accumulated over a window,
+    solves the eq.-1 program with streams=tensors, and emits the next
+    ExchangePlan.  A plan change invalidates the jitted step (recompile —
+    amortized over ``window`` steps).
+    """
+
+    sizes: dict                      # path -> element count
+    dcn_budget_fraction: float = 0.5   # C as a fraction of full-sync bytes
+    epsilon_se: float = 1.0
+    n_pods: int = 2
+    window: int = 50
+    _disagreement: Optional[np.ndarray] = None
+    _magnitude: Optional[np.ndarray] = None
+    _count: int = 0
+
+    def observe(self, metrics: dict):
+        if "pod_disagreement" not in metrics:
+            return
+        d = np.asarray(metrics["pod_disagreement"])
+        m = np.asarray(metrics["pod_magnitude"])
+        if self._disagreement is None:
+            self._disagreement = d * 0.0
+            self._magnitude = m * 0.0
+        self._disagreement += d
+        self._magnitude += m
+        self._count += 1
+
+    def replan(self, current: ExchangePlan) -> ExchangePlan:
+        """Solve eq. 1 over tensors; returns a (possibly) new plan."""
+        paths = list(self.sizes.keys())
+        k = len(paths)
+        if self._count == 0 or k == 0:
+            return current
+        # per-tensor streams: sigma^2 = mean cross-pod disagreement;
+        # identity-model explained variance V = max(0, magnitude - disagreement)
+        # (the part of the signal the skipped pod reproduces by itself)
+        sig2 = np.maximum(self._disagreement / self._count, 1e-20)
+        mag = np.maximum(self._magnitude / self._count, 1e-20)
+        V = np.clip(mag - sig2, 0.0, sig2 * (1 - 1e-9))
+
+        sizes = np.asarray([self.sizes[p] for p in paths], np.float64)
+        # each stream's FIRST sample (the pod's own local copy) is free; a
+        # full sync (n_r = n_pods) costs ~(n_pods-1) tensor-sizes of DCN.
+        # Shift eq. 1f accordingly: sum size*(n_r - 1) <= C_dcn.
+        total = float(sizes.sum())
+        budget = self.dcn_budget_fraction * total * (self.n_pods - 1) + total
+        n_obs = np.full(k, float(self.n_pods))
+        stats = StreamStats(
+            count=jnp.asarray(n_obs), mean=jnp.asarray(np.sqrt(mag)),
+            var=jnp.asarray(sig2), m4=jnp.asarray(3 * sig2**2),
+            var_of_var=jnp.asarray(2 * sig2**2 / np.maximum(n_obs - 1, 1)),
+            cov=jnp.zeros((k, k)), corr=jnp.zeros((k, k)))
+
+        class _M:                      # minimal CompactModel stand-in
+            explained_var = jnp.asarray(V)
+            predictor = jnp.asarray((np.arange(k) + 1) % k)
+
+        eps = eps_mod.k_standard_errors(stats, self.epsilon_se)
+        prob = solver_mod.build_problem(
+            stats, _M(), eps, budget,
+            weights=np.ones(k),                      # absolute grad error
+            cost_real=sizes)                         # bytes per pod-sample
+        alloc = solver_mod.solve(prob, method="ipm")
+        n_real = np.asarray(alloc.n_real)
+        sync = {p: bool(n_real[i] >= self.n_pods) for i, p in enumerate(paths)}
+        # always sync at least the largest-disagreement tensor
+        if not any(sync.values()):
+            sync[paths[int(np.argmax(sig2))]] = True
+        self._disagreement = None
+        self._magnitude = None
+        self._count = 0
+        return ExchangePlan(sync=sync, window=self.window)

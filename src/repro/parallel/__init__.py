@@ -1,0 +1,8 @@
+from repro.parallel.sharding import (ACTIVATION_RULES, batch_axes,
+                                     logical_sharding_constraint, mesh_context,
+                                     param_partition_spec, tree_pspecs,
+                                     tree_shardings)
+
+__all__ = ["ACTIVATION_RULES", "batch_axes", "logical_sharding_constraint",
+           "mesh_context", "param_partition_spec", "tree_pspecs",
+           "tree_shardings"]

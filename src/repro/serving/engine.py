@@ -1,0 +1,115 @@
+"""Batched serving engine: slot-based continuous batching over the decode
+step, with straggler eviction (max-token budget per request).
+
+Prompts are left-padded to a common length so every sequence's last prompt
+token lands at the same position (ring caches stay aligned); decode then
+steps all active slots together.  Finished slots are refilled from the queue
+without stopping the batch (continuous batching).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new_tokens: int = 16
+    eos: Optional[int] = None
+    generated: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, params, cfg: ModelConfig, batch_slots: int = 4,
+                 max_seq: int = 256, greedy: bool = True):
+        self.params = params
+        self.cfg = cfg
+        self.B = batch_slots
+        self.max_seq = max_seq
+        self.greedy = greedy
+        self.queue: deque[Request] = deque()
+        self.slots: list[Optional[Request]] = [None] * batch_slots
+        self._decode = jax.jit(
+            lambda p, c, t: T.decode_step(p, c, t, cfg))
+        self._prefill = jax.jit(
+            lambda p, b: T.prefill(p, b, cfg, max_seq))
+        self.cache = None
+        self.steps = 0
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _batch_prefill(self, reqs: list[Request]):
+        """Left-pad prompts to a common length; batch prefill."""
+        maxlen = max(len(r.prompt) for r in reqs)
+        toks = np.zeros((len(reqs), maxlen), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, maxlen - len(r.prompt):] = r.prompt
+        batch = {"tokens": jnp.asarray(toks)}
+        logits, cache = self._prefill(self.params, batch)
+        return logits, cache
+
+    def run(self, max_steps: int = 512) -> list[Request]:
+        """Process the queue to completion (or step budget). Returns all
+        finished requests."""
+        finished: list[Request] = []
+        while (self.queue or any(self.slots)) and self.steps < max_steps:
+            # admit: (re)start a batch whenever all slots are empty
+            if not any(self.slots) and self.queue:
+                active = []
+                while self.queue and len(active) < self.B:
+                    active.append(self.queue.popleft())
+                self.slots = active + [None] * (self.B - len(active))
+                # pad inactive slots with a dummy request mirror
+                pad = len(active)
+                reqs = active + [active[-1]] * (self.B - pad)
+                logits, self.cache = self._batch_prefill(reqs)
+                nxt = self._select(logits)
+                for i, r in enumerate(active):
+                    r.generated.append(int(nxt[i]))
+            # decode step for the current batch
+            live = [r for r in self.slots if r is not None and not r.done]
+            if not live:
+                self.slots = [None] * self.B
+                continue
+            last = np.zeros((self.B, 1), np.int32)
+            for i, r in enumerate(self.slots):
+                if r is not None and r.generated:
+                    last[i, 0] = r.generated[-1]
+            logits, self.cache = self._decode(self.params, self.cache,
+                                              jnp.asarray(last))
+            nxt = self._select(logits)
+            self.steps += 1
+            for i, r in enumerate(self.slots):
+                if r is None or r.done:
+                    continue
+                tok = int(nxt[i])
+                r.generated.append(tok)
+                # straggler eviction: token budget, or eos
+                if (len(r.generated) >= r.max_new_tokens
+                        or (r.eos is not None and tok == r.eos)):
+                    r.done = True
+                    finished.append(r)
+                    self.slots[i] = None
+        # drain leftovers as done (engine stopping)
+        for r in self.slots:
+            if r is not None:
+                r.done = True
+                finished.append(r)
+        self.slots = [None] * self.B
+        return finished
+
+    def _select(self, logits) -> np.ndarray:
+        arr = np.asarray(logits[:, -1, :], np.float32)
+        return arr.argmax(axis=-1)

@@ -1,0 +1,5 @@
+from repro.streaming.runtime import (EdgeNode, CloudNode, Transport,
+                                     StreamingExperiment, run_experiment)
+
+__all__ = ["EdgeNode", "CloudNode", "Transport", "StreamingExperiment",
+           "run_experiment"]

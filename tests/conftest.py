@@ -1,0 +1,22 @@
+"""Shared fixtures. NOTE: no XLA device-count overrides here — smoke tests
+and benches must see the real single device; only subprocess tests (dry-run,
+multi-pod trainer) force placeholder devices via their own environment."""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def subprocess_env(n_devices: int) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    return env

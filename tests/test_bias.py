@@ -1,0 +1,56 @@
+"""eq. 7: the closed-form bias of the imputing variance estimator."""
+import numpy as np
+
+from repro.core import epsilon as E
+from repro.core.types import StreamStats
+import jax.numpy as jnp
+
+
+def test_eq7_matches_simulation(rng):
+    """Simulate: X ~ N(0, sigma2), predictor P with E[X|P]=rho*P explaining
+    V = rho^2 of the variance; impute n_s values with the conditional mean
+    and compare the empirical bias of s^2 against eq. 7."""
+    sigma2, rho = 4.0, 0.8
+    n_r, n_s = 40, 25
+    V = rho**2 * sigma2
+    trials = 4000
+    est = np.empty(trials)
+    r = np.random.default_rng(1)
+    for t in range(trials):
+        p = r.normal(0, np.sqrt(sigma2), n_r + n_s)
+        x = rho * p + r.normal(0, np.sqrt(sigma2 * (1 - rho**2)), n_r + n_s)
+        real = x[:n_r]
+        imputed = rho * p[n_r:]          # E[X|P] exactly
+        sample = np.concatenate([real, imputed])
+        est[t] = sample.var(ddof=1)
+    emp_bias = est.mean() - sigma2
+    pred_bias = ((n_s - 1) * V - n_s * sigma2) / (n_r + n_s - 1)
+    assert abs(emp_bias - pred_bias) < 0.1 * abs(pred_bias)
+    assert pred_bias < 0                 # imputation always shrinks variance
+
+
+def test_epsilon_policies_ordering():
+    k = 3
+    stats = StreamStats(
+        count=jnp.asarray([100.0] * k), mean=jnp.asarray([10.0] * k),
+        var=jnp.asarray([4.0] * k), m4=jnp.asarray([48.0] * k),
+        var_of_var=jnp.asarray([(48.0 - 16.0 * 97 / 99) / 100] * k),
+        cov=jnp.zeros((k, k)), corr=jnp.zeros((k, k)))
+    a = E.alpha_fraction(stats, 0.05)
+    se1 = E.k_standard_errors(stats, 1.0)
+    se3 = E.k_standard_errors(stats, 3.0)
+    assert np.all(se3 > se1)
+    assert np.all(a > 0)
+    np.testing.assert_allclose(a, 0.05 * 4.0)
+
+
+def test_exact_mse_cap_nonnegative():
+    k = 2
+    stats = StreamStats(
+        count=jnp.asarray([100.0] * k), mean=jnp.asarray([1.0] * k),
+        var=jnp.asarray([4.0] * k), m4=jnp.asarray([48.0] * k),
+        var_of_var=jnp.asarray([0.32] * k),
+        cov=jnp.zeros((k, k)), corr=jnp.zeros((k, k)))
+    cap = E.exact_mse_cap(stats, np.array([30, 30]), np.array([10, 0]),
+                          np.array([40, 30]))
+    assert (cap >= 0).all()

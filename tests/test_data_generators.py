@@ -1,0 +1,48 @@
+"""Dataset stand-ins must stay in the statistical bands the benchmarks (and
+the paper-validation claims) assume — guards against regression in the
+generators themselves."""
+import numpy as np
+
+from repro.data import home_like, mvn_pair, smartcity_like, turbine_like
+
+
+def _corr(vals):
+    return np.corrcoef(vals)
+
+
+def test_home_band():
+    vals, meta = home_like(4096, seed=0)
+    assert meta["k"] == 3
+    c = _corr(vals)
+    off = c[np.triu_indices(3, 1)]
+    assert (off > 0.6).all() and (off < 0.98).all()   # strongly correlated
+    assert 55 < vals.mean() < 85                       # deg-F scale
+
+
+def test_turbine_band():
+    vals, _ = turbine_like(4096, seed=0, k=8)
+    c = np.abs(_corr(vals))
+    off = c[np.triu_indices(8, 1)]
+    assert off.max() > 0.85          # wind/power/rotor cluster
+    assert off.min() < 0.25          # independent aux channels
+    # power curve: wind (row 0) drives power (row 1)
+    assert c[0, 1] > 0.8
+
+
+def test_smartcity_band():
+    vals, meta = smartcity_like(4096, seed=0)
+    assert meta["k"] == 5
+    c = np.abs(_corr(vals))
+    # modest cross-quantity correlation through the shared diurnal driver
+    assert 0.2 < c[0, 3] < 0.95      # temp vs parking
+    # traffic is count-valued
+    assert np.all(vals[4] >= 0) and np.allclose(vals[4], np.round(vals[4]))
+
+
+def test_mvn_exact_spec():
+    for rho in (0.0, 0.5, 0.9):
+        vals, _ = mvn_pair(rho, 50_000, seed=1)
+        c = _corr(vals)[0, 1]
+        assert abs(c - rho) < 0.02
+        assert abs(vals.mean() - 30.0) < 0.1
+        assert abs(vals.var() - 16.0) < 0.5

@@ -1,0 +1,68 @@
+"""Dry-run machinery on reduced configs + meshes (subprocess: needs its own
+device-count env).  The production 256/512-chip cells run via
+``python -m repro.launch.dryrun --all`` (artifacts in artifacts/dryrun)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from conftest import subprocess_env
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+SCRIPT = r"""
+import sys, json
+from repro.launch.dryrun import lower_cell, analyse
+arch, shape, multi = sys.argv[1], sys.argv[2], sys.argv[3] == "multi"
+compiled, lowered, meta, cfg = lower_cell(arch, shape, multi, smoke=True)
+rec = analyse(compiled, meta, cfg, multi)
+print("RESULT " + json.dumps({
+    "flops": rec["flops_per_device"],
+    "coll": rec["collectives"]["total_bytes"],
+    "dominant": rec["roofline"]["dominant"],
+}))
+"""
+
+
+@pytest.mark.parametrize("arch,shape,mesh", [
+    ("starcoder2_3b", "train_4k", "single"),
+    ("qwen3_moe_30b_a3b", "train_4k", "single"),
+    ("mamba2_780m", "decode_32k", "single"),
+    ("gemma3_12b", "prefill_32k", "multi"),
+    ("jamba_1_5_large_398b", "train_4k", "multi"),
+])
+def test_smoke_cell_compiles(arch, shape, mesh):
+    env = subprocess_env(8)
+    r = subprocess.run([sys.executable, "-c", SCRIPT, arch, shape, mesh],
+                       capture_output=True, text=True, env=env, cwd=ROOT,
+                       timeout=540)
+    assert r.returncode == 0, r.stderr[-3000:]
+    line = [l for l in r.stdout.splitlines() if l.startswith("RESULT ")][-1]
+    rec = json.loads(line[len("RESULT "):])
+    assert rec["flops"] > 0
+    assert rec["dominant"] in ("compute_s", "memory_s", "collective_s")
+
+
+def test_production_artifacts_complete():
+    """Every non-skipped (arch x shape) cell has a successful artifact for
+    both meshes (the full sweep must have been run)."""
+    art = os.path.join(ROOT, "artifacts", "dryrun")
+    if not os.path.isdir(art):
+        pytest.skip("production dry-run artifacts not generated yet")
+    from repro.configs import all_cells
+    missing, failed = [], []
+    for arch, shape, status in all_cells():
+        for mesh in ("single", "multi"):
+            fn = os.path.join(art, f"{arch}__{shape}__{mesh}__baseline.json")
+            if status != "ok":
+                continue
+            if not os.path.exists(fn):
+                missing.append((arch, shape, mesh))
+                continue
+            rec = json.load(open(fn))
+            if rec.get("status") != "ok":
+                failed.append((arch, shape, mesh, rec.get("status")))
+    assert not missing, f"missing baseline cells: {missing}"
+    assert not failed, f"failed baseline cells: {failed}"

@@ -1,0 +1,54 @@
+"""CorrelatedGradientExchange: stacked exchange semantics + planner."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim.edge_exchange import (EdgeGradController, ExchangePlan,
+                                       full_sync_plan, make_stacked_exchange)
+
+
+def test_stacked_exchange_sync_and_skip():
+    grads_p = {"a": jnp.asarray([[1.0, 2.0], [3.0, 4.0]]),   # (pods=2, 2)
+               "b": jnp.asarray([[10.0], [20.0]])}
+    momentum = {"a": jnp.asarray([0.5, 0.5]), "b": jnp.asarray([-1.0])}
+    plan = ExchangePlan(sync={"['a']": True, "['b']": False})
+    ex = make_stacked_exchange(plan)
+    out, metrics = ex(grads_p, momentum)
+    np.testing.assert_allclose(out["a"], [2.0, 3.0])       # pod mean
+    np.testing.assert_allclose(out["b"], [-1.0])           # momentum imputed
+    # telemetry: disagreement only measured on synced tensors
+    assert metrics["pod_disagreement"].shape == (2,)
+    assert float(metrics["pod_disagreement"][1]) == 0.0
+
+
+def test_full_sync_plan_covers_all():
+    g = {"x": jnp.zeros(3), "y": {"z": jnp.zeros(2)}}
+    plan = full_sync_plan(g)
+    assert len(plan.sync) == 2 and all(plan.sync.values())
+
+
+def test_controller_respects_budget():
+    sizes = {f"t{i}": 1000 for i in range(6)}
+    ctl = EdgeGradController(sizes=sizes, dcn_budget_fraction=0.34,
+                            n_pods=2, window=5)
+    plan = full_sync_plan({k: jnp.zeros(1) for k in sizes})
+    plan = ExchangePlan(sync={k: True for k in sizes})
+    # high disagreement on t0/t1, low elsewhere
+    d = np.array([10.0, 9.0, 0.1, 0.1, 0.1, 0.1])
+    m = np.array([10.0, 10.0, 10.0, 10.0, 10.0, 10.0])
+    ctl.observe({"pod_disagreement": d, "pod_magnitude": m})
+    new = ctl.replan(plan)
+    synced = [k for k, v in new.sync.items() if v]
+    # budget 34% of 6 tensors ~ 2 tensors; the noisy ones must be included
+    assert "t0" in synced and "t1" in synced
+    assert len(synced) <= 3
+
+
+def test_controller_emergency_sync():
+    sizes = {"t0": 100}
+    ctl = EdgeGradController(sizes=sizes, dcn_budget_fraction=0.0, n_pods=2)
+    plan = ExchangePlan(sync={"t0": True})
+    ctl.observe({"pod_disagreement": np.array([1.0]),
+                 "pod_magnitude": np.array([1.0])})
+    new = ctl.replan(plan)
+    assert any(new.sync.values())      # never fully silent

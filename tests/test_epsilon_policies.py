@@ -1,0 +1,34 @@
+"""Epsilon policy paths through the full planner, incl. appendix-B cap."""
+import numpy as np
+
+from repro.core import plan_window
+from repro.core.types import PlannerConfig
+from repro.data import mvn_pair, windows_from_matrix
+
+
+def _plan(policy, scale=1.0):
+    vals, _ = mvn_pair(0.9, 1024, seed=3)
+    w = windows_from_matrix(vals, 512)[0]
+    payload, diag = plan_window(w, 250, PlannerConfig(
+        epsilon_policy=policy, epsilon_scale=scale,
+        dependence="pearson", model="linear"))
+    return payload, diag
+
+
+def test_alpha_policy():
+    payload, diag = _plan("alpha", 0.05)
+    assert diag.solver_feasible
+    assert payload.n_real.sum() > 0
+
+
+def test_exact_mse_cap_never_exceeds_kse():
+    p_kse, _ = _plan("k_se", 1.0)
+    p_mse, _ = _plan("exact_mse", 1.0)
+    # appendix-B post-hoc cap can only shrink imputation
+    assert p_mse.n_imputed.sum() <= p_kse.n_imputed.sum()
+
+
+def test_higher_tolerance_more_imputation():
+    p_low, _ = _plan("k_se", 0.5)
+    p_high, _ = _plan("k_se", 3.0)
+    assert p_high.n_imputed.sum() >= p_low.n_imputed.sum()

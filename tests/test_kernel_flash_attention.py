@@ -1,0 +1,43 @@
+"""Flash-attention Pallas kernel vs jnp oracle (interpret mode)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+@pytest.mark.parametrize("s,t,h,kv,hd,causal,window", [
+    (64, 64, 4, 2, 16, True, 0),       # GQA causal
+    (48, 48, 4, 4, 32, True, 16),      # sliding window
+    (32, 80, 2, 1, 16, False, 0),      # cross-attn shape, padded keys
+    (100, 100, 8, 2, 64, True, 32),    # non-power-of-two, window
+    (16, 16, 2, 2, 8, True, 0),        # tiny
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_matches_ref(s, t, h, kv, hd, causal, window, dtype):
+    rng = np.random.default_rng(s * 7 + t)
+    q = jnp.asarray(rng.normal(0, 1, (2, s, h, hd)), dtype)
+    k = jnp.asarray(rng.normal(0, 1, (2, t, kv, hd)), dtype)
+    v = jnp.asarray(rng.normal(0, 1, (2, t, kv, hd)), dtype)
+    out_k = flash_attention(q, k, v, causal=causal, window=window,
+                            interpret=True)
+    out_r = flash_attention_ref(q, k, v, causal=causal, window=window)
+    atol = 2e-6 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out_k, np.float32),
+                               np.asarray(out_r, np.float32), atol=atol)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(8, 80), st.integers(1, 4), st.integers(0, 1000))
+def test_flash_property(s, kv, seed):
+    rng = np.random.default_rng(seed)
+    h, hd = kv * 2, 16
+    q = jnp.asarray(rng.normal(0, 1, (1, s, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (1, s, kv, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (1, s, kv, hd)), jnp.float32)
+    out_k = flash_attention(q, k, v, causal=True, interpret=True)
+    out_r = flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               atol=5e-6)

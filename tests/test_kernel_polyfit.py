@@ -1,0 +1,51 @@
+"""Pallas polyfit kernel vs jnp oracle + normal-equation solve."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.polyfit.ops import solve_normal_equations, vandermonde_moments
+from repro.kernels.polyfit.ref import polyfit_ref
+
+
+@pytest.mark.parametrize("k,n", [(1, 128), (4, 300), (8, 512), (11, 900)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kernel_matches_ref(k, n, dtype):
+    rng = np.random.default_rng(k + n)
+    y = jnp.asarray(rng.normal(0, 1, (k, n)), dtype)
+    u = jnp.asarray(rng.normal(0, 1, (k, n)), dtype)
+    pu_k, py_k = vandermonde_moments(y, u, use_kernel=True, interpret=True)
+    pu_r, py_r = polyfit_ref(y, u)
+    pu_r = pu_r.at[:, 0].set(float(n))
+    rtol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(pu_k, pu_r, rtol=rtol, atol=0.5)
+    np.testing.assert_allclose(py_k, py_r, rtol=rtol, atol=0.5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 10), st.integers(32, 500), st.integers(0, 99))
+def test_property_sweep(k, n, seed):
+    rng = np.random.default_rng(seed)
+    y = jnp.asarray(rng.normal(0, 2, (k, n)), jnp.float32)
+    u = jnp.asarray(rng.normal(0, 1, (k, n)), jnp.float32)
+    pu_k, py_k = vandermonde_moments(y, u, use_kernel=True, interpret=True)
+    pu_r, py_r = polyfit_ref(y, u)
+    pu_r = pu_r.at[:, 0].set(float(n))
+    np.testing.assert_allclose(pu_k, pu_r, rtol=1e-3, atol=1e-2)
+    np.testing.assert_allclose(py_k, py_r, rtol=1e-3, atol=1e-2)
+
+
+@pytest.mark.parametrize("degree", [1, 3])
+def test_normal_equations_recover_polynomial(degree):
+    rng = np.random.default_rng(degree)
+    n = 800
+    u = rng.normal(0, 1, (2, n)).astype(np.float32)
+    coeffs_true = np.array([[1.0, -2.0, 0.0, 0.0],
+                            [0.5, 1.0, -0.3, 0.8]], np.float32)
+    if degree == 1:
+        coeffs_true[:, 2:] = 0
+    y = sum(coeffs_true[:, m:m + 1] * u**m for m in range(4)).astype(np.float32)
+    pu, py = vandermonde_moments(jnp.asarray(y), jnp.asarray(u),
+                                 use_kernel=True, interpret=True)
+    c = np.asarray(solve_normal_equations(pu, py, degree=degree))
+    np.testing.assert_allclose(c, coeffs_true, atol=5e-3)

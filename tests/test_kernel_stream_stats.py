@@ -1,0 +1,51 @@
+"""Pallas stream_stats kernel vs jnp oracle (interpret mode on CPU),
+shape/dtype sweeps + hypothesis."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.stream_stats.ops import derived_stats, window_moments_xxt
+from repro.kernels.stream_stats.ref import stream_stats_ref
+
+
+@pytest.mark.parametrize("k,n", [(1, 128), (3, 200), (8, 512), (5, 700),
+                                 (16, 1024), (9, 130)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kernel_matches_ref(k, n, dtype):
+    rng = np.random.default_rng(k * 1000 + n)
+    x = jnp.asarray(rng.normal(2.0, 1.5, (k, n)), dtype)
+    mom_k, xxt_k = window_moments_xxt(x, use_kernel=True, interpret=True)
+    mom_r, xxt_r = stream_stats_ref(x)
+    rtol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(mom_k, mom_r, rtol=rtol, atol=1e-2)
+    np.testing.assert_allclose(xxt_k, xxt_r, rtol=rtol, atol=1e-2)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 12), st.integers(16, 600), st.integers(0, 1000))
+def test_kernel_matches_ref_property(k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(0, 3.0, (k, n)), jnp.float32)
+    mom_k, xxt_k = window_moments_xxt(x, use_kernel=True, interpret=True)
+    mom_r, xxt_r = stream_stats_ref(x)
+    np.testing.assert_allclose(mom_k, mom_r, rtol=1e-4, atol=1e-2)
+    np.testing.assert_allclose(xxt_k, xxt_r, rtol=1e-4, atol=1e-2)
+
+
+def test_derived_stats_match_core():
+    """Kernel-derived mean/var/m4/cov == repro.core.stats on full windows."""
+    from repro.core import stats as S
+    rng = np.random.default_rng(5)
+    k, n = 6, 384
+    x = jnp.asarray(rng.normal(10, 4, (k, n)), jnp.float32)
+    mom, xxt = window_moments_xxt(x, use_kernel=True, interpret=True)
+    mean, var, m4, cov = derived_stats(mom, xxt, n)
+    counts = jnp.full((k,), n, jnp.int32)
+    m_ref, v_ref, _, m4_ref = S.masked_central_moments(x, counts)
+    c_ref = S.masked_cov(x, counts)
+    np.testing.assert_allclose(mean, m_ref, rtol=1e-5)
+    np.testing.assert_allclose(var, v_ref, rtol=1e-3)
+    np.testing.assert_allclose(m4, m4_ref, rtol=2e-2, atol=1e-2)
+    np.testing.assert_allclose(cov, c_ref, rtol=1e-3, atol=1e-3)

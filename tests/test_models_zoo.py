@@ -1,0 +1,126 @@
+"""Per-architecture smoke tests: reduced configs, one forward/train step on
+CPU, shape + finiteness asserts; cache-consistency (prefill/decode vs full
+forward) for representative families."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.steps import make_train_step
+from repro.models import (decode_step, forward_train, init_params, prefill)
+from repro.models import transformer as T
+from repro.optim.adamw import adamw_init, cosine_schedule
+
+
+def _batch(cfg, B=2, S=32, seed=0):
+    rng = np.random.default_rng(seed)
+    b = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)}
+    b["labels"] = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    if cfg.frontend == "vision_stub":
+        b["patch_embeds"] = jnp.asarray(
+            rng.normal(0, 1, (B, cfg.n_patches, cfg.d_model)),
+            cfg.activation_dtype)
+        b["positions"] = jnp.broadcast_to(
+            jnp.arange(S + cfg.n_patches)[None, :, None],
+            (B, S + cfg.n_patches, 3)).astype(jnp.int32)
+    if cfg.frontend == "audio_stub":
+        b["encoder_embeds"] = jnp.asarray(
+            rng.normal(0, 1, (B, cfg.encoder.seq_len, cfg.d_model)),
+            cfg.activation_dtype)
+    return b
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_and_train_step(arch):
+    cfg = get_config(arch, smoke=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    batch = _batch(cfg)
+    loss, metrics = jax.jit(lambda p, b: forward_train(p, b, cfg))(params, batch)
+    assert jnp.isfinite(loss), arch
+    assert loss > 0
+
+    state = adamw_init(params)
+    step = jax.jit(make_train_step(cfg, lambda s: 1e-3))
+    new_state, m = step(state, batch)
+    assert jnp.isfinite(m["loss"])
+    assert int(new_state.step) == 1
+    # parameters actually moved
+    delta = sum(float(jnp.abs(a - b).sum()) for a, b in zip(
+        jax.tree.leaves(new_state.params), jax.tree.leaves(state.params)))
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", ["starcoder2_3b", "gemma3_12b",
+                                  "mamba2_780m", "jamba_1_5_large_398b",
+                                  "whisper_large_v3"])
+def test_prefill_decode_matches_forward(arch):
+    """prefill(prompt) then decode_step must reproduce the full-forward
+    next-token logits — validates KV rings, mamba state carry, cross-attn.
+    Run in f32 so the comparison is exact (bf16 reduction-order noise would
+    mask real cache bugs)."""
+    import dataclasses
+    cfg = dataclasses.replace(get_config(arch, smoke=True), dtype="float32")
+    params = init_params(jax.random.PRNGKey(1), cfg)
+    B, S = 2, 24
+    batch = _batch(cfg, B=B, S=S, seed=2)
+    prompt = {k: (v[:, :S - 1] if k in ("tokens",) else v)
+              for k, v in batch.items() if k != "labels"}
+    if "positions" in prompt:
+        prompt["positions"] = prompt["positions"][:, :cfg.n_patches + S - 1]
+
+    logits_pre, cache = jax.jit(
+        lambda p, b: prefill(p, b, cfg, max_seq=64))(params, prompt)
+    extras = {k: v for k, v in prompt.items()
+              if k not in ("tokens", "positions")} or None
+    logits_dec, cache = jax.jit(
+        lambda p, c, t: decode_step(p, c, t, cfg, batch_extras=extras))(
+        params, cache, batch["tokens"][:, S - 1:S])
+
+    # full forward over S tokens
+    full = dict(batch)
+    full["labels"] = jnp.zeros_like(batch["labels"])
+    x, positions, enc_out, pad = T._prepare_inputs(params, cfg, full)
+    h, _, _ = T._stack(cfg, params, x, positions, enc_out=enc_out, remat=False)
+    h = T.L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    ref_logits = T._lm_logits(params, cfg, h[:, -1:, :])
+
+    np.testing.assert_allclose(
+        np.asarray(logits_dec, np.float32), np.asarray(ref_logits, np.float32),
+        rtol=1e-3, atol=1e-3)
+
+
+def test_sliding_window_ring_correctness():
+    """Decode past the ring size must equal full forward (gemma local)."""
+    import dataclasses
+    cfg = dataclasses.replace(get_config("gemma3_12b", smoke=True),
+                              dtype="float32")   # window 16, ring 24
+    params = init_params(jax.random.PRNGKey(2), cfg)
+    B, S = 1, 40                                  # exceeds window+8
+    rng = np.random.default_rng(3)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+
+    logits_pre, cache = jax.jit(
+        lambda p, b: prefill(p, b, cfg, max_seq=64))(params, {"tokens": toks[:, :-8]})
+    dec = jax.jit(lambda p, c, t: decode_step(p, c, t, cfg))
+    for t in range(S - 8, S):
+        logits, cache = dec(params, cache, toks[:, t:t + 1])
+
+    batch = {"tokens": toks, "labels": jnp.zeros_like(toks)}
+    x, positions, enc_out, pad = T._prepare_inputs(params, cfg, batch)
+    h, _, _ = T._stack(cfg, params, x, positions, remat=False)
+    h = T.L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    ref_next = T._lm_logits(params, cfg, h[:, -1:, :])
+    # ring decode predicted token S given prefix S-1... the last decode call
+    # consumed token S-1, so compare against forward at position S-1
+    np.testing.assert_allclose(np.asarray(logits, np.float32),
+                               np.asarray(ref_next, np.float32),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_param_count_analytic_close():
+    for arch in ("starcoder2_3b", "mamba2_780m", "qwen3_moe_30b_a3b"):
+        cfg = get_config(arch, smoke=True)
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        actual = sum(x.size for x in jax.tree.leaves(params))
+        assert abs(actual - cfg.param_count()) / actual < 0.1, arch

@@ -1,0 +1,43 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim.adamw import (adamw_init, adamw_update, cosine_schedule,
+                               global_norm)
+
+
+def test_adamw_minimizes_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = adamw_init(params)
+    target = jnp.asarray([1.0, 2.0])
+
+    @jax.jit
+    def step(state):
+        g = jax.grad(lambda p: jnp.sum((p["w"] - target) ** 2))(state.params)
+        new, m = adamw_update(state, g, lr=0.05, weight_decay=0.0)
+        return new
+
+    for _ in range(300):
+        state = step(state)
+    np.testing.assert_allclose(state.params["w"], target, atol=0.05)
+
+
+def test_clipping_bounds_update():
+    params = {"w": jnp.zeros(3)}
+    state = adamw_init(params)
+    g = {"w": jnp.asarray([1e6, 1e6, 1e6])}
+    new, m = adamw_update(state, g, lr=1.0, clip_norm=1.0, weight_decay=0.0)
+    assert float(m["grad_norm"]) > 1e5
+    assert float(jnp.abs(new.params["w"]).max()) < 2.0
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1e-3, warmup=10, total=100)
+    assert float(lr(jnp.asarray(0))) == 0.0
+    assert abs(float(lr(jnp.asarray(10))) - 1e-3) < 1e-9
+    assert float(lr(jnp.asarray(100))) < 2e-4
+
+
+def test_global_norm():
+    t = {"a": jnp.asarray([3.0]), "b": jnp.asarray([4.0])}
+    assert abs(float(global_norm(t)) - 5.0) < 1e-6

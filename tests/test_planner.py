@@ -1,0 +1,84 @@
+"""Algorithm-1 planner end-to-end + reconstruction properties."""
+import numpy as np
+import pytest
+
+from repro.core import plan_window, plan_with_baseline, reconstruct_window
+from repro.core.types import PlannerConfig, WindowBatch
+from repro.data import mvn_pair, smartcity_like, windows_from_matrix
+
+
+def test_payload_within_budget():
+    vals, _ = smartcity_like(512, seed=2)
+    w = windows_from_matrix(vals, 256)[0]
+    budget = int(0.3 * 5 * 256)
+    payload, diag = plan_window(w, budget, PlannerConfig())
+    # real samples + models must respect the WAN bound (sample units)
+    assert payload.wan_bytes() <= budget * 4 + 8 + 2 * 5 + 40
+    assert diag.solver_feasible
+
+
+def test_imputation_respects_predictor_cap():
+    vals, _ = mvn_pair(0.95, 512, seed=1)
+    w = windows_from_matrix(vals, 256)[0]
+    payload, _ = plan_window(w, 120, PlannerConfig())
+    for i in range(2):
+        assert payload.n_imputed[i] <= len(
+            payload.real_values[int(payload.predictor[i])])
+
+
+def test_high_correlation_allows_more_imputation():
+    """Fig. 8a: imputation allowed grows with correlation strength."""
+    imputed = {}
+    for rho in (0.1, 0.9):
+        vals, _ = mvn_pair(rho, 2048, seed=3)
+        w = windows_from_matrix(vals, 1024)[0]
+        payload, _ = plan_window(w, 300, PlannerConfig(
+            dependence="pearson", model="linear"))
+        imputed[rho] = int(payload.n_imputed.sum())
+    assert imputed[0.9] >= imputed[0.1]
+
+
+def test_reconstruction_lengths():
+    vals, _ = smartcity_like(512, seed=4)
+    w = windows_from_matrix(vals, 256)[0]
+    payload, _ = plan_window(w, 200, PlannerConfig())
+    rec = reconstruct_window(payload)
+    for i, r in enumerate(rec):
+        assert len(r) == payload.n_real[i] + min(
+            payload.n_imputed[i],
+            len(payload.real_values[int(payload.predictor[i])]))
+
+
+def test_avg_estimates_close_on_correlated_streams():
+    vals, _ = mvn_pair(0.9, 4096, seed=5)
+    w = windows_from_matrix(vals, 2048)[0]
+    payload, _ = plan_window(w, 400, PlannerConfig(model="linear",
+                                                   dependence="pearson"))
+    rec = reconstruct_window(payload)
+    truth = np.asarray(w.values)
+    for i in range(2):
+        # 3x the standard error of a ~200-sample mean from sigma=4 data
+        se = 4.0 / np.sqrt(len(rec[i]))
+        assert abs(np.mean(rec[i]) - truth[i].mean()) < 3 * se
+
+
+def test_baseline_payloads():
+    vals, _ = smartcity_like(512, seed=6)
+    w = windows_from_matrix(vals, 256)[0]
+    for m in ("srs", "approx_iot", "s_voila"):
+        p = plan_with_baseline(w, 128, m)
+        assert p.n_real.sum() == 128
+        assert p.n_imputed.sum() == 0
+
+
+def test_mean_imputation_biases_var_down():
+    """The documented effect behind constraint 1g: mean imputation shrinks
+    the variance estimate."""
+    vals, _ = mvn_pair(0.9, 4096, seed=7)
+    w = windows_from_matrix(vals, 2048)[0]
+    payload, _ = plan_window(w, 500, PlannerConfig(model="mean",
+                                                   epsilon_scale=3.0))
+    rec = reconstruct_window(payload)
+    truth = np.asarray(w.values)
+    if payload.n_imputed.sum() > 0:
+        assert np.var(rec[0], ddof=1) < truth[0].var(ddof=1) * 1.02

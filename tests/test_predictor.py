@@ -1,0 +1,50 @@
+"""Predictor selection: heuristic vs optimal (§IV-A, Fig. 3)."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import predictor as P
+
+
+def test_heuristic_picks_strongest():
+    corr = jnp.asarray(np.array([
+        [1.0, 0.9, 0.1],
+        [0.9, 1.0, 0.3],
+        [0.1, 0.3, 1.0],
+    ], np.float32))
+    pred = np.asarray(P.heuristic_predictors(corr))
+    assert pred[0] == 1 and pred[1] == 0 and pred[2] == 1
+
+
+def test_heuristic_ignores_self_and_nan():
+    corr = jnp.asarray(np.array([
+        [1.0, np.nan, 0.2],
+        [np.nan, 1.0, -0.8],
+        [0.2, -0.8, 1.0],
+    ], np.float32))
+    pred = np.asarray(P.heuristic_predictors(corr))
+    assert pred[0] == 2          # nan treated as no-dependence
+    assert pred[1] == 2          # |-0.8| beats nan
+    assert pred[2] == 1
+
+
+def test_optimal_no_worse_than_heuristic():
+    rng = np.random.default_rng(3)
+    k = 3
+    corr = rng.uniform(-1, 1, (k, k))
+    corr = (corr + corr.T) / 2
+    np.fill_diagonal(corr, 1.0)
+
+    scores = rng.uniform(1.0, 2.0, (k, k))   # synthetic objective per choice
+
+    def fit(pvec):
+        return pvec
+
+    def score(pvec):
+        return float(sum(scores[i, pvec[i]] for i in range(k)))
+
+    class _S:
+        count = np.ones(k)
+
+    best = P.optimal_predictors(_S(), fit, score)
+    heur = np.asarray(P.heuristic_predictors(jnp.asarray(corr, jnp.float32)))
+    assert score(best) <= score(heur) + 1e-9

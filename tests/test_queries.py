@@ -1,0 +1,28 @@
+import numpy as np
+
+from repro.core import queries as Q
+
+
+def test_aggregates(rng):
+    x = rng.normal(3, 1, 100)
+    assert abs(Q.avg(x) - x.mean()) < 1e-9
+    assert abs(Q.var(x) - x.var(ddof=1)) < 1e-9
+    assert Q.vmin(x) == x.min() and Q.vmax(x) == x.max()
+    assert Q.median(x) == np.median(x)
+
+
+def test_nrmse_zero_for_exact():
+    t = np.array([1.0, 2.0, 3.0])
+    assert Q.nrmse(t, t) == 0.0
+
+
+def test_nrmse_normalization():
+    t = np.array([10.0, 10.0])
+    e = np.array([11.0, 9.0])
+    assert abs(Q.nrmse(e, t) - 0.1) < 1e-9
+
+
+def test_nrmse_ignores_nan():
+    t = np.array([10.0, 10.0, 10.0])
+    e = np.array([11.0, np.nan, 9.0])
+    assert abs(Q.nrmse(e, t) - 0.1) < 1e-9

@@ -1,0 +1,52 @@
+"""Baseline samplers (§V-A3, appendix C)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import samplers as SM
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 500), st.integers(0, 100))
+def test_allocations_sum_to_budget(k, budget, seed):
+    rng = np.random.default_rng(seed)
+    n_obs = rng.integers(1, 300, k)
+    budget = min(budget, int(n_obs.sum()))
+    for fn in (SM.srs_allocation, SM.stratified_allocation):
+        alloc = fn(n_obs, budget)
+        assert alloc.sum() == budget
+        assert (alloc <= n_obs).all() and (alloc >= 0).all()
+    sigma = rng.uniform(0.1, 5.0, k)
+    alloc = SM.svoila_allocation(n_obs.astype(float), sigma, budget)
+    assert alloc.sum() == budget
+    assert (alloc <= n_obs).all()
+
+
+def test_svoila_prefers_high_variance():
+    n_obs = np.array([100, 100])
+    sigma = np.array([5.0, 0.5])
+    alloc = SM.svoila_allocation(n_obs.astype(float), sigma, 60)
+    assert alloc[0] > alloc[1]
+
+
+def test_neyman_cost_prefers_cheap_streams():
+    n_obs = np.array([100, 100])
+    sigma = np.array([1.0, 1.0])
+    cost = np.array([1.0, 10.0])
+    alloc = SM.neyman_cost_allocation(n_obs, sigma, cost, budget_cost=100.0)
+    assert alloc[0] > alloc[1]
+    assert float(cost @ alloc) <= 100.0 + 1e-9
+
+
+def test_draw_samples_counts_and_membership(rng):
+    vals = jnp.asarray(rng.normal(0, 1, (3, 50)).astype(np.float32))
+    counts = jnp.asarray([50, 30, 10], jnp.int32)
+    out = SM.draw_samples(jax.random.PRNGKey(0), vals, counts,
+                          np.array([10, 30, 15]))
+    assert len(out[0]) == 10
+    assert len(out[1]) == 30
+    assert len(out[2]) == 10               # capped at N_i
+    v1 = set(np.asarray(vals)[1, :30].tolist())
+    assert all(x in v1 for x in out[1].tolist())
+    assert len(set(out[1].tolist())) == 30  # without replacement

@@ -1,0 +1,101 @@
+"""The eq.-1 convex program: convexity, feasibility, IPM-vs-SLSQP parity."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import solver as SV
+from repro.core.types import StreamStats
+
+
+def _problem(rng, k=5, budget_frac=0.3, eps_scale=1.0):
+    n_obs = rng.integers(50, 200, k).astype(np.float64)
+    sigma2 = rng.uniform(0.5, 5.0, k)
+    V = sigma2 * rng.uniform(0.0, 0.95, k)
+    mean = rng.uniform(1.0, 10.0, k)
+    m4 = 3 * sigma2**2
+    stats = StreamStats(count=jnp.asarray(n_obs), mean=jnp.asarray(mean),
+                        var=jnp.asarray(sigma2), m4=jnp.asarray(m4),
+                        var_of_var=jnp.asarray((m4 - sigma2**2) / n_obs),
+                        cov=jnp.zeros((k, k)), corr=jnp.zeros((k, k)))
+
+    class _M:
+        explained_var = jnp.asarray(V)
+        predictor = jnp.asarray((np.arange(k) + 1) % k)
+
+    eps = eps_scale * np.sqrt((m4 - sigma2**2) / n_obs)
+    budget = budget_frac * n_obs.sum()
+    return SV.build_problem(stats, _M(), eps, budget)
+
+
+def test_hessian_psd_paper_theorem(rng):
+    """z^T H z = sum psi_i (z_i + z_{i+k})^2 >= 0 (paper §III-B3)."""
+    k = 4
+    q = rng.uniform(0.1, 5.0, k)
+    n = rng.uniform(1.0, 50.0, 2 * k)
+    tot = n[:k] + n[k:]
+    psi = 2 * q / tot**3
+    H = np.zeros((2 * k, 2 * k))
+    idx = np.arange(k)
+    H[idx, idx] = psi
+    H[idx + k, idx + k] = psi
+    H[idx, idx + k] = psi
+    H[idx + k, idx] = psi
+    eig = np.linalg.eigvalsh(H)
+    assert eig.min() >= -1e-12
+
+
+def test_solver_feasibility(rng):
+    for seed in range(8):
+        p = _problem(np.random.default_rng(seed))
+        n, fval, eps, ok = SV.solve_ipm(p)
+        assert ok, f"seed {seed} infeasible"
+        A, b = SV.assemble_constraints(p, eps)
+        assert (A @ n - b).max() <= 1e-6
+
+
+def test_ipm_matches_slsqp(rng):
+    """The JAX IPM and the paper's SLSQP find the same optimum."""
+    for seed in range(5):
+        p = _problem(np.random.default_rng(seed + 100))
+        _, f_ipm, _, ok1 = SV.solve_ipm(p)
+        _, f_sq, _, ok2 = SV.solve_slsqp(p)
+        assert ok1
+        if ok2:                       # SLSQP occasionally reports failure
+            assert abs(f_ipm - f_sq) / max(abs(f_sq), 1e-12) < 5e-2, seed
+
+
+def test_rounding_respects_constraints(rng):
+    for seed in range(8):
+        p = _problem(np.random.default_rng(seed + 50))
+        n, fval, eps, ok = SV.solve_ipm(p)
+        nr, ns = SV.round_allocation(p, n, eps)
+        assert (nr >= 0).all() and (ns >= 0).all()
+        assert (nr <= p.n_obs + 1e-9).all()
+        assert (ns <= nr[p.predictor]).all()
+        assert float(p.cost_real @ nr) <= p.budget + 1e-6
+        for i in range(p.k):
+            if ns[i] > 0:
+                tot = nr[i] + ns[i] - 1.0
+                bias = (ns[i] * p.sigma2[i] - (ns[i] - 1) * p.explained_var[i]) / tot
+                assert bias <= eps[i] + 1e-6
+
+
+def test_budget_binding_when_tight(rng):
+    """With a tight budget the optimizer should spend ~all of it."""
+    p = _problem(np.random.default_rng(7), budget_frac=0.15)
+    n, _, eps, ok = SV.solve_ipm(p)
+    nr, ns = SV.round_allocation(p, n, eps)
+    spend = float(p.cost_real @ nr)
+    assert spend >= 0.93 * p.budget
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000), st.floats(0.1, 0.6))
+def test_solver_feasible_property(seed, frac):
+    p = _problem(np.random.default_rng(seed), budget_frac=frac)
+    n, _, eps, ok = SV.solve_ipm(p)
+    assert ok
+    assert np.all(np.isfinite(n))
+    nr, ns = SV.round_allocation(p, n, eps)
+    assert float(p.cost_real @ nr) <= p.budget + 1e-6

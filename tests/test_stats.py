@@ -1,0 +1,77 @@
+"""Windowed statistics: masked moments, dependence, eq. 8, PACF."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import stats as S
+
+
+def _mk(rng, k=4, n=200):
+    return rng.normal(5.0, 2.0, (k, n)).astype(np.float32)
+
+
+def test_masked_moments_match_numpy(rng):
+    x = _mk(rng)
+    counts = np.array([200, 150, 80, 10], np.int32)
+    mean, var, m2, m4 = S.masked_central_moments(jnp.asarray(x),
+                                                 jnp.asarray(counts))
+    for i, c in enumerate(counts):
+        xi = x[i, :c]
+        np.testing.assert_allclose(mean[i], xi.mean(), rtol=1e-5)
+        np.testing.assert_allclose(var[i], xi.var(ddof=1), rtol=1e-4)
+        np.testing.assert_allclose(m4[i], ((xi - xi.mean())**4).mean(),
+                                   rtol=1e-3)
+
+
+def test_pearson_matches_numpy(rng):
+    x = _mk(rng, k=3, n=500)
+    x[1] = 0.8 * x[0] + 0.2 * x[1]
+    corr = np.asarray(S.pearson_corr(jnp.asarray(x),
+                                     jnp.full((3,), 500, jnp.int32)))
+    ref = np.corrcoef(x)
+    np.testing.assert_allclose(corr, ref, atol=1e-4)
+
+
+def test_spearman_matches_scipy(rng):
+    from scipy.stats import spearmanr
+    x = _mk(rng, k=3, n=300)
+    x[2] = np.exp(x[0] / 4)          # monotone => spearman ~ 1
+    corr = np.asarray(S.spearman_corr(jnp.asarray(x),
+                                      jnp.full((3,), 300, jnp.int32)))
+    ref = spearmanr(x.T).statistic
+    np.testing.assert_allclose(corr, ref, atol=5e-3)
+    assert corr[0, 2] > 0.99
+
+
+def test_var_of_var_eq8_empirical(rng):
+    """eq. 8 should predict the sampling variance of s^2 (normal data:
+    Var[s^2] ~ 2 sigma^4 / (N-1))."""
+    n, sigma2 = 400, 4.0
+    x = rng.normal(0, np.sqrt(sigma2), (2000, n)).astype(np.float32)
+    mean, var, m2, m4 = S.masked_central_moments(
+        jnp.asarray(x), jnp.full((2000,), n, jnp.int32))
+    pred = np.asarray(S.var_of_var_estimator(var, m4, jnp.full((2000,), n)))
+    emp = np.var(np.asarray(var))
+    np.testing.assert_allclose(pred.mean(), emp, rtol=0.15)
+
+
+def test_pacf_detects_ar1(rng):
+    n = 2000
+    x = np.zeros(n, np.float32)
+    for t in range(1, n):
+        x[t] = 0.8 * x[t - 1] + rng.normal()
+    p = np.asarray(S.pacf(jnp.asarray(x), jnp.asarray(n), 5))
+    assert abs(p[0] - 0.8) < 0.06            # lag-1 PACF ~ phi
+    assert all(abs(v) < 0.08 for v in p[1:])  # higher lags insignificant
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 8), st.integers(8, 64))
+def test_corr_bounds_property(k, n):
+    rng = np.random.default_rng(k * 100 + n)
+    x = rng.normal(0, 1, (k, n)).astype(np.float32)
+    corr = np.asarray(S.pearson_corr(jnp.asarray(x),
+                                     jnp.full((k,), n, jnp.int32)))
+    assert np.all(corr <= 1.0 + 1e-5) and np.all(corr >= -1.0 - 1e-5)
+    np.testing.assert_allclose(np.diagonal(corr), 1.0, atol=1e-4)

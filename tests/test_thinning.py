@@ -1,0 +1,41 @@
+"""IID relaxations: thinning and m-dependence (§IV-D)."""
+import numpy as np
+
+from repro.core import thinning as TH
+
+
+def _ar1(rng, n, phi):
+    x = np.zeros(n, np.float32)
+    for t in range(1, n):
+        x[t] = phi * x[t - 1] + rng.normal()
+    return x
+
+
+def test_thinning_reduces_autocorrelation(rng):
+    x = _ar1(rng, 4000, 0.9)[None, :]
+    counts = np.array([4000])
+    out, new_counts, strides = TH.thin_window(x, counts)
+    assert strides[0] > 1
+    kept = out[0, : new_counts[0]]
+
+    def lag1(v):
+        v = v - v.mean()
+        return float((v[:-1] * v[1:]).mean() / v.var())
+
+    assert abs(lag1(kept)) < abs(lag1(x[0])) * 0.7
+
+
+def test_thinning_iid_stream_untouched():
+    r = np.random.default_rng(0)      # fixed: IID lag-1 ACF inside the band
+    x = r.normal(0, 1, (1, 1000)).astype(np.float32)
+    out, counts, strides = TH.thin_window(x, np.array([1000]))
+    assert strides[0] == 1
+    assert counts[0] == 1000
+
+
+def test_m_dependence_inflates_variance_for_positive_autocorr(rng):
+    x = _ar1(rng, 2000, 0.8)[None, :]
+    counts = np.array([2000])
+    s2_eff = TH.m_dependence_sigma2(x, counts, m=3)
+    raw = x[0].var(ddof=1)
+    assert s2_eff[0] > raw            # eq. 9 penalty is positive here
