@@ -1,0 +1,88 @@
+"""Fleet benchmarks: batched vs host-loop planning throughput at E = 64, and
+static vs rebalanced fleet budgets at equal WAN spend.
+
+Acceptance targets (ISSUE 1): >= 5x planning-throughput speedup for the
+batched path over the E-loop host path, and lower fleet NRMSE for the
+rebalanced budget at (approximately) equal WAN bytes.
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import PlannerConfig
+from repro.data import fleet_like, fleet_windows
+from repro.fleet import (BudgetController, FleetExperiment, fleet_plan,
+                         host_loop_plan, make_topology)
+
+E, R, K, W = 64, 4, 6, 128
+
+
+def _throughput_rows():
+    vals, _ = fleet_like(E, R, K, n_points=3 * W, seed=0)
+    wins = fleet_windows(vals, W)
+    counts = np.full((E, K), W, np.int64)
+    budgets = np.full(E, 0.25 * K * W)
+    cfg = PlannerConfig(solver="closed_form")
+
+    def batched(w):
+        plan = fleet_plan(jnp.asarray(w), jnp.asarray(counts, jnp.int32),
+                          jnp.asarray(budgets, jnp.float32), 1.0)
+        plan.n_real.block_until_ready()
+
+    batched(wins[0])                              # compile
+    t0 = time.perf_counter()
+    for w in wins:
+        batched(w)
+    us_batched = (time.perf_counter() - t0) / len(wins) * 1e6
+
+    host_loop_plan(wins[0], counts, budgets, cfg)  # warm the jit caches
+    t0 = time.perf_counter()
+    for w in wins:
+        host_loop_plan(w, counts, budgets, cfg)
+    us_host = (time.perf_counter() - t0) / len(wins) * 1e6
+
+    speedup = us_host / max(us_batched, 1e-9)
+    yield (f"fleet_plan_batched_E{E}", us_batched,
+           f"windows_per_s={1e6 / us_batched:.1f}")
+    yield (f"fleet_plan_hostloop_E{E}", us_host,
+           f"windows_per_s={1e6 / us_host:.1f}")
+    yield (f"fleet_plan_speedup_E{E}", 0.0, f"speedup={speedup:.1f}x")
+
+
+def _rebalance_rows():
+    # heterogeneous fleet: calm strongly-correlated regions through volatile
+    # weakly-correlated ones — the regime cross-edge rebalancing exploits
+    e, r, k, w_len = 16, 4, 6, 128
+    vals, _ = fleet_like(e, r, k, n_points=32 * w_len, seed=2,
+                         region_strength=[0.9, 0.7, 0.4, 0.15],
+                         region_volatility=[0.4, 1.0, 1.8, 3.0])
+    wins = fleet_windows(vals, w_len)
+    total = 0.2 * e * k * w_len
+
+    results = {}
+    for mode in ("static", "rebalance"):
+        topo = make_topology(r, e // r, k, seed=2)
+        ctrl = BudgetController(total_budget=total, n_sites=e, mode=mode)
+        exp = FleetExperiment(topology=topo, controller=ctrl,
+                              cfg=PlannerConfig(solver="closed_form"),
+                              query_names=("AVG",))
+        results[mode] = exp.run(wins)
+
+    for mode, res in results.items():
+        yield (f"fleet_nrmse_{mode}", res["plan_seconds"] * 1e6,
+               f"AVG={res['fleet_nrmse']['AVG']:.5f};"
+               f"wan_bytes={res['wan_bytes']}")
+    s, rb = results["static"], results["rebalance"]
+    gain = (s["fleet_nrmse"]["AVG"] - rb["fleet_nrmse"]["AVG"]) \
+        / max(s["fleet_nrmse"]["AVG"], 1e-12)
+    byte_delta = abs(rb["wan_bytes"] - s["wan_bytes"]) / s["wan_bytes"]
+    yield ("fleet_rebalance_gain", 0.0,
+           f"nrmse_reduction={gain:.1%};byte_delta={byte_delta:.1%}")
+
+
+def run():
+    yield from _throughput_rows()
+    yield from _rebalance_rows()

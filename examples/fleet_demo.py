@@ -1,0 +1,60 @@
+"""Geo-distributed fleet demo: 12 edge sites in 3 regions, one shared WAN
+budget, batched planning, and cross-edge budget rebalancing.
+
+Regions range from calm + strongly-correlated (cheap to reconstruct: the
+compact models impute most values) to volatile + weakly-correlated (every
+real sample counts).  The controller watches per-site reconstruction error
+and correlation strength and water-fills the fleet budget accordingly.
+
+    PYTHONPATH=src python examples/fleet_demo.py
+"""
+import numpy as np
+
+from repro.core.types import PlannerConfig
+from repro.data import fleet_like, fleet_windows
+from repro.fleet import BudgetController, FleetExperiment, make_topology
+
+E, R, K, W, T = 12, 3, 6, 128, 16
+STRENGTH = [0.9, 0.5, 0.15]        # within-site correlation per region
+VOLATILITY = [0.5, 1.0, 2.5]       # stream spread (CoV) per region
+
+
+def run(mode: str) -> dict:
+    vals, _ = fleet_like(E, R, K, n_points=T * W, seed=0,
+                         region_strength=STRENGTH,
+                         region_volatility=VOLATILITY)
+    topo = make_topology(R, E // R, K, seed=0)
+    ctrl = BudgetController(total_budget=0.2 * E * K * W, n_sites=E,
+                            mode=mode)
+    exp = FleetExperiment(topology=topo, controller=ctrl,
+                          cfg=PlannerConfig(solver="closed_form"),
+                          query_names=("AVG", "VAR"))
+    res = exp.run(fleet_windows(vals, W))
+    res["corr_strength"] = ctrl.correlation_strength
+    return res
+
+
+def main():
+    for mode in ("static", "rebalance"):
+        res = run(mode)
+        print(f"== budget mode: {mode} ==")
+        for reg, errs in res["region_nrmse"].items():
+            byts = res["wan_bytes_by_region"][reg]
+            cost = res["wan_cost_by_region"][reg]
+            print(f"  {reg}: AVG_nrmse={errs['AVG']:.4f} "
+                  f"VAR_nrmse={errs['VAR']:.4f} wan={byts:7d}B "
+                  f"cost={cost:9.0f}")
+        print(f"  fleet: AVG_nrmse={res['fleet_nrmse']['AVG']:.4f} "
+              f"wan={res['wan_bytes']}B "
+              f"({res['wan_bytes'] / res['full_bytes']:.0%} of raw) "
+              f"plan={res['plan_seconds']:.2f}s "
+              f"for {res['plan_windows']} windows")
+        if mode == "rebalance":
+            per_region = np.round(res["budget_history"][-1]).astype(int)
+            print(f"  final per-site budgets: {per_region.tolist()}")
+            print(f"  observed correlation strength (EWMA R^2): "
+                  f"{np.round(res['corr_strength'], 2).tolist()}")
+
+
+if __name__ == "__main__":
+    main()

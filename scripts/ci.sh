@@ -1,0 +1,32 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 suite + a fleet smoke that exercises the Pallas
+# kernels in interpret mode (so the kernel path is covered on CPU runners).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== fleet smoke (small E, interpret-mode kernels) =="
+python - <<'PY'
+import numpy as np
+from repro.core.types import PlannerConfig
+from repro.data import fleet_like, fleet_windows
+from repro.fleet import BudgetController, FleetExperiment, make_topology
+
+E, R, K, W = 6, 2, 4, 128
+vals, _ = fleet_like(E, R, K, n_points=2 * W, seed=0)
+topo = make_topology(R, E // R, K, seed=0)
+ctrl = BudgetController(total_budget=0.25 * E * K * W, n_sites=E)
+exp = FleetExperiment(topology=topo, controller=ctrl,
+                      cfg=PlannerConfig(solver="closed_form"),
+                      use_kernel=True, interpret=True)
+res = exp.run(fleet_windows(vals, W))
+assert np.isfinite(res["fleet_nrmse"]["AVG"]), res
+assert res["wan_bytes"] < res["full_bytes"], res
+print("fleet smoke OK:", {q: round(v, 4) for q, v in res["fleet_nrmse"].items()},
+      f"wan={res['wan_bytes']}B")
+PY
+
+echo "CI OK"

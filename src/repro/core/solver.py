@@ -13,11 +13,14 @@ Variables (paper notation): n = (n_r, n_s) in R^{2k}_{>=0}.
 With p fixed the problem is convex (paper Theorem, §III-B3): the objective
 Hessian is sum_i psi_i (z_i + z_{i+k})^2 >= 0 and every constraint is affine.
 
-Two solvers behind one interface:
+Three solvers behind one interface:
   * ``solve_ipm``   — jit-compiled log-barrier interior-point Newton method in
-    pure JAX (runs on-accelerator; this is the production path).
+    pure JAX (runs on-accelerator; the single-edge production path).
   * ``solve_slsqp`` — scipy SLSQP, the solver the paper used (§V-E); kept as
     the faithfulness/parity oracle for tests.
+  * ``solve_closed_form`` — one-shot water-filling KKT solution of a
+    relaxation (see :func:`closed_form_alloc`); fully elementwise, so it
+    vmaps across edge sites — the fleet batched-planning hot path.
 
 Feasibility notes (documented deviations):
   * eq. 11 at n_s = 0 degenerates to  V_i <= (n_{r,i}-1) eps_i  — an artifact
@@ -267,7 +270,7 @@ def solve_ipm(p: ProblemData) -> tuple[np.ndarray, float, np.ndarray, bool]:
     q = p.weights**2 * p.sigma2_obj
     # The barrier Hessian conditioning (1/slack^2 terms) needs f64; the solve
     # runs edge/host-side so this never touches the MXU fast path.
-    with jax.enable_x64(True):
+    with jax.experimental.enable_x64(True):
         n, fval, viol, _gap = _ipm(jnp.asarray(q, jnp.float64),
                                    jnp.asarray(A, jnp.float64),
                                    jnp.asarray(b, jnp.float64),
@@ -278,6 +281,102 @@ def solve_ipm(p: ProblemData) -> tuple[np.ndarray, float, np.ndarray, bool]:
     if not np.all(np.isfinite(n)):       # last-ditch: fall back to the start
         n, ok = n0, False
     return n, fval, eps, ok
+
+
+# --------------------------------------------------------------------------
+# closed-form water-filling solver (vmappable; the fleet batched-planning path)
+# --------------------------------------------------------------------------
+
+def closed_form_alloc(q: Array, cost: Array, n_obs: Array, sigma2: Array,
+                      explained_var: Array, eps: Array, budget: Array,
+                      predictor: Array, predictor2: Optional[Array] = None,
+                      bisect_iters: int = 48):
+    """One-shot KKT solution of a relaxation of eq. 1, pure jnp.
+
+    Splits the program: (a) n_r by water-filling the budget constraint 1f —
+    stationarity of eq. 2 w.r.t. n_r alone gives n_r,i = t·sqrt(q_i/c_i)
+    clipped to [1, N_i], with the water level t found by bisection on the
+    budget; (b) n_s pushed to its eq.-11 bias cap (imputation is free on the
+    wire, so the objective is monotone decreasing in n_s) and clipped by
+    constraint 1d.  Deviations vs. the IPM: the n_r stationarity ignores the
+    n_s contribution to the totals (so n_r is slightly over-provisioned on
+    strongly-predicted streams), and the >=1-sample floor (1e) may overshoot
+    C by at most k·max(c) when C < sum(c).  Every op is elementwise or a
+    fixed-length reduction, so the whole thing jits and vmaps across sites —
+    this is the fleet batched-planning path (repro.fleet.batched_planner).
+
+    Inputs are (k,) arrays (budget scalar); returns (n_r (k,) i32,
+    n_s (k,) i32, objective scalar).
+    """
+    dt = q.dtype
+    cost = jnp.maximum(cost, 1e-9)
+    lo = jnp.minimum(jnp.asarray(1.0, dt), n_obs)     # 1e: >=1 where any exist
+    r = jnp.sqrt(jnp.maximum(q, 0.0) / cost)
+
+    def clipped(t):
+        return jnp.clip(t * r, lo, n_obs)
+
+    # bisect the water level t (cost is nondecreasing in t)
+    r_min = jnp.min(jnp.where(r > 0, r, jnp.inf))
+    t_hi = (jnp.max(n_obs) + 1.0) / jnp.maximum(r_min, 1e-9)
+    t_lo = jnp.asarray(0.0, dt)
+    for _ in range(bisect_iters):
+        mid = 0.5 * (t_lo + t_hi)
+        over = jnp.sum(cost * clipped(mid)) > budget
+        t_lo, t_hi = jnp.where(over, t_lo, mid), jnp.where(over, mid, t_hi)
+    nr_f = clipped(t_lo)
+
+    # integer rounding: floor, then largest-remainder top-up within the budget
+    nr = jnp.minimum(jnp.floor(nr_f + 1e-4), n_obs)
+    leftover = budget - jnp.sum(cost * nr)
+    headroom = nr < n_obs
+    order = jnp.argsort(-jnp.where(headroom, nr_f - nr, -jnp.inf))
+    affordable = jnp.cumsum(jnp.where(headroom[order], cost[order], 0.0)) <= leftover
+    take = (affordable & headroom[order]).astype(dt)
+    nr = nr + jnp.zeros_like(nr).at[order].set(take)
+
+    # n_s: eq.-11 bias cap, then 1d (n_s <= n_r of every predictor)
+    nr_pred = nr[predictor]
+    if predictor2 is not None:
+        nr_pred = jnp.minimum(nr_pred, nr[predictor2])
+    slope = sigma2 - explained_var - eps
+    cap = jnp.where(slope > 0,
+                    ((nr - 1.0) * eps - explained_var)
+                    / jnp.maximum(slope, 1e-20),
+                    jnp.inf)
+    cap = jnp.maximum(cap, 0.0)
+    ns = jnp.floor(jnp.minimum(cap, nr_pred) + 1e-4)
+    # 1e for unobserved (straggler) streams: at least one imputed sample
+    ns = jnp.where((nr < 0.5) & (nr_pred >= 1.0), jnp.maximum(ns, 1.0), ns)
+
+    obj = jnp.sum(q / jnp.maximum(nr + ns, 1.0))
+    return nr.astype(jnp.int32), ns.astype(jnp.int32), obj
+
+
+@partial(jax.jit, static_argnames=())
+def _closed_form_jit(q, cost, n_obs, sigma2, V, eps, budget, predictor):
+    return closed_form_alloc(q, cost, n_obs, sigma2, V, eps, budget, predictor)
+
+
+def solve_closed_form(p: ProblemData) -> Allocation:
+    """Host entry: same math as the vmapped fleet path (f32 for bit parity)."""
+    f32 = jnp.float32
+    q = jnp.asarray(p.weights**2 * p.sigma2_obj, f32)
+    args = (q, jnp.asarray(p.cost_real, f32), jnp.asarray(p.n_obs, f32),
+            jnp.asarray(p.sigma2, f32), jnp.asarray(p.explained_var, f32),
+            jnp.asarray(p.eps, f32), jnp.asarray(p.budget, f32),
+            jnp.asarray(p.predictor, jnp.int32))
+    if p.predictor2 is not None:
+        nr, ns, obj = closed_form_alloc(*args,
+                                        jnp.asarray(p.predictor2, jnp.int32))
+    else:
+        nr, ns, obj = _closed_form_jit(*args)
+    # the >=1-sample floor (1e) can overshoot C when C < sum(cost) — report it
+    spent = float(np.asarray(p.cost_real) @ np.asarray(nr))
+    return Allocation(n_real=nr, n_imputed=ns,
+                      objective=jnp.asarray(obj, jnp.float32),
+                      feasible=jnp.asarray(spent <= p.budget + 1e-6),
+                      eps_used=jnp.asarray(p.eps, jnp.float32))
 
 
 # --------------------------------------------------------------------------
@@ -354,6 +453,8 @@ def round_allocation(p: ProblemData, n: np.ndarray, eps: np.ndarray):
 
 
 def solve(p: ProblemData, method: str = "ipm") -> Allocation:
+    if method == "closed_form":
+        return solve_closed_form(p)   # does its own (jnp) rounding
     if method == "slsqp":
         n, fval, eps, ok = solve_slsqp(p)
     else:

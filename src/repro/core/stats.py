@@ -116,6 +116,63 @@ def window_stats_batch(batch: WindowBatch, dependence: str = "pearson") -> Strea
     return window_stats(batch.values, batch.counts, dependence=dependence)
 
 
+# ---------------------------------------------------------------------------
+# Batched (fleet) entry points: derive the same statistics from raw power
+# sums S1..S4 and the cross-product matrix X·Xᵀ of *zero-masked* values —
+# exactly what one pass of the ``stream_stats`` kernel produces for a whole
+# fleet in the flattened (E·k, N) layout.  All formulas broadcast over any
+# leading batch dims.
+#
+# Exactness: identical to the masked estimators above whenever every count
+# is 0 or N (full windows plus whole-stream stragglers — the fleet runtime's
+# regime).  For partially-filled streams the pairwise covariances use each
+# stream's *global* mean instead of the per-pair co-valid mean (the raw-sum
+# layout cannot recover per-pair means); the diagonal is always exact.
+# ---------------------------------------------------------------------------
+
+def _cov_corr_from_sums(mom: Array, xxt: Array, counts: Array):
+    """Shared pairwise (unbiased) covariance + clipped correlation."""
+    c = counts.astype(mom.dtype)
+    n = jnp.maximum(c, 1.0)
+    mean = mom[..., 0] / n
+    n_pair = jnp.minimum(c[..., :, None], c[..., None, :])
+    n_pair_c = jnp.maximum(n_pair, 1.0)
+    cov = xxt / n_pair_c - mean[..., :, None] * mean[..., None, :]
+    cov = cov * n_pair_c / jnp.maximum(n_pair_c - 1.0, 1.0)
+    d = jnp.sqrt(jnp.maximum(jnp.diagonal(cov, axis1=-2, axis2=-1), _EPS))
+    corr = jnp.clip(cov / (d[..., :, None] * d[..., None, :]), -1.0, 1.0)
+    return cov, corr
+
+
+def corr_from_sums(mom: Array, xxt: Array, counts: Array) -> Array:
+    """(..., k, 4) sums + (..., k, k) cross products -> (..., k, k) Pearson.
+
+    Feed rank-transformed sums (see :func:`rank_transform`) for Spearman.
+    """
+    return _cov_corr_from_sums(mom, xxt, counts)[1]
+
+
+def stats_from_sums(mom: Array, xxt: Array, counts: Array) -> StreamStats:
+    """Raw sums of zero-masked values -> :class:`StreamStats`, batched.
+
+    mom: (..., k, 4) holding S1..S4; xxt: (..., k, k); counts: (..., k).
+    The returned ``corr`` is Pearson; Spearman callers substitute via
+    :func:`corr_from_sums` on rank sums (dataclasses.replace).
+    """
+    c = counts.astype(mom.dtype)
+    n = jnp.maximum(c, 1.0)
+    s1, s2, s3, s4 = (mom[..., i] for i in range(4))
+    mean = s1 / n
+    m2 = s2 / n - mean**2
+    var = m2 * n / jnp.maximum(n - 1.0, 1.0)
+    m4 = (s4 - 4.0 * mean * s3 + 6.0 * mean**2 * s2 - 3.0 * mean**4 * n) / n
+    m4 = jnp.maximum(m4, 0.0)
+    vov = var_of_var_estimator(var, m4, counts)
+    cov, corr = _cov_corr_from_sums(mom, xxt, counts)
+    return StreamStats(count=counts, mean=mean, var=var, m4=m4,
+                       var_of_var=vov, cov=cov, corr=corr)
+
+
 def autocovariance(x: Array, n_valid: Array, max_lag: int) -> Array:
     """Autocovariances gamma_1..gamma_max_lag of a single stream (masked).
 

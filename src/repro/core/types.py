@@ -86,7 +86,8 @@ class CompactModel:
     explained_var: Array
     predictor: Array
 
-    def param_bytes(self) -> int:
+    @staticmethod
+    def param_bytes() -> int:
         """WAN footprint of one stream's model (float32 coeffs + loc/scale + idx)."""
         return 4 * 4 + 2 * 4 + 4
 

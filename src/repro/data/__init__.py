@@ -1,5 +1,6 @@
 from repro.data.streams import (home_like, turbine_like, smartcity_like,
-                                mvn_pair, windows_from_matrix, DATASETS)
+                                mvn_pair, fleet_like, fleet_windows,
+                                windows_from_matrix, DATASETS)
 
 __all__ = ["home_like", "turbine_like", "smartcity_like", "mvn_pair",
-           "windows_from_matrix", "DATASETS"]
+           "fleet_like", "fleet_windows", "windows_from_matrix", "DATASETS"]

@@ -100,6 +100,68 @@ def mvn_pair(rho: float, n_points: int = 4096, seed: int = 0,
     return vals.astype(np.float32), {"name": f"mvn_rho{rho}", "k": 2}
 
 
+def fleet_like(n_sites: int = 16, n_regions: int = 4, k: int = 6,
+               n_points: int = 2048, seed: int = 0,
+               region_strength=None, region_volatility=None):
+    """Regionally-correlated fleet of edge sites (the fleet subsystem's
+    evaluation input).
+
+    Sites are assigned to regions in contiguous blocks.  Each region has a
+    latent driver (diurnal cycle + AR(1) weather); each site mixes that
+    driver into its k streams with weight ``region_strength[r]`` in [0, 1]:
+
+        x_j = scale_j * (rho * B_site + sqrt(1 - rho^2) * eta_j) + offset_j + noise
+
+    so within-site pairwise correlation ~ rho^2 — strong regions (rho ~ 0.9)
+    are highly imputable, weak regions (rho ~ 0.15) are not.
+    ``region_volatility`` additionally scales each region's stream spread
+    (coefficient of variation): real fleets mix calm, strongly-coupled
+    regions with volatile, weakly-coupled ones.  Both axes of spatial
+    heterogeneity are what cross-edge budget rebalancing exploits.
+
+    Returns (values (E, k, T) float32, meta) with meta["regions"] the (E,)
+    region index per site and meta["strength"] the per-region rho.
+    """
+    rng = np.random.default_rng(seed)
+    if region_strength is None:
+        region_strength = np.linspace(0.9, 0.15, n_regions)
+    region_strength = np.asarray(region_strength, np.float64)
+    if region_volatility is None:
+        region_volatility = np.ones(n_regions)
+    region_volatility = np.asarray(region_volatility, np.float64)
+    sites_per = int(np.ceil(n_sites / n_regions))
+    regions = np.minimum(np.arange(n_sites) // sites_per, n_regions - 1)
+
+    t = np.arange(n_points)
+    drivers = [np.sin(2 * np.pi * t / 288.0) + 0.5 * _ar1(rng, n_points, 0.97, 0.2)
+               for _ in range(n_regions)]
+    out = np.empty((n_sites, k, n_points), np.float32)
+    for s in range(n_sites):
+        r = int(regions[s])
+        rho = float(region_strength[r])
+        base = drivers[r] + 0.4 * _ar1(rng, n_points, 0.9, 0.3)   # site identity
+        base = base / max(np.std(base), 1e-9)
+        for j in range(k):
+            local = _ar1(rng, n_points, 0.9, 0.4)
+            local = local / max(np.std(local), 1e-9)
+            offset = rng.uniform(20.0, 80.0)
+            scale = rng.uniform(2.0, 6.0) * float(region_volatility[r])
+            x = rho * base + np.sqrt(max(1.0 - rho**2, 0.0)) * local
+            out[s, j] = (offset + scale * x
+                         + rng.normal(0.0, 0.15 * scale, n_points))
+    meta = {"name": "fleet", "k": k, "regions": regions,
+            "strength": region_strength}
+    return out, meta
+
+
+def fleet_windows(values: np.ndarray, window: int) -> list[np.ndarray]:
+    """Slice a fleet tensor (E, k, T) into tumbling windows of (E, k, window)
+    — the stacked layout ``repro.fleet.batched_planner.fleet_plan`` consumes."""
+    e, k, total = values.shape
+    n_win = total // window
+    return [values[:, :, w * window:(w + 1) * window] for w in range(n_win)]
+
+
 def windows_from_matrix(values: np.ndarray, window: int) -> list[WindowBatch]:
     """Slice (k, T) tuple matrix into tumbling windows of ``window`` tuples."""
     k, total = values.shape

@@ -1,0 +1,19 @@
+"""Fleet subsystem: geo-distributed multi-edge simulation with batched JAX
+planning and cross-edge WAN budget rebalancing.
+
+topology        — regions, sites, per-link WAN properties.
+batched_planner — one jitted (E, k, N) planning pass for the whole fleet
+                  (block-diagonal stream_stats kernel + vmapped closed-form
+                  solver); host_loop_plan is the E-loop baseline it replaces.
+controller      — per-window water-filling of the fleet-wide sample budget.
+runtime         — FleetExperiment: edges -> per-region transports -> cloud.
+"""
+from repro.fleet.batched_planner import FleetPlan, fleet_plan, host_loop_plan
+from repro.fleet.controller import BudgetController, water_fill
+from repro.fleet.runtime import FleetExperiment
+from repro.fleet.topology import (FleetTopology, LinkSpec, RegionSpec,
+                                  SiteSpec, make_topology)
+
+__all__ = ["FleetPlan", "fleet_plan", "host_loop_plan", "BudgetController",
+           "water_fill", "FleetExperiment", "FleetTopology", "LinkSpec",
+           "RegionSpec", "SiteSpec", "make_topology"]

@@ -1,0 +1,145 @@
+"""Batched Algorithm-1 planning for a whole fleet in one jitted pass.
+
+The single-edge hot path (``repro.core.planner.plan_window``) interleaves
+host numpy with several separately-dispatched jitted pieces; driving E sites
+means E full round trips per window.  Here the fleet's windows are stacked
+into one ``(E, k, N)`` tensor and every stage runs batched:
+
+  * window statistics — one block-diagonal ``stream_stats`` kernel pass over
+    the flattened (E·kp, N) layout (``fleet_window_moments_xxt``), with the
+    per-site dependence matrices extracted from the diagonal tiles and
+    derived moments via ``repro.core.stats.stats_from_sums``;
+  * predictor selection, compact-model fitting and the epsilon policy —
+    vmapped over sites;
+  * the eq.-1 program — the closed-form water-filling solver
+    (``repro.core.solver.closed_form_alloc``) vmapped across sites.
+
+``fleet_plan`` therefore produces, per window, everything the per-site
+``plan_window(cfg.solver='closed_form')`` produces — same formulas, same
+f32 arithmetic — so its allocations match the host loop within rounding
+tolerance while planning throughput scales to hundreds of sites.
+
+Only the default single-predictor polynomial-model configuration is
+batched (model in {'cubic', 'linear'}, epsilon policy 'k_se'/'alpha',
+iid mode); mean imputation, multi-predictor models and the exact-MSE cap
+stay on the host path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import models as models_mod
+from repro.core import predictor as pred_mod
+from repro.core import solver as solver_mod
+from repro.core import stats as stats_mod
+from repro.core.planner import plan_window
+from repro.core.types import Array, CompactModel, PlannerConfig, WindowBatch
+from repro.kernels.stream_stats.ops import fleet_window_moments_xxt
+
+# model-upload overhead per stream in 4-byte sample units (constraint 1f),
+# shared with plan_window's accounting via the payload type itself
+_MODEL_UNITS_PER_STREAM = CompactModel.param_bytes() / 4.0
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class FleetPlan:
+    """One window's plan for all E sites (all arrays lead with E)."""
+
+    n_real: Array          # (E, k) i32
+    n_imputed: Array       # (E, k) i32
+    predictor: Array       # (E, k) i32
+    coeffs: Array          # (E, k, 4) compact-model coefficients
+    loc: Array             # (E, k)
+    scale: Array           # (E, k)
+    explained_var: Array   # (E, k) V_i
+    mean: Array            # (E, k) stats digest
+    var: Array             # (E, k)
+    eps: Array             # (E, k) bias tolerance used
+    objective: Array       # (E,) relaxed eq.-2 value at the allocation
+    r2: Array              # (E,) mean V_i / sigma_i^2 — correlation strength
+
+
+@functools.partial(jax.jit, static_argnames=("dependence", "model",
+                                             "epsilon_policy", "use_kernel",
+                                             "interpret"))
+def fleet_plan(values: Array, counts: Array, budgets: Array,
+               epsilon_scale: float = 1.0, *, dependence: str = "spearman",
+               model: str = "cubic", epsilon_policy: str = "k_se",
+               use_kernel=None, interpret: bool = False) -> FleetPlan:
+    """values (E, k, N) f32, counts (E, k) i32, budgets (E,) — one pass."""
+    if model not in ("cubic", "linear"):
+        raise ValueError(f"fleet_plan batches model in {{'cubic','linear'}}; "
+                         f"{model!r} stays on the host plan_window path")
+    if epsilon_policy not in ("k_se", "alpha"):
+        raise ValueError(f"fleet_plan batches epsilon_policy in "
+                         f"{{'k_se','alpha'}}; {epsilon_policy!r} stays on "
+                         f"the host plan_window path")
+    e, k, n_max = values.shape
+    cf = counts.astype(values.dtype)
+    mask = (jnp.arange(n_max)[None, None, :] < cf[..., None]).astype(values.dtype)
+    xm = values * mask
+
+    mom, xxt = fleet_window_moments_xxt(xm, use_kernel=use_kernel,
+                                        interpret=interpret)
+    stats = stats_mod.stats_from_sums(mom, xxt, counts)
+    if dependence == "spearman":
+        ranks = jax.vmap(stats_mod.rank_transform)(values, counts)
+        rmom, rxxt = fleet_window_moments_xxt(ranks * mask,
+                                              use_kernel=use_kernel,
+                                              interpret=interpret)
+        corr = stats_mod.corr_from_sums(rmom, rxxt, counts)
+    else:
+        corr = stats.corr
+
+    predictor = jax.vmap(pred_mod.heuristic_predictors)(corr)
+    degree = 1 if model == "linear" else 3
+    fitted = jax.vmap(
+        lambda v, c, p: models_mod.fit_models(v, c, p, degree=degree)
+    )(values, counts, predictor)
+
+    if epsilon_policy == "alpha":
+        eps = epsilon_scale * jnp.maximum(stats.var, 1e-12)
+    else:                                     # "k_se" (eq. 8, paper default)
+        se = jnp.sqrt(jnp.maximum(stats.var_of_var, 0.0))
+        eps = epsilon_scale * jnp.maximum(se, 1e-12)
+
+    weights = 1.0 / jnp.maximum(jnp.abs(stats.mean), 1e-6)
+    sigma2 = jnp.maximum(stats.var, 1e-12)
+    v_exp = jnp.clip(fitted.explained_var, 0.0, sigma2 * (1.0 - 1e-9))
+    q = weights**2 * sigma2
+    budget_net = jnp.maximum(budgets - _MODEL_UNITS_PER_STREAM * k, 2.0)
+    cost = jnp.ones_like(q)
+
+    nr, ns, obj = jax.vmap(solver_mod.closed_form_alloc)(
+        q, cost, cf, sigma2, v_exp, eps, budget_net.astype(values.dtype),
+        predictor)
+
+    return FleetPlan(n_real=nr, n_imputed=ns, predictor=predictor,
+                     coeffs=fitted.coeffs, loc=fitted.loc, scale=fitted.scale,
+                     explained_var=fitted.explained_var,
+                     mean=stats.mean, var=stats.var, eps=eps,
+                     objective=obj, r2=jnp.mean(v_exp / sigma2, axis=-1))
+
+
+def host_loop_plan(values: np.ndarray, counts: np.ndarray,
+                   budgets: np.ndarray, cfg: PlannerConfig):
+    """The path ``fleet_plan`` replaces: E independent ``plan_window`` calls.
+
+    Kept as the throughput baseline (benchmarks/fleet_bench.py) and the
+    parity oracle (tests/test_fleet.py).  Returns (n_real, n_imputed,
+    predictor) stacked to (E, k).
+    """
+    nr, ns, pred = [], [], []
+    for s in range(values.shape[0]):
+        batch = WindowBatch.from_numpy(values[s], counts[s], window_id=0)
+        payload, _ = plan_window(batch, float(budgets[s]), cfg)
+        nr.append(payload.n_real)
+        ns.append(payload.n_imputed)
+        pred.append(payload.predictor)
+    return np.stack(nr), np.stack(ns), np.stack(pred)

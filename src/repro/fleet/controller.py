@@ -1,0 +1,126 @@
+"""Cross-edge WAN budget rebalancing (the fleet-wide resource controller).
+
+The paper fixes one sampling budget per edge.  With E sites sharing one WAN
+budget the equal split is wasteful: a strongly-correlated site reconstructs
+accurately from few real samples (imputation covers the rest for free),
+while a weakly-correlated site is starved.  Each window the controller
+water-fills the fleet budget across sites proportionally to a demand signal.
+
+Demand model: empirically (and in the eq.-2 relaxation) a site's
+reconstruction error decays like err_s(b) ~ A_s / b, where A_s folds
+together the site's stream volatility (CoV) AND how much free imputation its
+correlation structure yields — strongly-correlated sites have small A_s.
+Minimizing the fleet error sum(A_s / b_s) subject to sum(b_s) = B equalizes
+the marginal values A_s / b_s^2, i.e. b*_s ∝ sqrt(A_s).  A_s is observable
+at the edge for free as err_s · b_s (err_s: the edge-local reconstruction
+error of its own payload against its own cached window), so the controller
+tracks
+
+    demand_s = EWMA[ sqrt(obs_err_s · b_s) ]
+
+whose water-filled fixed point is exactly b ∝ sqrt(A).  Before any error
+observation exists (or for planners that do not report one) the fallback
+demand uses the solver's predicted error sqrt(obj_s) in place of obs_err.
+Budgets are clipped to [floor_mult, ceil_mult] x the equal share so no site
+is ever starved or monopolizes the uplink, and renormalized so the fleet
+total is conserved.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+def water_fill(demand: np.ndarray, total: float, lo: np.ndarray,
+               hi: np.ndarray, iters: int = 8) -> np.ndarray:
+    """Allocate ``total`` proportionally to ``demand`` within [lo, hi].
+
+    Iterative clip-and-redistribute; exact when the box constraints leave
+    slack, best-effort (total preserved up to the feasible box) otherwise.
+    """
+    d = np.maximum(np.asarray(demand, np.float64), 1e-12)
+    lo = np.broadcast_to(np.asarray(lo, np.float64), d.shape)
+    hi = np.broadcast_to(np.asarray(hi, np.float64), d.shape)
+    b = np.clip(total * d / d.sum(), lo, hi)
+    for _ in range(iters):
+        excess = total - b.sum()
+        if abs(excess) < 1e-9:
+            break
+        movable = (b < hi) if excess > 0 else (b > lo)
+        if not movable.any():
+            break
+        w = d * movable
+        b = np.clip(b + excess * w / w.sum(), lo, hi)
+    return b
+
+
+@dataclasses.dataclass
+class BudgetController:
+    """Per-window fleet budget allocator with EWMA demand tracking."""
+
+    total_budget: float            # fleet-wide real-sample budget per window
+    n_sites: int
+    mode: str = "rebalance"        # "rebalance" | "static"
+    floor_mult: float = 0.3        # min share, x equal split
+    ceil_mult: float = 3.0         # max share, x equal split
+    ewma: float = 0.5              # weight of the newest observation
+    site_capacity: Optional[np.ndarray] = None   # (E,) tuples cached/window
+
+    def __post_init__(self):
+        self._demand = np.ones(self.n_sites)
+        self._r2 = np.zeros(self.n_sites)
+        self._last_budgets = np.full(self.n_sites, self.equal_share)
+        self._seen = False
+
+    @property
+    def correlation_strength(self) -> np.ndarray:
+        """(E,) EWMA of observed per-site explained-variance fraction."""
+        return self._r2.copy()
+
+    @property
+    def equal_share(self) -> float:
+        return self.total_budget / self.n_sites
+
+    def budgets(self) -> np.ndarray:
+        """(E,) per-site budgets for the next window (floats; callers floor)."""
+        eq = self.equal_share
+        hi = np.full(self.n_sites, self.ceil_mult * eq)
+        if self.site_capacity is not None:
+            hi = np.minimum(hi, np.asarray(self.site_capacity, np.float64))
+        if self.mode == "static" or not self._seen:
+            b = np.minimum(np.full(self.n_sites, eq), hi)
+        else:
+            lo = np.minimum(np.full(self.n_sites, self.floor_mult * eq), hi)
+            b = water_fill(self._demand, self.total_budget, lo, hi)
+        self._last_budgets = b
+        return b
+
+    def update(self, obs_err: np.ndarray, r2: np.ndarray,
+               objective=None) -> None:
+        """Feed one window's per-site observations.
+
+        obs_err: (E,) edge-local reconstruction error (any consistent scale).
+            Already internalizes correlation strength: an imputable site
+            reaches low error at low budget, shrinking its A_s estimate.
+        r2: (E,) mean explained-variance fraction — tracked as the
+            ``correlation_strength`` telemetry (reporting/diagnostics).
+        objective: (E,) the solver's relaxed eq.-2 value — the predicted
+            squared error, used in place of obs_err when that is missing.
+        """
+        b = np.maximum(self._last_budgets, 1.0)
+        err = np.asarray(obs_err, np.float64)
+        if objective is not None:
+            pred_err = np.sqrt(np.maximum(np.asarray(objective), 0.0))
+            err = np.where(np.isfinite(err) & (err > 0), err, pred_err)
+        err = np.nan_to_num(err, nan=1.0)
+        demand = np.sqrt(np.maximum(err, 1e-9) * b)     # sqrt(A_s) estimate
+        a = self.ewma
+        r2c = np.clip(np.nan_to_num(np.asarray(r2, np.float64)), 0.0, 1.0)
+        if not self._seen:
+            self._demand, self._r2 = demand, r2c
+            self._seen = True
+        else:
+            self._demand = (1 - a) * self._demand + a * demand
+            self._r2 = (1 - a) * self._r2 + a * r2c

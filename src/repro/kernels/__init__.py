@@ -11,8 +11,10 @@ flash_attention — online-softmax attention forward (causal/sliding-window,
 Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
 wrapper; picks interpret mode off-TPU), ref.py (pure-jnp oracle).
 """
-from repro.kernels.stream_stats.ops import window_moments_xxt
+from repro.kernels.stream_stats.ops import (fleet_window_moments_xxt,
+                                            window_moments_xxt)
 from repro.kernels.polyfit.ops import vandermonde_moments
 from repro.kernels.flash_attention.ops import flash_attention
 
-__all__ = ["window_moments_xxt", "vandermonde_moments", "flash_attention"]
+__all__ = ["window_moments_xxt", "fleet_window_moments_xxt",
+           "vandermonde_moments", "flash_attention"]

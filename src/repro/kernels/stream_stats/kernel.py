@@ -56,6 +56,59 @@ def _kernel(xi_ref, xj_ref, xxt_ref, mom_ref):
         mom_ref[...] += jnp.stack([s1, s2, s3, s4], axis=1)
 
 
+def _fleet_kernel(x_ref, xxt_ref, mom_ref):
+    c = pl.program_id(1)
+
+    x = x_ref[...].astype(jnp.float32)            # (KP, TN) — one whole site
+
+    @pl.when(c == 0)
+    def _init():
+        xxt_ref[...] = jnp.zeros_like(xxt_ref)
+        mom_ref[...] = jnp.zeros_like(mom_ref)
+
+    xxt_ref[...] += jax.lax.dot_general(
+        x, x, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)       # MXU diagonal tile
+    x2 = x * x
+    mom_ref[...] += jnp.stack([jnp.sum(x, axis=1), jnp.sum(x2, axis=1),
+                               jnp.sum(x2 * x, axis=1),
+                               jnp.sum(x2 * x2, axis=1)], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("kp", "tn", "interpret"))
+def stream_stats_fleet_pallas(x: jax.Array, kp: int, tn: int = DEFAULT_TN,
+                              interpret: bool = False):
+    """Fleet (block-diagonal) layout: x is E sites flattened to (E·kp, N).
+
+    Cross-site products are never needed for planning — each site's
+    dependence matrix is the kp×kp diagonal block — so instead of the full
+    (E·kp)² grid of :func:`stream_stats_pallas` the grid is just (E, N/tn)
+    and only the diagonal tiles are computed: O(E) MXU work, not O(E²).
+    kp is the per-site stream tile (multiple of 8; caller pads k up to it).
+
+    Returns (moments (E·kp, 4) f32, xxt (E·kp, kp) f32) where xxt row-block
+    e holds site e's diagonal tile.
+    """
+    ek, n = x.shape
+    assert ek % kp == 0 and n % tn == 0 and kp % 8 == 0, (ek, n, kp, tn)
+    grid = (ek // kp, n // tn)
+    xxt, mom = pl.pallas_call(
+        _fleet_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((kp, tn), lambda e, c: (e, c))],
+        out_specs=[
+            pl.BlockSpec((kp, kp), lambda e, c: (e, 0)),
+            pl.BlockSpec((kp, 4), lambda e, c: (e, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((ek, kp), jnp.float32),
+            jax.ShapeDtypeStruct((ek, 4), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)
+    return mom, xxt
+
+
 @functools.partial(jax.jit, static_argnames=("tk", "tn", "interpret"))
 def stream_stats_pallas(x: jax.Array, tk: int = DEFAULT_TK,
                         tn: int = DEFAULT_TN, interpret: bool = False):

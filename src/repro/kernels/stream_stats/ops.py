@@ -8,6 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.stream_stats.kernel import (DEFAULT_TK, DEFAULT_TN,
+                                               stream_stats_fleet_pallas,
                                                stream_stats_pallas)
 from repro.kernels.stream_stats.ref import stream_stats_ref
 
@@ -35,6 +36,35 @@ def window_moments_xxt(x: jax.Array, use_kernel: bool = True,
     xp = jnp.pad(x, ((0, kp - k), (0, np_ - n)))
     mom, xxt = stream_stats_pallas(xp, tk=tk, tn=tn, interpret=interpret)
     return mom[:k], xxt[:k, :k]
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def fleet_window_moments_xxt(x: jax.Array, use_kernel=None,
+                             interpret: bool = False):
+    """Raw power sums + per-site cross products for a whole fleet (E, k, N).
+
+    Flattens the fleet to the (E·kp, N) layout (per-site k zero-padded up to
+    a sublane multiple) and runs the block-diagonal ``stream_stats`` pass —
+    one kernel launch for all E sites, computing only the E diagonal
+    (kp, kp) tiles.  Off-kernel the vmapped jnp oracle is used.
+    use_kernel=None means auto: the Pallas kernel on TPU (or under
+    ``interpret``), the oracle elsewhere.
+
+    Returns (moments (E, k, 4), xxt (E, k, k)), both f32.
+    """
+    e, k, n = x.shape
+    if use_kernel is None:
+        use_kernel = _on_tpu() or interpret
+    if not use_kernel:
+        return jax.vmap(stream_stats_ref)(x)
+    kp = int(np.ceil(k / 8) * 8)
+    tn = min(DEFAULT_TN, max(128, 1 << int(np.ceil(np.log2(max(n, 1))))))
+    np_ = int(np.ceil(n / tn) * tn)
+    xp = jnp.pad(x, ((0, 0), (0, kp - k), (0, np_ - n))).reshape(e * kp, np_)
+    mom, xxt = stream_stats_fleet_pallas(xp, kp=kp, tn=tn, interpret=interpret)
+    mom = mom.reshape(e, kp, 4)[:, :k]
+    xxt = xxt.reshape(e, kp, kp)[:, :k, :k]
+    return mom, xxt
 
 
 def derived_stats(mom: jax.Array, xxt: jax.Array, n: int):

@@ -24,6 +24,19 @@ from repro.parallel.sharding import logical_sharding_constraint as shard
 Array = jax.Array
 
 
+def _shard_map(f, *, mesh, in_specs, out_specs, axis_names, check_vma=False):
+    """jax.shard_map across jax versions: new API (axis_names/check_vma) when
+    present, else jax.experimental.shard_map (auto/check_rep)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, axis_names=axis_names,
+                             check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _sm
+    auto = frozenset(mesh.axis_names) - set(axis_names)
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma, auto=auto)
+
+
 # ---------------------------------------------------------------- init utils
 
 def _dense_init(key, shape, in_axis=-2, dtype=jnp.float32):
@@ -365,7 +378,7 @@ def moe_apply(params, x, m: MoEConfig):
         # compiled shard-local (the auto partitioner otherwise replicates
         # the operands => multi-TB collectives; EXPERIMENTS.md §Perf B1/B2)
         from jax.sharding import PartitionSpec as _P
-        bkt, sorted_e, rank_c, sort_idx = jax.shard_map(
+        bkt, sorted_e, rank_c, sort_idx = _shard_map(
             jax.vmap(_dispatch_one), mesh=mesh,
             in_specs=(_P(ba), _P(ba)), out_specs=(_P(ba),) * 4,
             axis_names=set(ba), check_vma=False)(xg, ti_g)
@@ -390,7 +403,7 @@ def moe_apply(params, x, m: MoEConfig):
         g_idx = jnp.arange(G)[:, None]
         out_sorted = expert_out.at[g_idx, sorted_e, rank_c].get(
             mode="fill", fill_value=0)
-        out = jax.shard_map(
+        out = _shard_map(
             jax.vmap(_combine_one), mesh=mesh,
             in_specs=(_P(ba), _P(ba), _P(ba)), out_specs=_P(ba),
             axis_names=set(ba), check_vma=False)(out_sorted, sort_idx, tw_g)
@@ -415,7 +428,7 @@ def moe_apply(params, x, m: MoEConfig):
                    * tw_l[0].astype(rows.dtype)[..., None]).sum(axis=1)
             return jax.lax.psum(out, "model")[None]
 
-        out = jax.shard_map(
+        out = _shard_map(
             _combine_manual, mesh=mesh,
             in_specs=(_P(ba, "model"), _P(ba), _P(ba), _P(ba), _P(ba)),
             out_specs=_P(ba),

@@ -29,11 +29,19 @@ from repro.core.types import EdgePayload, PlannerConfig, WindowBatch
 
 @dataclasses.dataclass
 class Transport:
-    """WAN link with byte accounting and injectable faults."""
+    """WAN link with byte/cost accounting and injectable faults.
+
+    ``cost_per_byte``/``latency_ms`` model heterogeneous uplinks (fleet
+    topology links); single-edge callers keep the all-default behavior.
+    """
 
     drop_prob: float = 0.0
     seed: int = 0
+    cost_per_byte: float = 1.0
+    latency_ms: float = 0.0
     bytes_sent: int = 0
+    bytes_cost: float = 0.0
+    latency_total_ms: float = 0.0
     payloads_sent: int = 0
     payloads_dropped: int = 0
 
@@ -47,6 +55,8 @@ class Transport:
             self.payloads_dropped += 1
             return None
         self.bytes_sent += nbytes
+        self.bytes_cost += nbytes * self.cost_per_byte
+        self.latency_total_ms += self.latency_ms
         return payload
 
 
