@@ -1,9 +1,13 @@
-"""Fleet benchmarks: batched vs host-loop planning throughput at E = 64, and
-static vs rebalanced fleet budgets at equal WAN spend.
+"""Fleet benchmarks: batched vs host-loop planning throughput at E = 64,
+static vs rebalanced fleet budgets at equal WAN spend, and an async-WAN
+latency sweep (per-region end-to-end freshness at query time).
 
 Acceptance targets (ISSUE 1): >= 5x planning-throughput speedup for the
 batched path over the E-loop host path, and lower fleet NRMSE for the
-rebalanced budget at (approximately) equal WAN bytes.
+rebalanced budget at (approximately) equal WAN bytes.  ISSUE 2 adds the
+latency sweep: heterogeneous per-region link latencies against a shrinking
+window period report p50/p99 window age, the NRMSE actually served at query
+time vs the revised NRMSE, and the late-arrival revision count.
 """
 from __future__ import annotations
 
@@ -83,6 +87,35 @@ def _rebalance_rows():
            f"nrmse_reduction={gain:.1%};byte_delta={byte_delta:.1%}")
 
 
+def _latency_rows():
+    # region0 links sit at ~30ms, region3 at ~105ms (make_topology); sweep
+    # the window period through that band so distant regions go stale first
+    e, r, k, w_len = 16, 4, 6, 128
+    vals, _ = fleet_like(e, r, k, n_points=8 * w_len, seed=3)
+    wins = fleet_windows(vals, w_len)
+    total = 0.2 * e * k * w_len
+
+    for period in (1000.0, 60.0, 20.0):
+        topo = make_topology(r, e // r, k, seed=3)
+        ctrl = BudgetController(total_budget=total, n_sites=e)
+        exp = FleetExperiment(topology=topo, controller=ctrl,
+                              cfg=PlannerConfig(solver="closed_form"),
+                              query_names=("AVG",),
+                              window_period_ms=period)
+        res = exp.run(wins)
+        f = res["freshness_ms"]
+        near = res["freshness_by_region"]["region0"]
+        far = res["freshness_by_region"]["region3"]
+        yield (f"fleet_latency_period{period:g}ms", 0.0,
+               f"age_p50={f['p50_ms']:.0f}ms;age_p99={f['p99_ms']:.0f}ms;"
+               f"region0_p99={near['p99_ms']:.0f}ms;"
+               f"region3_p99={far['p99_ms']:.0f}ms;"
+               f"nrmse_at_query={res['fleet_nrmse_at_query']['AVG']:.5f};"
+               f"nrmse_revised={res['fleet_nrmse']['AVG']:.5f};"
+               f"revisions={res['revisions']}")
+
+
 def run():
     yield from _throughput_rows()
     yield from _rebalance_rows()
+    yield from _latency_rows()

@@ -122,6 +122,8 @@ class EdgePayload:
     mean_imputation: bool
     predictor: np.ndarray              # (k,) int
     stats_digest: dict                 # small header: per-stream mean (for weights)
+    sent_at_ms: float = 0.0            # virtual send time (async transport);
+                                       # rides in the existing 8-byte header
 
     def wan_bytes(self, sample_bytes: int = 4) -> int:
         data = int(sum(int(n) * sample_bytes for n in self.n_real))

@@ -1,12 +1,14 @@
 """Fleet subsystem: geo-distributed multi-edge simulation with batched JAX
 planning and cross-edge WAN budget rebalancing.
 
-topology        — regions, sites, per-link WAN properties.
+topology        — regions, sites, per-link WAN properties (latency/jitter).
 batched_planner — one jitted (E, k, N) planning pass for the whole fleet
                   (block-diagonal stream_stats kernel + vmapped closed-form
                   solver); host_loop_plan is the E-loop baseline it replaces.
-controller      — per-window water-filling of the fleet-wide sample budget.
-runtime         — FleetExperiment: edges -> per-region transports -> cloud.
+controller      — per-window water-filling of the fleet-wide sample budget,
+                  with arrival-lag telemetry from the async WAN.
+runtime         — FleetExperiment: edges -> per-site async transports ->
+                  reorder-buffer clouds (docs/transport.md).
 """
 from repro.fleet.batched_planner import FleetPlan, fleet_plan, host_loop_plan
 from repro.fleet.controller import BudgetController, water_fill

@@ -71,6 +71,8 @@ class BudgetController:
     def __post_init__(self):
         self._demand = np.ones(self.n_sites)
         self._r2 = np.zeros(self.n_sites)
+        self._lag = np.zeros(self.n_sites)
+        self._lag_seen = np.zeros(self.n_sites, bool)
         self._last_budgets = np.full(self.n_sites, self.equal_share)
         self._seen = False
 
@@ -78,6 +80,14 @@ class BudgetController:
     def correlation_strength(self) -> np.ndarray:
         """(E,) EWMA of observed per-site explained-variance fraction."""
         return self._r2.copy()
+
+    @property
+    def arrival_lag_ms(self) -> np.ndarray:
+        """(E,) EWMA of observed per-site WAN delivery lag (send -> cloud
+        arrival, ms) — async-transport telemetry.  A laggy site's payloads
+        answer queries stale; operators read this next to ``demand`` to
+        decide whether bytes or the link itself are the bottleneck."""
+        return self._lag.copy()
 
     @property
     def equal_share(self) -> float:
@@ -98,7 +108,7 @@ class BudgetController:
         return b
 
     def update(self, obs_err: np.ndarray, r2: np.ndarray,
-               objective=None) -> None:
+               objective=None, arrival_lag=None) -> None:
         """Feed one window's per-site observations.
 
         obs_err: (E,) edge-local reconstruction error (any consistent scale).
@@ -108,7 +118,21 @@ class BudgetController:
             ``correlation_strength`` telemetry (reporting/diagnostics).
         objective: (E,) the solver's relaxed eq.-2 value — the predicted
             squared error, used in place of obs_err when that is missing.
+        arrival_lag: (E,) mean WAN delivery lag (ms) of payloads the cloud
+            drained this window; NaN where nothing arrived (the previous
+            EWMA is kept).  Tracked as ``arrival_lag_ms`` telemetry.
         """
+        if arrival_lag is not None:
+            lag = np.asarray(arrival_lag, np.float64)
+            ok = np.isfinite(lag)
+            # a site's first finite observation seeds its EWMA outright —
+            # never blend with the synthetic 0.0 initializer
+            mixed = np.where(self._lag_seen,
+                             (1 - self.ewma) * self._lag
+                             + self.ewma * np.where(ok, lag, 0.0),
+                             np.where(ok, lag, 0.0))
+            self._lag = np.where(ok, mixed, self._lag)
+            self._lag_seen |= ok
         b = np.maximum(self._last_budgets, 1.0)
         err = np.asarray(obs_err, np.float64)
         if objective is not None:

@@ -2,9 +2,10 @@
 
 ``FleetExperiment`` scales the single-edge runtime (repro.streaming.runtime)
 to a whole fleet while reusing its building blocks unchanged: per-site
-``Transport`` (byte/cost accounting + injectable drops, configured from the
-topology's :class:`LinkSpec`), per-site ``CloudNode`` (window reconstruction,
-gap detection, stale-window serving) and the same fault semantics —
+``AsyncTransport`` (byte/cost accounting + injectable drops + event-queue
+delivery, configured from the topology's :class:`LinkSpec`), per-site
+``ReorderCloudNode`` (window reconstruction, out-of-order ingestion behind
+a staleness deadline, stale-window serving) and the same fault semantics —
 stragglers contribute N_i = 0 tuples and are covered by imputation; dropped
 payloads are served stale.
 
@@ -13,10 +14,13 @@ What is new at fleet scale:
     sites per window (``planning='host_loop'`` keeps the E-loop for
     comparison);
   * a :class:`BudgetController` rebalances the fleet-wide WAN sample budget
-    across sites each window from observed correlation strength and
-    edge-local reconstruction error;
-  * results aggregate per region (NRMSE, WAN bytes, WAN cost) as well as
-    fleet-wide.
+    across sites each window from observed correlation strength, edge-local
+    reconstruction error and WAN arrival lag;
+  * heterogeneous per-site link latency is live (docs/transport.md): windows
+    travel the WAN as delivery events, queries are answered from what has
+    arrived, and late payloads revise results within the deadline;
+  * results aggregate per region (NRMSE, WAN bytes, WAN cost, freshness)
+    as well as fleet-wide.
 """
 from __future__ import annotations
 
@@ -32,7 +36,8 @@ from repro.core.types import CompactModel, EdgePayload, PlannerConfig
 from repro.fleet.batched_planner import fleet_plan
 from repro.fleet.controller import BudgetController
 from repro.fleet.topology import FleetTopology
-from repro.streaming.runtime import CloudNode, Transport
+from repro.streaming.events import (AsyncTransport, ReorderCloudNode,
+                                    freshness_percentiles)
 
 import jax.numpy as jnp
 
@@ -65,15 +70,21 @@ class FleetExperiment:
     interpret: bool = False            # kernel interpret mode (CPU testing)
     straggler_drop: Optional[Callable[[int, int, int], bool]] = None
     query_names: tuple = ("AVG", "VAR")
+    window_period_ms: float = 1000.0   # virtual tumbling-window cadence
+    staleness_deadline_ms: float = float("inf")
 
     def __post_init__(self):
         sites = self.topology.sites
-        self.transports = [Transport(drop_prob=s.link.drop_prob,
-                                     seed=self.cfg.seed + s.site_id,
-                                     cost_per_byte=s.link.cost_per_byte,
-                                     latency_ms=s.link.latency_ms)
+        self.transports = [AsyncTransport(drop_prob=s.link.drop_prob,
+                                          seed=self.cfg.seed + s.site_id,
+                                          cost_per_byte=s.link.cost_per_byte,
+                                          latency_ms=s.link.latency_ms,
+                                          jitter_ms=s.link.jitter_ms)
                            for s in sites]
-        self.clouds = [CloudNode(query_names=self.query_names) for _ in sites]
+        self.clouds = [ReorderCloudNode(query_names=self.query_names,
+                                        window_period_ms=self.window_period_ms,
+                                        deadline_ms=self.staleness_deadline_ms)
+                       for _ in sites]
         self.plan_seconds = 0.0
         self.plan_windows = 0
         self._rng = np.random.default_rng(self.cfg.seed)
@@ -140,15 +151,41 @@ class FleetExperiment:
 
     # ----------------------------------------------------------------- run
     def run(self, fleet_windows: list[np.ndarray]) -> dict:
-        """fleet_windows: list over time of (E, k, N) float arrays."""
+        """fleet_windows: list over time of (E, k, N) float arrays.
+
+        Event-driven on a virtual clock: window ``wid`` is planned and sent
+        at ``wid * window_period_ms``, each site's query is answered one
+        period later from whatever its uplink has delivered by then, and
+        late-but-within-deadline arrivals revise their window's entry in the
+        (revised) estimate table retroactively.  Heterogeneous per-site
+        ``LinkSpec.latency_ms`` therefore shows up as per-site window age
+        (``freshness_ms``, ``site_arrival_lag_ms``) instead of being a dead
+        accounting field.
+        """
         E, k, n = fleet_windows[0].shape
+        T = len(fleet_windows)
         reg_idx = self.topology.region_of()
         qnames = self.query_names
-        est = {q: [] for q in qnames}           # each entry (E, k)
-        tru = {q: [] for q in qnames}
+        period = self.window_period_ms
+        est = {q: np.full((T, E, k), np.nan) for q in qnames}    # revised
+        est_q = {q: np.full((T, E, k), np.nan) for q in qnames}  # at query
+        tru = {q: np.full((T, E, k), np.nan) for q in qnames}
+        ages = np.full((T, E), np.nan)
         budget_history = []
 
+        def _row(res):
+            return {q: (np.asarray(res[q]) if len(res.get(q, [])) == k
+                        else np.full(k, np.nan)) for q in qnames}
+
+        def _apply(s, outcome):
+            if outcome.kind == "revised":
+                res = _row(self.clouds[s].query(outcome.reconstruction))
+                for q in qnames:
+                    est[q][outcome.window_id, s] = res[q]
+
         for wid, w in enumerate(fleet_windows):
+            now = wid * period
+            q_time = now + period
             w = np.asarray(w, np.float32)
             counts = np.full((E, k), n, np.int64)
             if self.straggler_drop is not None:
@@ -161,16 +198,27 @@ class FleetExperiment:
             plan = self._plan(wid, w, counts, budgets)
 
             obs_err = np.zeros(E)
+            lag_obs = np.full(E, np.nan)
             for s in range(E):
                 payload = self._payload(plan, s, wid, w[s], counts[s])
-                rec = self.clouds[s].ingest(self.transports[s].send(payload))
-                res = self.clouds[s].query(rec)
-                full = [w[s, i] for i in range(k)]
-                res_true = self.clouds[s].query(full)
+                payload = dataclasses.replace(payload, sent_at_ms=now)
+                self.transports[s].send(payload, now_ms=now)
+                lags = []
+                for ev in self.transports[s].drain(q_time):
+                    lags.append(ev.at_ms - ev.payload.sent_at_ms)
+                    _apply(s, self.clouds[s].ingest_event(ev.payload,
+                                                          now_ms=ev.at_ms))
+                if lags:
+                    lag_obs[s] = float(np.mean(lags))
+                rec, age, _ = self.clouds[s].serve(wid, q_time)
+                res = _row(self.clouds[s].query(rec))
+                res_true = _row(self.clouds[s].query([w[s, i]
+                                                      for i in range(k)]))
                 for q in qnames:
-                    est[q].append(res[q] if len(res.get(q, [])) == k
-                                  else np.full(k, np.nan))
-                    tru[q].append(res_true[q])
+                    est[q][wid, s] = res[q]
+                    est_q[q][wid, s] = res[q]
+                    tru[q][wid, s] = res_true[q]
+                ages[wid, s] = age
                 # edge-local error proxy: the edge knows its true window and
                 # its own payload, so it can score the reconstruction the
                 # cloud *would* produce — feeds the controller for free
@@ -181,16 +229,27 @@ class FleetExperiment:
                 obs_err[s] = np.nanmean(np.abs(e_mean - t_mean)
                                         / np.maximum(np.abs(t_mean), 1e-6))
             self.controller.update(obs_err, plan["r2"],
-                                   objective=plan.get("objective"))
+                                   objective=plan.get("objective"),
+                                   arrival_lag=lag_obs)
+
+        # drain in-flight payloads: late revisions and gap accounting
+        for s in range(E):
+            for ev in self.transports[s].drain(float("inf")):
+                _apply(s, self.clouds[s].ingest_event(ev.payload,
+                                                      now_ms=ev.at_ms))
+            self.clouds[s].finalize(T)
 
         # ------------------------------------------------- aggregate errors
-        T = len(fleet_windows)
         nrmse_site = {}                         # {q: (E, k)}
+        nrmse_site_q = {}
         for q in qnames:
-            e_arr = np.asarray(est[q]).reshape(T, E, k).transpose(1, 2, 0)
-            t_arr = np.asarray(tru[q]).reshape(T, E, k).transpose(1, 2, 0)
+            e_arr = est[q].transpose(1, 2, 0)   # (E, k, T)
+            eq_arr = est_q[q].transpose(1, 2, 0)
+            t_arr = tru[q].transpose(1, 2, 0)
             nrmse_site[q] = np.asarray(
                 [Q.nrmse_table(e_arr[s], t_arr[s]) for s in range(E)])
+            nrmse_site_q[q] = np.asarray(
+                [Q.nrmse_table(eq_arr[s], t_arr[s]) for s in range(E)])
 
         region_nrmse = {name: {} for name in self.topology.region_names}
         for r, name in enumerate(self.topology.region_names):
@@ -205,9 +264,15 @@ class FleetExperiment:
             cost_by_region[site.region] += self.transports[s].bytes_cost
         total_tuples = T * E * k * n
 
+        freshness_by_region = {
+            name: freshness_percentiles(ages[:, reg_idx == r])
+            for r, name in enumerate(self.topology.region_names)}
+
         return {
             "fleet_nrmse": {q: float(np.nanmean(nrmse_site[q]))
                             for q in qnames},
+            "fleet_nrmse_at_query": {q: float(np.nanmean(nrmse_site_q[q]))
+                                     for q in qnames},
             "region_nrmse": region_nrmse,
             "site_nrmse": nrmse_site,
             "wan_bytes": int(sum(t.bytes_sent for t in self.transports)),
@@ -216,6 +281,13 @@ class FleetExperiment:
             "wan_cost_by_region": cost_by_region,
             "full_bytes": total_tuples * 4,
             "gaps": int(sum(c.gaps for c in self.clouds)),
+            "revisions": int(sum(c.revisions for c in self.clouds)),
+            "late_drops": int(sum(c.late_drops for c in self.clouds)),
+            "duplicates": int(sum(c.duplicates for c in self.clouds)),
+            "freshness_ms": freshness_percentiles(ages),
+            "freshness_by_region": freshness_by_region,
+            "window_age_ms": ages,
+            "site_arrival_lag_ms": self.controller.arrival_lag_ms,
             "plan_seconds": self.plan_seconds,
             "plan_windows": self.plan_windows,
             "budget_history": np.asarray(budget_history),

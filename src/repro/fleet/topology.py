@@ -22,6 +22,7 @@ class LinkSpec:
 
     cost_per_byte: float = 1.0     # relative $ (or energy) per byte
     latency_ms: float = 40.0       # one-way propagation latency
+    jitter_ms: float = 0.0         # per-payload U(0, jitter) delay on top
     drop_prob: float = 0.0         # per-payload loss probability
 
 
@@ -77,9 +78,12 @@ class FleetTopology:
 
 def make_topology(n_regions: int, sites_per_region: int, k: int,
                   seed: int = 0, drop_prob: float = 0.0,
-                  hetero_links: bool = True) -> FleetTopology:
+                  hetero_links: bool = True, latency_scale: float = 1.0,
+                  jitter_ms: float = 0.0) -> FleetTopology:
     """Synthetic geo topology: per-region WAN character (distant regions pay
-    more per byte and see higher latency), per-site jitter on top."""
+    more per byte and see higher latency), per-site jitter on top.
+    ``latency_scale`` scales every link latency (0 => instantaneous WAN);
+    ``jitter_ms`` adds per-payload delivery jitter (async transport)."""
     rng = np.random.default_rng(seed)
     regions = []
     sid = 0
@@ -90,7 +94,8 @@ def make_topology(n_regions: int, sites_per_region: int, k: int,
         for _ in range(sites_per_region):
             jitter = rng.uniform(0.9, 1.1) if hetero_links else 1.0
             link = LinkSpec(cost_per_byte=base_cost * jitter,
-                            latency_ms=base_lat * jitter,
+                            latency_ms=base_lat * jitter * latency_scale,
+                            jitter_ms=jitter_ms,
                             drop_prob=drop_prob)
             sites.append(SiteSpec(site_id=sid, region=f"region{r}", k=k,
                                   link=link))

@@ -1,5 +1,9 @@
 from repro.streaming.runtime import (EdgeNode, CloudNode, Transport,
                                      StreamingExperiment, run_experiment)
+from repro.streaming.events import (AsyncTransport, DeliveryEvent, EventQueue,
+                                    IngestOutcome, ReorderCloudNode,
+                                    freshness_percentiles)
 
 __all__ = ["EdgeNode", "CloudNode", "Transport", "StreamingExperiment",
-           "run_experiment"]
+           "run_experiment", "AsyncTransport", "DeliveryEvent", "EventQueue",
+           "IngestOutcome", "ReorderCloudNode", "freshness_percentiles"]

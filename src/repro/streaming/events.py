@@ -1,0 +1,218 @@
+"""Event-driven WAN transport and out-of-order cloud ingestion.
+
+The lock-step runtime pretended the WAN was instantaneous: ``Transport``
+recorded ``latency_ms`` but every payload was ingested in the same loop
+iteration that produced it.  This module models *when* payloads actually
+arrive on a virtual clock:
+
+  * :class:`EventQueue` — a deterministic min-heap of delivery events keyed
+    by (virtual time, send sequence); ties resolve in send order so the
+    zero-latency schedule is exactly the lock-step schedule.
+  * :class:`AsyncTransport` — subsumes ``Transport`` (same byte/cost/drop
+    accounting API).  ``send(payload, now_ms)`` enqueues a delivery event at
+    ``now_ms + latency_ms + U(0, jitter_ms)``; drops simply never enqueue
+    and reordering falls out of jitter naturally.
+  * :class:`ReorderCloudNode` — a ``CloudNode`` with a reorder buffer and a
+    configurable staleness deadline.  A window is *due* one period after it
+    was sent (the tumbling-window cadence is the processing budget).  A
+    payload arriving past its due time but within ``deadline_ms`` is
+    reconstructed retroactively and its query result re-emitted with a
+    ``revised`` flag; past the deadline it falls back to the existing
+    gap-serving path (the cloud keeps serving the freshest earlier window).
+    Duplicate deliveries (retransmits) are idempotent.
+
+Timing model (shared by StreamingExperiment / FleetExperiment):
+
+    t_sent(wid)  = wid * window_period_ms          # edge closes the window
+    t_due(wid)   = t_sent(wid) + window_period_ms  # query is answered here
+    t_arrive     = t_sent + latency_ms + jitter    # delivery event
+    staleness    = t_arrive - t_due(wid)           # >0 means late
+
+With all latencies 0 and an infinite deadline every payload arrives before
+its due time in send order, and the event-driven run is bit-for-bit the
+lock-step run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from typing import Optional
+
+import numpy as np
+
+from repro.core.reconstruct import reconstruct_window
+from repro.core.types import EdgePayload
+from repro.streaming.runtime import CloudNode, Transport
+
+
+@dataclasses.dataclass(frozen=True)
+class DeliveryEvent:
+    """One payload materializing at the cloud at virtual time ``at_ms``."""
+
+    at_ms: float
+    seq: int                       # send order; deterministic tie-break
+    payload: EdgePayload
+
+
+class EventQueue:
+    """Min-heap of :class:`DeliveryEvent` ordered by (at_ms, seq)."""
+
+    def __init__(self):
+        self._heap: list[tuple[float, int, EdgePayload]] = []
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def push(self, at_ms: float, seq: int, payload: EdgePayload) -> None:
+        heapq.heappush(self._heap, (float(at_ms), int(seq), payload))
+
+    def pop_until(self, until_ms: float) -> list[DeliveryEvent]:
+        """Pop every event with ``at_ms <= until_ms`` in delivery order."""
+        out = []
+        while self._heap and self._heap[0][0] <= until_ms:
+            t, seq, p = heapq.heappop(self._heap)
+            out.append(DeliveryEvent(at_ms=t, seq=seq, payload=p))
+        return out
+
+
+@dataclasses.dataclass
+class AsyncTransport(Transport):
+    """WAN link whose deliveries are events on a virtual clock.
+
+    Inherits all of ``Transport``'s accounting (bytes, cost, drops, latency
+    totals).  ``jitter_ms`` adds U(0, jitter_ms) per payload from a separate
+    RNG stream, so enabling jitter never perturbs the drop sequence.
+    """
+
+    jitter_ms: float = 0.0
+
+    def __post_init__(self):
+        super().__post_init__()
+        self._jitter_rng = np.random.default_rng(self.seed + 0x5EED)
+        self._queue = EventQueue()
+        self._seq = 0
+
+    @classmethod
+    def from_transport(cls, t: Transport) -> "AsyncTransport":
+        if isinstance(t, AsyncTransport):
+            return t
+        return cls(drop_prob=t.drop_prob, seed=t.seed,
+                   cost_per_byte=t.cost_per_byte, latency_ms=t.latency_ms)
+
+    @property
+    def in_flight(self) -> int:
+        return len(self._queue)
+
+    def send(self, payload: EdgePayload,
+             now_ms: float = 0.0) -> Optional[EdgePayload]:
+        sent = Transport.send(self, payload)
+        if sent is None:                       # dropped: no delivery event
+            return None
+        delay = self.latency_ms
+        if self.jitter_ms > 0.0:
+            delay += float(self._jitter_rng.uniform(0.0, self.jitter_ms))
+        self._queue.push(now_ms + delay, self._seq, sent)
+        self._seq += 1
+        return sent
+
+    def drain(self, until_ms: float) -> list[DeliveryEvent]:
+        """All deliveries due by ``until_ms``, in (time, send-order)."""
+        return self._queue.pop_until(until_ms)
+
+
+@dataclasses.dataclass(frozen=True)
+class IngestOutcome:
+    """What the cloud did with one delivery."""
+
+    kind: str                       # "fresh" | "revised" | "late_dropped" | "duplicate"
+    window_id: int
+    staleness_ms: float             # arrival - due; <= 0 means on time
+    reconstruction: Optional[list] = None
+
+
+@dataclasses.dataclass
+class ReorderCloudNode(CloudNode):
+    """CloudNode with an out-of-order reorder buffer and staleness deadline.
+
+    ``ingest_event`` replaces the lock-step ``ingest`` for event-driven
+    runs; ``serve(wid, now_ms)`` answers a query with the freshest arrived
+    window ``<= wid`` (the gap-serving path when wid itself is missing).
+    """
+
+    window_period_ms: float = 1000.0
+    deadline_ms: float = math.inf   # staleness allowance past the due time
+    revisions: int = 0
+    late_drops: int = 0
+    duplicates: int = 0
+
+    def __post_init__(self):
+        # O(1) state per cloud: experiment queries are monotone in wid and a
+        # delivery's wid never exceeds the current query wid (latency >= 0),
+        # so only the freshest arrived window is ever served — no need to
+        # retain every reconstruction.  Integer sets cover duplicate
+        # detection and end-of-run gap accounting.
+        self._best_wid: int = -1
+        self._best_rec: Optional[list[np.ndarray]] = None
+        self._best_sent_at: float = 0.0
+        self._rec_wids: set[int] = set()
+        self._ingested: set[int] = set()
+        self._frontier: int = -1    # highest wid whose query was answered
+
+    def due_ms(self, payload: EdgePayload) -> float:
+        return payload.sent_at_ms + self.window_period_ms
+
+    def ingest_event(self, payload: EdgePayload,
+                     now_ms: float) -> IngestOutcome:
+        wid = int(payload.window_id)
+        staleness = now_ms - self.due_ms(payload)
+        if wid in self._ingested:
+            self.duplicates += 1
+            return IngestOutcome("duplicate", wid, staleness)
+        self._ingested.add(wid)
+        if staleness > self.deadline_ms:
+            self.late_drops += 1
+            return IngestOutcome("late_dropped", wid, staleness)
+        rec = reconstruct_window(payload)
+        self._rec_wids.add(wid)
+        if wid > self._best_wid:
+            self._best_wid = wid
+            self._best_rec = rec
+            self._best_sent_at = float(payload.sent_at_ms)
+        self.windows_seen += 1
+        self.last_reconstruction = rec
+        if wid <= self._frontier:   # query already answered -> re-emit
+            self.revisions += 1
+            return IngestOutcome("revised", wid, staleness, rec)
+        return IngestOutcome("fresh", wid, staleness, rec)
+
+    def serve(self, wid: int, now_ms: float):
+        """Freshest reconstruction for a query over window ``wid``.
+
+        Returns ``(reconstruction, age_ms, served_wid)``; ``age_ms`` is the
+        age of the served window at query time (0 when wid itself arrived
+        on time with period == age reference).  Empty list / NaN when no
+        window <= wid has arrived yet.  Queries must be issued with
+        non-decreasing ``wid`` (the experiment loops guarantee this).
+        """
+        self._frontier = max(self._frontier, wid)
+        if self._best_rec is None or self._best_wid > wid:
+            return [], float("nan"), None
+        age = now_ms - (self._best_sent_at + self.window_period_ms)
+        return self._best_rec, float(age), self._best_wid
+
+    def finalize(self, n_windows: int) -> list[int]:
+        """Close the books: windows never reconstructed count as gaps."""
+        missing = [w for w in range(n_windows) if w not in self._rec_wids]
+        self.gaps += len(missing)
+        return missing
+
+
+def freshness_percentiles(ages_ms: np.ndarray) -> dict:
+    """p50/p99 window age at query time over finite entries (ms)."""
+    a = np.asarray(ages_ms, np.float64).ravel()
+    a = a[np.isfinite(a)]
+    if a.size == 0:
+        return {"p50_ms": float("nan"), "p99_ms": float("nan")}
+    return {"p50_ms": float(np.percentile(a, 50)),
+            "p99_ms": float(np.percentile(a, 99))}

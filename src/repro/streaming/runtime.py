@@ -4,6 +4,9 @@ Replaces the paper's Storm/Kinesis pipeline with an explicit, testable
 runtime: EdgeNode caches a tumbling window and runs the Algorithm-1 planner;
 Transport moves payloads with byte accounting, injectable failures and
 latency; CloudNode reconstructs windows and answers aggregate queries.
+The experiment loop itself is event-driven (repro.streaming.events): sends
+enqueue delivery events on a virtual clock and the cloud ingests payloads
+out of order behind a staleness deadline — see docs/transport.md.
 
 Fault tolerance:
   * device straggler/failure — a stream that misses the window deadline
@@ -125,48 +128,118 @@ class CloudNode:
 
 @dataclasses.dataclass
 class StreamingExperiment:
+    """Event-driven edge->WAN->cloud run on a virtual clock.
+
+    Window ``wid`` closes at the edge at ``wid * window_period_ms``; its
+    query is answered one period later (``t_due``), from whatever has
+    arrived by then.  Payloads landing after their due time but within
+    ``staleness_deadline_ms`` revise the already-emitted result
+    retroactively (``revisions`` count, ``nrmse`` reflects the revised
+    table, ``nrmse_at_query`` what was actually served on time); payloads
+    past the deadline fall back to stale serving and count as ``gaps``.
+
+    With zero latency and an infinite deadline this reproduces the
+    lock-step runtime bit-for-bit (tests/test_async_transport.py).
+    """
+
     edge: EdgeNode
     cloud: CloudNode
     transport: Transport
+    window_period_ms: float = 1000.0
+    staleness_deadline_ms: Optional[float] = None
+
+    def __post_init__(self):
+        from repro.streaming.events import AsyncTransport, ReorderCloudNode
+        if not isinstance(self.transport, AsyncTransport):
+            self.transport = AsyncTransport.from_transport(self.transport)
+        self._user_cloud = None
+        if not isinstance(self.cloud, ReorderCloudNode):
+            # upgrade a plain CloudNode; its counters are mirrored back
+            # after run() so callers holding the original still see them
+            self._user_cloud = self.cloud
+            self.cloud = ReorderCloudNode(query_names=self.cloud.query_names)
+        self.cloud.window_period_ms = self.window_period_ms
+        if self.staleness_deadline_ms is not None:
+            self.cloud.deadline_ms = self.staleness_deadline_ms
 
     def run(self, windows: list[WindowBatch]) -> dict:
+        from repro.streaming.events import freshness_percentiles
         k = windows[0].k
+        T = len(windows)
         qnames = self.cloud.query_names
-        est = {q: [] for q in qnames}
-        tru = {q: [] for q in qnames}
-        for w in windows:
-            payload = self.edge.process_window(w)
-            rec = self.cloud.ingest(self.transport.send(payload))
+        period = self.window_period_ms
+        est = {q: np.full((T, k), np.nan) for q in qnames}       # revised
+        est_q = {q: np.full((T, k), np.nan) for q in qnames}     # at query
+        tru = {q: np.full((T, k), np.nan) for q in qnames}
+        ages = np.full(T, np.nan)
+        revised = np.zeros(T, bool)
+
+        def _record(wid, rec, tables):
             res = self.cloud.query(rec)
-            full = [np.asarray(w.values[i, : int(w.counts[i])]) for i in range(k)]
-            res_true = self.cloud.query(full)
             for q in qnames:
-                if len(res.get(q, [])) == k:
-                    est[q].append(res[q])
-                else:                      # nothing reconstructable yet
-                    est[q].append(np.full(k, np.nan))
-                tru[q].append(res_true[q])
-        nrmse = {}
-        for q in qnames:
-            e = np.stack(est[q], axis=1)    # (k, T)
-            t = np.stack(tru[q], axis=1)
-            nrmse[q] = Q.nrmse_table(e, t)
+                row = res.get(q, [])
+                vals = np.asarray(row) if len(row) == k else np.full(k, np.nan)
+                for tbl in tables:
+                    tbl[q][wid] = vals
+
+        def _apply(outcome):
+            if outcome.kind == "revised":
+                _record(outcome.window_id, outcome.reconstruction, (est,))
+                revised[outcome.window_id] = True
+
+        for wid, w in enumerate(windows):
+            now = wid * period
+            q_time = now + period
+            payload = self.edge.process_window(w)
+            payload = dataclasses.replace(payload, sent_at_ms=now)
+            self.transport.send(payload, now_ms=now)
+            for ev in self.transport.drain(q_time):
+                _apply(self.cloud.ingest_event(ev.payload, now_ms=ev.at_ms))
+            rec, age, _ = self.cloud.serve(wid, q_time)
+            _record(wid, rec, (est, est_q))
+            ages[wid] = age
+            full = [np.asarray(w.values[i, : int(w.counts[i])])
+                    for i in range(k)]
+            _record(wid, full, (tru,))
+
+        # in-flight payloads may still land within the deadline and revise
+        for ev in self.transport.drain(float("inf")):
+            _apply(self.cloud.ingest_event(ev.payload, now_ms=ev.at_ms))
+        self.cloud.finalize(T)
+        if self._user_cloud is not None:
+            self._user_cloud.gaps = self.cloud.gaps
+            self._user_cloud.windows_seen = self.cloud.windows_seen
+            self._user_cloud.last_reconstruction = self.cloud.last_reconstruction
+
+        nrmse = {q: Q.nrmse_table(est[q].T, tru[q].T) for q in qnames}
+        nrmse_q = {q: Q.nrmse_table(est_q[q].T, tru[q].T) for q in qnames}
         total_tuples = int(sum(int(np.sum(w.counts)) for w in windows))
         return {
             "nrmse": nrmse,
+            "nrmse_at_query": nrmse_q,
             "wan_bytes": self.transport.bytes_sent,
             "full_bytes": total_tuples * 4,
             "plan_seconds": self.edge.plan_seconds,
             "gaps": self.cloud.gaps,
+            "revisions": self.cloud.revisions,
+            "late_drops": self.cloud.late_drops,
+            "duplicates": self.cloud.duplicates,
+            "window_age_ms": ages,
+            "revised_windows": revised,
+            "freshness_ms": freshness_percentiles(ages),
         }
 
 
 def run_experiment(values: np.ndarray, window: int, budget_fraction: float,
                    method: str, cfg: Optional[PlannerConfig] = None,
                    drop_prob: float = 0.0, straggler_drop=None,
-                   query_names=("AVG", "VAR", "MIN", "MAX")) -> dict:
+                   query_names=("AVG", "VAR", "MIN", "MAX"),
+                   latency_ms: float = 0.0, jitter_ms: float = 0.0,
+                   window_period_ms: float = 1000.0,
+                   staleness_deadline_ms: Optional[float] = None) -> dict:
     """One (dataset, method, budget) experiment over all tumbling windows."""
     from repro.data.streams import windows_from_matrix
+    from repro.streaming.events import AsyncTransport
 
     cfg = cfg or PlannerConfig()
     windows = windows_from_matrix(values, window)
@@ -174,6 +247,9 @@ def run_experiment(values: np.ndarray, window: int, budget_fraction: float,
         edge=EdgeNode(cfg=cfg, budget_fraction=budget_fraction, method=method,
                       straggler_drop=straggler_drop),
         cloud=CloudNode(query_names=query_names),
-        transport=Transport(drop_prob=drop_prob, seed=cfg.seed),
+        transport=AsyncTransport(drop_prob=drop_prob, seed=cfg.seed,
+                                 latency_ms=latency_ms, jitter_ms=jitter_ms),
+        window_period_ms=window_period_ms,
+        staleness_deadline_ms=staleness_deadline_ms,
     )
     return exp.run(windows)

@@ -11,14 +11,23 @@ import pytest
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 # ---------------------------------------------------------------------------
-# hypothesis shim: several test modules import `hypothesis` at module scope;
-# when it is not installed, collecting them used to abort the whole suite.
-# Install a stub whose @given replaces the test with a runtime skip so the
-# non-property tests in those modules still run.
+# hypothesis fallback: several test modules import `hypothesis` at module
+# scope; when it is not installed, collecting them used to abort the whole
+# suite.  CI installs the real package (scripts/ci.sh) and sets
+# REPRO_REQUIRE_HYPOTHESIS=1, which turns a missing install into a hard
+# error — the property tests genuinely run there.  Only bare containers
+# without the package fall back to the stub, whose @given replaces each
+# property test with a runtime skip so the non-property tests in those
+# modules still run.
 # ---------------------------------------------------------------------------
 try:
     import hypothesis  # noqa: F401
 except ImportError:
+    if os.environ.get("REPRO_REQUIRE_HYPOTHESIS"):
+        raise RuntimeError(
+            "REPRO_REQUIRE_HYPOTHESIS is set but `hypothesis` is not "
+            "importable — the scripts/ci.sh install step failed; property "
+            "tests must not be silently skipped in CI.")
     def _strategy(*_a, **_k):
         return None
 

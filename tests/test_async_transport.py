@@ -1,0 +1,325 @@
+"""Async WAN transport + out-of-order cloud ingestion (repro.streaming.events).
+
+Covers the ISSUE-2 acceptance matrix:
+  * zero latency + infinite deadline == lock-step bit-for-bit (streaming
+    AND fleet, checked against inline lock-step reference loops built from
+    the unchanged primitives),
+  * late-within-deadline arrival -> retroactive revision,
+  * past-deadline arrival -> gap-serving fallback,
+  * duplicate delivery idempotence,
+  * event-queue determinism (and reordering) under a fixed seed.
+"""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import queries as Q
+from repro.core.planner import plan_window
+from repro.core.types import PlannerConfig, WindowBatch
+from repro.data import fleet_like, fleet_windows, smartcity_like, turbine_like
+from repro.data.streams import windows_from_matrix
+from repro.fleet import BudgetController, FleetExperiment, make_topology
+from repro.streaming import (AsyncTransport, CloudNode, EdgeNode,
+                             ReorderCloudNode, StreamingExperiment, Transport)
+
+
+def _payload_at(seed, wid, sent_at_ms, k=4, window=64):
+    vals, _ = turbine_like(window, seed=seed, k=k)
+    batch = windows_from_matrix(vals, window)[0]
+    p, _ = plan_window(batch, 0.4 * k * window, PlannerConfig())
+    object.__setattr__(p, "window_id", wid)
+    return dataclasses.replace(p, sent_at_ms=sent_at_ms)
+
+
+# --------------------------------------------------- lock-step equivalence
+
+def _lockstep_streaming_reference(vals, window, frac, method, drop_prob, seed):
+    """The pre-async loop, verbatim, from the unchanged primitives."""
+    cfg = PlannerConfig(seed=seed)
+    windows = windows_from_matrix(vals, window)
+    edge = EdgeNode(cfg=cfg, budget_fraction=frac, method=method)
+    cloud = CloudNode(query_names=("AVG", "VAR"))
+    transport = Transport(drop_prob=drop_prob, seed=cfg.seed)
+    k = windows[0].k
+    est = {q: [] for q in cloud.query_names}
+    tru = {q: [] for q in cloud.query_names}
+    for w in windows:
+        payload = edge.process_window(w)
+        rec = cloud.ingest(transport.send(payload))
+        res = cloud.query(rec)
+        full = [np.asarray(w.values[i, : int(w.counts[i])]) for i in range(k)]
+        res_true = cloud.query(full)
+        for q in cloud.query_names:
+            est[q].append(res[q] if len(res.get(q, [])) == k
+                          else np.full(k, np.nan))
+            tru[q].append(res_true[q])
+    nrmse = {q: Q.nrmse_table(np.stack(est[q], axis=1),
+                              np.stack(tru[q], axis=1))
+             for q in cloud.query_names}
+    return nrmse, transport.bytes_sent, cloud.gaps
+
+
+@pytest.mark.parametrize("drop_prob", [0.0, 0.5])
+def test_streaming_zero_latency_matches_lockstep_bitwise(drop_prob):
+    vals, _ = smartcity_like(768, seed=1)
+    ref_nrmse, ref_bytes, ref_gaps = _lockstep_streaming_reference(
+        vals, 256, 0.3, "model", drop_prob, seed=0)
+    exp = StreamingExperiment(
+        edge=EdgeNode(cfg=PlannerConfig(seed=0), budget_fraction=0.3,
+                      method="model"),
+        cloud=CloudNode(query_names=("AVG", "VAR")),
+        transport=Transport(drop_prob=drop_prob, seed=0),   # latency 0
+    )
+    r = exp.run(windows_from_matrix(vals, 256))
+    for q in ref_nrmse:
+        np.testing.assert_array_equal(r["nrmse"][q], ref_nrmse[q])
+        np.testing.assert_array_equal(r["nrmse_at_query"][q], ref_nrmse[q])
+    assert r["wan_bytes"] == ref_bytes
+    assert r["gaps"] == ref_gaps
+    assert r["revisions"] == 0
+
+
+def _lockstep_fleet_reference(topo, ctrl, cfg, wins):
+    """The pre-async FleetExperiment.run loop, verbatim, driven through the
+    unchanged plain Transport/CloudNode primitives."""
+    exp = FleetExperiment(topology=topo, controller=ctrl, cfg=cfg,
+                          query_names=("AVG",))
+    from repro.core.reconstruct import reconstruct_window
+    sites = topo.sites
+    transports = [Transport(drop_prob=s.link.drop_prob,
+                            seed=cfg.seed + s.site_id,
+                            cost_per_byte=s.link.cost_per_byte,
+                            latency_ms=s.link.latency_ms) for s in sites]
+    clouds = [CloudNode(query_names=("AVG",)) for _ in sites]
+    E, k, n = wins[0].shape
+    est, tru = [], []
+    for wid, w in enumerate(wins):
+        w = np.asarray(w, np.float32)
+        counts = np.full((E, k), n, np.int64)
+        budgets = np.maximum(np.floor(ctrl.budgets()), 2.0)
+        plan = exp._plan(wid, w, counts, budgets)
+        obs_err = np.zeros(E)
+        for s in range(E):
+            payload = exp._payload(plan, s, wid, w[s], counts[s])
+            rec = clouds[s].ingest(transports[s].send(payload))
+            res = clouds[s].query(rec)
+            res_true = clouds[s].query([w[s, i] for i in range(k)])
+            est.append(res["AVG"] if len(res.get("AVG", [])) == k
+                       else np.full(k, np.nan))
+            tru.append(res_true["AVG"])
+            edge_rec = reconstruct_window(payload)
+            t_mean = np.asarray([np.mean(w[s, i]) for i in range(k)])
+            e_mean = np.asarray([np.mean(r) if len(r) else np.nan
+                                 for r in edge_rec])
+            obs_err[s] = np.nanmean(np.abs(e_mean - t_mean)
+                                    / np.maximum(np.abs(t_mean), 1e-6))
+        ctrl.update(obs_err, plan["r2"], objective=plan.get("objective"))
+    T = len(wins)
+    e_arr = np.asarray(est).reshape(T, E, k).transpose(1, 2, 0)
+    t_arr = np.asarray(tru).reshape(T, E, k).transpose(1, 2, 0)
+    site = np.asarray([Q.nrmse_table(e_arr[s], t_arr[s]) for s in range(E)])
+    return (float(np.nanmean(site)), site,
+            int(sum(t.bytes_sent for t in transports)))
+
+
+def test_fleet_zero_latency_matches_lockstep_bitwise():
+    E, R, k, W = 4, 2, 4, 64
+    vals, _ = fleet_like(E, R, k, n_points=3 * W, seed=5)
+    wins = fleet_windows(vals, W)
+    cfg = PlannerConfig(solver="closed_form")
+
+    def topo():
+        return make_topology(R, E // R, k, seed=5, latency_scale=0.0)
+
+    def ctrl():
+        return BudgetController(total_budget=0.3 * E * k * W, n_sites=E)
+
+    ref_fleet, ref_site, ref_bytes = _lockstep_fleet_reference(
+        topo(), ctrl(), cfg, wins)
+    exp = FleetExperiment(topology=topo(), controller=ctrl(), cfg=cfg,
+                          query_names=("AVG",))
+    r = exp.run(wins)
+    assert r["fleet_nrmse"]["AVG"] == ref_fleet
+    np.testing.assert_array_equal(r["site_nrmse"]["AVG"], ref_site)
+    assert r["wan_bytes"] == ref_bytes
+    assert r["revisions"] == 0 and r["gaps"] == 0
+    assert r["freshness_ms"]["p99_ms"] == 0.0
+
+
+# ------------------------------------------------- late arrival semantics
+
+def test_late_within_deadline_revises_retroactively():
+    vals, _ = smartcity_like(1024, seed=2)
+    from repro.streaming import run_experiment
+    r0 = run_experiment(vals, 256, 0.3, "model", query_names=("AVG",))
+    r_late = run_experiment(vals, 256, 0.3, "model", query_names=("AVG",),
+                            latency_ms=1500.0)       # 1.5 x period, inf deadline
+    assert r_late["revisions"] >= 1
+    assert r_late["revised_windows"].any()
+    # revised table restores every window's own reconstruction -> identical
+    np.testing.assert_array_equal(r_late["nrmse"]["AVG"], r0["nrmse"]["AVG"])
+    # ... but what was served at query time was one window stale
+    assert r_late["freshness_ms"]["p50_ms"] == 1000.0
+    assert not np.array_equal(r_late["nrmse_at_query"]["AVG"],
+                              r0["nrmse_at_query"]["AVG"])
+
+
+def test_past_deadline_falls_back_to_gap_serving():
+    """Arrivals staler than the deadline are never reconstructed: the cloud
+    keeps serving the freshest earlier window and they count as gaps."""
+    cloud = ReorderCloudNode(query_names=("AVG",), window_period_ms=100.0,
+                             deadline_ms=50.0)
+    p0 = _payload_at(seed=0, wid=0, sent_at_ms=0.0)
+    out0 = cloud.ingest_event(p0, now_ms=100.0)          # on time (due=100)
+    assert out0.kind == "fresh" and cloud.windows_seen == 1
+    p1 = _payload_at(seed=1, wid=1, sent_at_ms=100.0)
+    out1 = cloud.ingest_event(p1, now_ms=260.0)          # due 200, 60ms stale
+    assert out1.kind == "late_dropped"
+    assert cloud.late_drops == 1 and cloud.windows_seen == 1
+    rec, age, served = cloud.serve(1, now_ms=200.0)
+    assert served == 0                                   # fallback to wid 0
+    assert len(rec) == len(out0.reconstruction)
+    missing = cloud.finalize(2)
+    assert missing == [1] and cloud.gaps == 1
+
+
+def test_duplicate_delivery_is_idempotent():
+    cloud = ReorderCloudNode(query_names=("AVG",), window_period_ms=100.0)
+    p0 = _payload_at(seed=3, wid=0, sent_at_ms=0.0)
+    out_a = cloud.ingest_event(p0, now_ms=40.0)
+    seen, rev = cloud.windows_seen, cloud.revisions
+    out_b = cloud.ingest_event(p0, now_ms=70.0)          # retransmit
+    assert out_a.kind == "fresh" and out_b.kind == "duplicate"
+    assert cloud.duplicates == 1
+    assert cloud.windows_seen == seen and cloud.revisions == rev
+    rec, _, served = cloud.serve(0, now_ms=100.0)
+    assert served == 0
+    for a, b in zip(rec, out_a.reconstruction):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_streaming_past_deadline_end_to_end():
+    """Uniform 1.2-period latency with a tight deadline: every window past
+    the first horizon is late-dropped and the at-query table equals the
+    final table (nothing is ever revised)."""
+    vals, _ = smartcity_like(1024, seed=3)
+    from repro.streaming import run_experiment
+    r = run_experiment(vals, 256, 0.3, "model", query_names=("AVG",),
+                       latency_ms=1200.0, staleness_deadline_ms=100.0)
+    T = 1024 // 256
+    assert r["late_drops"] == T
+    assert r["gaps"] == T
+    assert r["revisions"] == 0
+    np.testing.assert_array_equal(r["nrmse"]["AVG"],
+                                  r["nrmse_at_query"]["AVG"])
+
+
+def test_upgraded_cloud_mirrors_counters_to_caller_object():
+    """StreamingExperiment upgrades a plain CloudNode internally; the
+    caller's object still sees the fault counters after the run."""
+    vals, _ = turbine_like(512, seed=7, k=4)
+    cloud = CloudNode(query_names=("AVG",))
+    exp = StreamingExperiment(
+        edge=EdgeNode(cfg=PlannerConfig(seed=0), budget_fraction=0.3,
+                      method="model"),
+        cloud=cloud,
+        transport=Transport(drop_prob=0.5, seed=7),
+    )
+    r = exp.run(windows_from_matrix(vals, 128))
+    assert cloud is not exp.cloud
+    assert cloud.gaps == r["gaps"] > 0
+    assert cloud.windows_seen == exp.cloud.windows_seen > 0
+
+
+def test_controller_lag_first_observation_seeds_ewma():
+    """A site that delivered nothing in early windows must not have its
+    first real lag observation blended with the 0.0 initializer."""
+    ctrl = BudgetController(total_budget=100.0, n_sites=2)
+    err, r2 = np.array([0.1, 0.1]), np.array([0.5, 0.5])
+    ctrl.budgets()
+    ctrl.update(err, r2, arrival_lag=np.array([np.nan, 30.0]))  # site 0 quiet
+    ctrl.budgets()
+    ctrl.update(err, r2, arrival_lag=np.array([80.0, 30.0]))
+    lag = ctrl.arrival_lag_ms
+    assert lag[0] == 80.0          # seeded, not 0.5 * 0 + 0.5 * 80
+    assert lag[1] == 30.0          # steady observation stays put
+
+
+# ------------------------------------------------------ queue determinism
+
+def test_event_queue_deterministic_and_time_ordered_under_jitter():
+    def schedule(seed):
+        t = AsyncTransport(seed=seed, latency_ms=50.0, jitter_ms=500.0)
+        for wid in range(20):
+            p = _payload_at(seed=10, wid=wid, sent_at_ms=wid * 100.0)
+            t.send(p, now_ms=wid * 100.0)
+        return [(ev.at_ms, ev.payload.window_id)
+                for ev in t.drain(math.inf)]
+
+    a, b = schedule(7), schedule(7)
+    assert a == b                                  # fixed seed -> fixed schedule
+    times = [x[0] for x in a]
+    assert times == sorted(times)                  # queue drains in time order
+    wids = [x[1] for x in a]
+    assert wids != sorted(wids)                    # jitter actually reorders
+    assert schedule(8) != a                        # seed moves the schedule
+
+
+def test_jitter_rng_does_not_perturb_drop_sequence():
+    p = _payload_at(seed=11, wid=0, sent_at_ms=0.0)
+    drops = []
+    for jitter in (0.0, 300.0):
+        t = AsyncTransport(seed=4, drop_prob=0.5, jitter_ms=jitter)
+        drops.append([t.send(dataclasses.replace(p, window_id=w),
+                             now_ms=w * 100.0) is None for w in range(40)])
+    assert drops[0] == drops[1]
+
+
+def test_streaming_run_deterministic_under_jitter():
+    vals, _ = smartcity_like(1024, seed=4)
+    from repro.streaming import run_experiment
+
+    def once():
+        return run_experiment(vals, 256, 0.3, "model", query_names=("AVG",),
+                              latency_ms=800.0, jitter_ms=600.0,
+                              cfg=PlannerConfig(seed=9))
+
+    a, b = once(), once()
+    np.testing.assert_array_equal(a["nrmse"]["AVG"], b["nrmse"]["AVG"])
+    np.testing.assert_array_equal(a["window_age_ms"], b["window_age_ms"])
+    assert a["revisions"] == b["revisions"]
+    assert a["wan_bytes"] == b["wan_bytes"]
+
+
+# ------------------------------------------------------------ fleet async
+
+def test_fleet_heterogeneous_latency_revises_and_reports_freshness():
+    """Per-site link latencies exceed the window period: stale queries, at
+    least one late-arrival revision, and the revised table still matches
+    the instantaneous-WAN run bit-for-bit (infinite deadline)."""
+    E, R, k, W = 4, 2, 4, 64
+    vals, _ = fleet_like(E, R, k, n_points=3 * W, seed=6)
+    wins = fleet_windows(vals, W)
+    cfg = PlannerConfig(solver="closed_form")
+
+    def run(latency_scale, period):
+        topo = make_topology(R, E // R, k, seed=6,
+                             latency_scale=latency_scale)
+        ctrl = BudgetController(total_budget=0.3 * E * k * W, n_sites=E)
+        exp = FleetExperiment(topology=topo, controller=ctrl, cfg=cfg,
+                              query_names=("AVG",), window_period_ms=period)
+        return exp.run(wins)
+
+    r0 = run(latency_scale=0.0, period=20.0)
+    r = run(latency_scale=1.0, period=20.0)    # links are 30..60ms > 20ms
+    assert r["revisions"] >= 1
+    assert r["freshness_ms"]["p99_ms"] > 0.0
+    assert np.nanmax(r["site_arrival_lag_ms"]) > 20.0
+    # heterogeneous links -> heterogeneous per-site staleness
+    ages = np.nanmean(r["window_age_ms"], axis=0)
+    assert np.nanstd(ages) > 0.0
+    assert r["fleet_nrmse"]["AVG"] == r0["fleet_nrmse"]["AVG"]
+    assert r["fleet_nrmse_at_query"]["AVG"] >= r["fleet_nrmse"]["AVG"]
+    assert r["wan_bytes"] == r0["wan_bytes"]
