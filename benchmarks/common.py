@@ -1,12 +1,22 @@
-"""Shared helpers for the figure benchmarks."""
+"""Shared scenario-sweep driver for the figure benchmarks.
+
+Every benchmark is a *scenario table*: a list of
+:class:`repro.api.ScenarioConfig` (or (method, budget) grids over one
+:class:`DataSpec`) fed to the shared driver here — no hand-rolled
+experiment loops in the fig modules.  ``SMOKE_SCENARIOS`` is the compact
+table ``python -m benchmarks.run --smoke`` executes; it is constructed to
+exercise every registered component name at least once (the CI
+registry-coverage check keys off these files).
+"""
 from __future__ import annotations
 
 import time
 
 import numpy as np
 
+from repro.api import (ControllerSpec, DataSpec, Experiment, RunReport,
+                       ScenarioConfig, TopologySpec, TransportSpec)
 from repro.core.types import PlannerConfig
-from repro.streaming import run_experiment
 
 
 def timed(fn, *args, **kw):
@@ -15,16 +25,31 @@ def timed(fn, *args, **kw):
     return out, (time.perf_counter() - t0) * 1e6
 
 
-def sweep_methods(vals, window, fracs, methods, cfg=None, queries=("AVG",)):
-    """{(method, frac): (mean NRMSE per query, wan_bytes)}."""
-    cfg = cfg or PlannerConfig()
+def run_scenario(cfg: ScenarioConfig, **build_kw) -> RunReport:
+    """Build + run one scenario (deterministic given the config)."""
+    return Experiment.from_scenario(cfg, **build_kw).run()
+
+
+def method_grid(data: DataSpec, methods, fracs, planner=None,
+                queries=("AVG",), transport=None) -> list[ScenarioConfig]:
+    """The standard figure sweep: methods x budget fractions on one dataset."""
+    planner = planner or PlannerConfig()
+    transport = transport or TransportSpec()
+    return [ScenarioConfig(data=data, method=m, budget_fraction=f,
+                           planner=planner, transport=transport,
+                           queries=tuple(queries), name=f"{m}@{f:g}")
+            for m in methods for f in fracs]
+
+
+def sweep_methods(data: DataSpec, fracs, methods, planner=None,
+                  queries=("AVG",)):
+    """{(method, frac): ({query: mean NRMSE}, wan_bytes)} — the shape the
+    fig modules' derived headlines (bytes_to_reach etc.) consume."""
     out = {}
-    for m in methods:
-        for f in fracs:
-            r = run_experiment(vals, window, f, m, cfg=cfg,
-                               query_names=queries)
-            out[(m, f)] = ({q: float(np.nanmean(r["nrmse"][q]))
-                            for q in queries}, r["wan_bytes"])
+    for s in method_grid(data, methods, fracs, planner=planner,
+                         queries=queries):
+        r = run_scenario(s)
+        out[(s.method, s.budget_fraction)] = (dict(r.nrmse), r.wan_bytes)
     return out
 
 
@@ -43,3 +68,71 @@ def fmt(v):
     if isinstance(v, float):
         return f"{v:.4g}"
     return str(v)
+
+
+# --------------------------------------------------------------------------
+# the --smoke table: one small scenario per component family so every
+# registered name (models, baselines, solvers, epsilon policies, dependence
+# measures, datasets, queries) is exercised through the Scenario API
+# --------------------------------------------------------------------------
+
+_SMALL = DataSpec(dataset="smartcity", n_points=512, window=128, seed=0)
+
+SMOKE_SCENARIOS: list[ScenarioConfig] = [
+    # imputation-model families (cubic via the default planner config)
+    ScenarioConfig(name="smoke/model_cubic", data=_SMALL, method="model",
+                   queries=("AVG", "VAR", "MIN", "MAX", "MEDIAN")),
+    ScenarioConfig(name="smoke/linear_pearson", data=_SMALL, method="linear",
+                   planner=PlannerConfig(model="linear", dependence="pearson",
+                                         epsilon_policy="alpha",
+                                         epsilon_scale=0.05)),
+    ScenarioConfig(name="smoke/mean", data=_SMALL, method="mean"),
+    ScenarioConfig(name="smoke/multi",
+                   data=DataSpec(dataset="turbine", n_points=512, window=128,
+                                 seed=0, options={"k": 5}),
+                   method="multi"),
+    # baseline planners
+    ScenarioConfig(name="smoke/srs", data=_SMALL, method="srs"),
+    ScenarioConfig(name="smoke/approx_iot", data=_SMALL, method="approx_iot"),
+    ScenarioConfig(name="smoke/s_voila", data=_SMALL, method="s_voila"),
+    ScenarioConfig(name="smoke/neyman_cost", data=_SMALL, method="neyman_cost",
+                   planner=PlannerConfig(cost_per_sample=(1.0, 2.0, 0.5, 1.5,
+                                                          1.0))),  # k=5
+    # solvers + epsilon policies (ipm/k_se are the defaults above)
+    ScenarioConfig(name="smoke/slsqp_exact_mse",
+                   data=DataSpec(dataset="home", n_points=512, window=128,
+                                 seed=0),
+                   planner=PlannerConfig(solver="slsqp",
+                                         epsilon_policy="exact_mse")),
+    ScenarioConfig(name="smoke/mvn_closed_form",
+                   data=DataSpec(dataset="mvn", n_points=512, window=128,
+                                 seed=0, options={"rho": 0.8}),
+                   planner=PlannerConfig(solver="closed_form",
+                                         model="linear",
+                                         dependence="pearson")),
+    # async WAN path
+    ScenarioConfig(name="smoke/wan_latency", data=_SMALL,
+                   transport=TransportSpec(latency_ms=1500.0,
+                                           staleness_deadline_ms=4000.0)),
+    # fleet: batched planning + rebalancing + cost-aware water-filling
+    ScenarioConfig(name="smoke/fleet_rebalance",
+                   data=DataSpec(dataset="fleet", n_points=256, window=128,
+                                 seed=0, options={"k": 4}),
+                   planner=PlannerConfig(solver="closed_form"),
+                   topology=TopologySpec(n_regions=2, sites_per_region=3,
+                                         seed=0),
+                   controller=ControllerSpec(mode="rebalance",
+                                             link_cost_aware=True),
+                   queries=("AVG", "VAR")),
+]
+
+
+def run_smoke() -> list[tuple[str, float, str]]:
+    """Execute the smoke table; returns benchmark-style rows."""
+    rows = []
+    for s in SMOKE_SCENARIOS:
+        r, us = timed(run_scenario, s)
+        assert all(np.isfinite(v) for v in r.nrmse.values()), s.name
+        assert r.wan_bytes <= r.full_bytes, s.name
+        rows.append((s.name, us, r.summary()))
+    return rows

@@ -4,26 +4,27 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
-
+from benchmarks.common import run_scenario
+from repro.api import DataSpec, ScenarioConfig
 from repro.core.types import PlannerConfig
-from repro.data import smartcity_like
-from repro.streaming import run_experiment
+
+DATA = DataSpec(dataset="smartcity", n_points=4096, window=256, seed=17)
+QUERIES = ("AVG", "VAR", "MAX")
+SCENARIOS = [
+    ScenarioConfig(name=f"fig10/{model}", data=DATA, method=model,
+                   budget_fraction=0.3,
+                   planner=PlannerConfig(model=model, dependence=dep),
+                   queries=QUERIES)
+    for model, dep in (("linear", "pearson"), ("cubic", "spearman"))
+]
 
 
 def run():
     rows = []
-    vals, _ = smartcity_like(4096, seed=17)
     t0 = time.perf_counter()
-    res = {}
-    for model, dep in (("linear", "pearson"), ("cubic", "spearman")):
-        cfg = PlannerConfig(model=model, dependence=dep)
-        r = run_experiment(vals, 256, 0.3, "model", cfg=cfg,
-                           query_names=("AVG", "VAR", "MAX"))
-        res[model] = {q: float(np.nanmean(r["nrmse"][q]))
-                      for q in ("AVG", "VAR", "MAX")}
+    res = {s.method: run_scenario(s).nrmse for s in SCENARIOS}
     us = (time.perf_counter() - t0) * 1e6
-    for q in ("AVG", "VAR", "MAX"):
+    for q in QUERIES:
         rows.append((f"fig10/{q.lower()}_linear_vs_cubic", us / 3,
                      f"linear={res['linear'][q]:.4f} "
                      f"cubic={res['cubic'][q]:.4f}"))

@@ -1,66 +1,54 @@
 """Appendix C (Fig. 11): heterogeneous per-stream sampling costs — ours
-(cost-aware eq.-1) vs cost-aware Neyman 'Optimal Allocation'."""
+(cost-aware eq.-1) vs cost-aware Neyman 'Optimal Allocation'.
+
+Both sides run through the Scenario API: ``method="model"`` with
+``planner.cost_per_sample`` set is the cost-aware eq.-1 planner; the
+``"neyman_cost"`` baseline (registered in ``repro.api.registry.BASELINES``)
+allocates n_i ∝ N_i sigma_i / sqrt(c_i) under the same cost budget.
+"""
 from __future__ import annotations
 
 import time
 
 import numpy as np
 
+from benchmarks.common import run_scenario
+from repro.api import DataSpec, ScenarioConfig
 from repro.core.types import PlannerConfig
-from repro.data import smartcity_like
-from repro.streaming import run_experiment
-from repro.core import plan_with_baseline, reconstruct_window, queries as Q
-from repro.core.samplers import draw_samples, neyman_cost_allocation
-from repro.data.streams import windows_from_matrix
-import jax
+
+DATA = DataSpec(dataset="smartcity", n_points=2048, window=256, seed=21)
+K = 5                                   # smartcity stream count
 
 
-def _neyman_cost_nrmse(vals, window, cost, budget_cost):
-    wins = windows_from_matrix(vals, window)
-    k = vals.shape[0]
-    est, tru = [], []
-    for w in wins:
-        import jax.numpy as jnp
-        from repro.core import stats as S
-        st = S.window_stats(w.values, w.counts)
-        sigma = np.sqrt(np.maximum(np.asarray(st.var), 0))
-        alloc = neyman_cost_allocation(np.asarray(w.counts, float), sigma,
-                                       cost, budget_cost)
-        samples = draw_samples(jax.random.PRNGKey(int(w.window_id)),
-                               w.values, w.counts, alloc)
-        est.append([Q.avg(s) for s in samples])
-        tru.append([float(np.asarray(w.values[i]).mean()) for i in range(k)])
-    est, tru = np.asarray(est).T, np.asarray(tru).T
-    return float(np.nanmean(Q.nrmse_table(est, tru)))
+def _pair(cost, frac):
+    """(ours, neyman) scenarios at one heterogeneous cost vector."""
+    cost = tuple(float(c) for c in cost)
+    return tuple(
+        ScenarioConfig(name=f"fig11/{m}", data=DATA, method=m,
+                       budget_fraction=frac,
+                       planner=PlannerConfig(cost_per_sample=cost),
+                       queries=("AVG",))
+        for m in ("model", "neyman_cost"))
 
 
 def run():
     rows = []
-    vals, _ = smartcity_like(2048, seed=21)
-    k = vals.shape[0]
     rng = np.random.default_rng(0)
-
     t0 = time.perf_counter()
     # sweep average sampling cost (variability fixed)
     for mean_cost in (1.0, 2.0, 4.0):
-        cost = np.clip(rng.normal(mean_cost, 0.25, k), 0.2, None)
-        budget_cost = 0.5 * vals.shape[1] / 8 * k  # half the data at cost 1
-        cfg = PlannerConfig(cost_per_sample=cost)
-        r = run_experiment(vals, 256, 0.5 / mean_cost, "model", cfg=cfg,
-                           query_names=("AVG",))
-        ours = float(np.nanmean(r["nrmse"]["AVG"]))
-        base = _neyman_cost_nrmse(vals, 256, cost,
-                                  0.5 * 256 * k / mean_cost)
+        cost = np.clip(rng.normal(mean_cost, 0.25, K), 0.2, None)
+        ours_s, base_s = _pair(cost, 0.5 / mean_cost)
+        ours = run_scenario(ours_s).nrmse["AVG"]
+        base = run_scenario(base_s).nrmse["AVG"]
         rows.append((f"fig11/avg_cost_{mean_cost}", 0.0,
                      f"ours={ours:.4f} neyman_cost={base:.4f}"))
     # sweep cost variability (mean fixed at 3)
     for var in (0.25, 1.0, 2.0):
-        cost = np.clip(rng.normal(3.0, var, k), 0.2, None)
-        cfg = PlannerConfig(cost_per_sample=cost)
-        r = run_experiment(vals, 256, 0.5 / 3.0, "model", cfg=cfg,
-                           query_names=("AVG",))
-        ours = float(np.nanmean(r["nrmse"]["AVG"]))
-        base = _neyman_cost_nrmse(vals, 256, cost, 0.5 * 256 * k / 3.0)
+        cost = np.clip(rng.normal(3.0, var, K), 0.2, None)
+        ours_s, base_s = _pair(cost, 0.5 / 3.0)
+        ours = run_scenario(ours_s).nrmse["AVG"]
+        base = run_scenario(base_s).nrmse["AVG"]
         rows.append((f"fig11/cost_var_{var}", 0.0,
                      f"ours={ours:.4f} neyman_cost={base:.4f}"))
     us = (time.perf_counter() - t0) * 1e6

@@ -10,27 +10,33 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
+from benchmarks.common import run_scenario
+from repro.api import DataSpec, ScenarioConfig
 
-from repro.core.types import PlannerConfig
-from repro.data import smartcity_like, turbine_like
-from repro.streaming import run_experiment
+DATASETS = (
+    ("turbine", DataSpec(dataset="turbine", n_points=3072, window=256,
+                         seed=23, options={"k": 6})),
+    ("smartcity", DataSpec(dataset="smartcity", n_points=3072, window=256,
+                           seed=23)),
+)
+SCENARIOS = [
+    ScenarioConfig(name=f"fig12/{name}/{method}", data=data, method=method,
+                   budget_fraction=0.25, queries=("AVG", "VAR"))
+    for name, data in DATASETS
+    for method in ("model", "multi")
+]
 
 
 def run():
     rows = []
-    for name, gen in (("turbine", lambda: turbine_like(3072, seed=23, k=6)),
-                      ("smartcity", lambda: smartcity_like(3072, seed=23))):
-        vals, _ = gen()
+    for name, _ in DATASETS:
         t0 = time.perf_counter()
         res = {}
-        for method in ("model", "multi"):
-            r = run_experiment(vals, 256, 0.25, method,
-                               cfg=PlannerConfig(seed=0),
-                               query_names=("AVG", "VAR"))
-            res[method] = (float(np.nanmean(r["nrmse"]["AVG"])),
-                           float(np.nanmean(r["nrmse"]["VAR"])),
-                           r["wan_bytes"])
+        for s in SCENARIOS:
+            if not s.name.startswith(f"fig12/{name}/"):
+                continue
+            r = run_scenario(s)
+            res[s.method] = (r.nrmse["AVG"], r.nrmse["VAR"], r.wan_bytes)
         us = (time.perf_counter() - t0) * 1e6
         single, multi = res["model"], res["multi"]
         rows.append((f"fig12/{name}_single_vs_multi_avg", us,

@@ -6,6 +6,8 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks.common import run_scenario
+from repro.api import DataSpec, ScenarioConfig
 from repro.core import models as M
 from repro.core import predictor as P
 from repro.core import solver as SV
@@ -13,7 +15,15 @@ from repro.core import stats as S
 from repro.core import epsilon as E
 from repro.core.types import PlannerConfig
 from repro.data import home_like, windows_from_matrix
-from repro.streaming import run_experiment
+
+DATA = DataSpec(dataset="home", n_points=2048, window=256, seed=0)
+
+
+def _scenario(frac, method="model", planner=None, name=""):
+    return ScenarioConfig(name=name or f"fig3/{method}@{frac:g}", data=DATA,
+                          method=method, budget_fraction=frac,
+                          planner=planner or PlannerConfig(seed=0),
+                          queries=("AVG",))
 
 
 def _objective_for(pvec, w):
@@ -27,25 +37,22 @@ def _objective_for(pvec, w):
 
 def run():
     rows = []
-    vals, _ = home_like(2048, seed=0)
     # error curves heuristic vs baselines at several rates
     for frac in (0.1, 0.2, 0.4):
         t0 = time.perf_counter()
-        r_h = run_experiment(vals, 256, frac, "model",
-                             cfg=PlannerConfig(seed=0), query_names=("AVG",))
+        r_h = run_scenario(_scenario(frac))
         us = (time.perf_counter() - t0) * 1e6
         rows.append((f"fig3/heuristic_avg_nrmse@{frac}", us,
-                     f"{np.nanmean(r_h['nrmse']['AVG']):.4f}"))
+                     f"{r_h.nrmse['AVG']:.4f}"))
     for frac in (0.2,):
         for base in ("approx_iot", "s_voila"):
-            r_b = run_experiment(vals, 256, frac, base,
-                                 cfg=PlannerConfig(seed=0),
-                                 query_names=("AVG",))
+            r_b = run_scenario(_scenario(frac, method=base))
             rows.append((f"fig3/{base}_avg_nrmse@{frac}", 0.0,
-                         f"{np.nanmean(r_b['nrmse']['AVG']):.4f}"))
+                         f"{r_b.nrmse['AVG']:.4f}"))
 
     # heuristic vs brute-force optimal: (a) relaxed-objective gap per window,
     # (b) realized AVG-NRMSE gap (what Fig. 3 actually plots)
+    vals, _ = home_like(2048, seed=0)
     wins = windows_from_matrix(vals, 256)[:4]
     gaps = []
     opt = None
@@ -64,12 +71,12 @@ def run():
                  f"max_rel_gap={max(gaps):.4f}"))
 
     err = {}
-    for name, cfg in (("heuristic", PlannerConfig(seed=0)),
-                      ("optimal", PlannerConfig(seed=0,
-                                                fixed_predictors=opt))):
-        r = run_experiment(vals, 256, 0.2, "model", cfg=cfg,
-                           query_names=("AVG",))
-        err[name] = float(np.nanmean(r["nrmse"]["AVG"]))
+    for name, planner in (("heuristic", PlannerConfig(seed=0)),
+                          ("optimal", PlannerConfig(seed=0,
+                                                    fixed_predictors=opt))):
+        r = run_scenario(_scenario(0.2, planner=planner,
+                                   name=f"fig3/{name}@0.2"))
+        err[name] = r.nrmse["AVG"]
     gap = (err["heuristic"] - err["optimal"]) / max(err["optimal"], 1e-12)
     rows.append(("fig3/heuristic_vs_optimal_nrmse@0.2", 0.0,
                  f"heuristic={err['heuristic']:.4f} optimal={err['optimal']:.4f} "

@@ -4,24 +4,24 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
-
 from benchmarks.common import bytes_to_reach, sweep_methods
-from repro.data import turbine_like
+from repro.api import DataSpec
+
+DATA = DataSpec(dataset="turbine", n_points=4096, window=256, seed=7,
+                options={"k": 6})
+FRACS = [0.08, 0.16, 0.24, 0.32, 0.48, 0.64]
+QUERIES = ("AVG", "VAR", "MIN", "MAX")
 
 
 def run():
     rows = []
-    vals, _ = turbine_like(4096, seed=7, k=6)
-    fracs = [0.08, 0.16, 0.24, 0.32, 0.48, 0.64]
     t0 = time.perf_counter()
-    curves = {m: sweep_methods(vals, 256, fracs, [m],
-                               queries=("AVG", "VAR", "MIN", "MAX"))
+    curves = {m: sweep_methods(DATA, FRACS, [m], queries=QUERIES)
               for m in ("approx_iot", "s_voila", "mean", "model")}
     us = (time.perf_counter() - t0) * 1e6
 
     for m, c in curves.items():
-        errs = {f: c[(m, f)][0]["AVG"] for f in fracs}
+        errs = {f: c[(m, f)][0]["AVG"] for f in FRACS}
         rows.append((f"fig4/{m}_avg_curve", us / 4,
                      " ".join(f"{f}:{e:.3f}" for f, e in errs.items())))
     # WAN reduction at the error ApproxIoT achieves with 32% of the data

@@ -4,24 +4,23 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
-
 from benchmarks.common import bytes_to_reach, sweep_methods
-from repro.data import smartcity_like
+from repro.api import DataSpec
+
+DATA = DataSpec(dataset="smartcity", n_points=4096, window=256, seed=9)
+FRACS = [0.1, 0.18, 0.26, 0.4, 0.6]
+QUERIES = ("AVG", "VAR", "MIN", "MAX")
 
 
 def run():
     rows = []
-    vals, _ = smartcity_like(4096, seed=9)
-    fracs = [0.1, 0.18, 0.26, 0.4, 0.6]
     t0 = time.perf_counter()
-    curves = {m: sweep_methods(vals, 256, fracs, [m],
-                               queries=("AVG", "VAR", "MIN", "MAX"))
+    curves = {m: sweep_methods(DATA, FRACS, [m], queries=QUERIES)
               for m in ("approx_iot", "s_voila", "mean", "model")}
     us = (time.perf_counter() - t0) * 1e6
 
     for m, c in curves.items():
-        errs = {f: c[(m, f)][0]["AVG"] for f in fracs}
+        errs = {f: c[(m, f)][0]["AVG"] for f in FRACS}
         rows.append((f"fig5/{m}_avg_curve", us / 4,
                      " ".join(f"{f}:{e:.3f}" for f, e in errs.items())))
     target = curves["approx_iot"][("approx_iot", 0.26)][0]["AVG"]
@@ -31,7 +30,7 @@ def run():
     rows.append(("fig5/wan_reduction_at_matched_avg", 0.0,
                  f"{red:.1f}% (paper: 30-42%)"))
     # mean-imputation overtakes model on AVG at large budgets (paper §V-D)
-    big = fracs[-1]
+    big = FRACS[-1]
     rows.append(("fig5/mean_vs_model_at_large_budget", 0.0,
                  f"mean={curves['mean'][('mean', big)][0]['AVG']:.4f} "
                  f"model={curves['model'][('model', big)][0]['AVG']:.4f}"))

@@ -6,11 +6,11 @@ jit-warm latency of the full Algorithm-1 plan (stats + models + IPM solve)
 per window; compile time is excluded (amortized across windows in steady
 state) and reported once separately.
 
-The WAN sweep (docs/transport.md) runs the event-driven runtime at link
-latencies from 0 to 3x the window period and reports end-to-end freshness
-(p50/p99 window age at query time) next to the NRMSE actually served at
-query time, the revised NRMSE after late arrivals are re-ingested, and the
-WAN bytes (which latency never changes).
+The WAN sweep (docs/transport.md) is a scenario table over link latency
+from 0 to 3x the window period: end-to-end freshness (p50/p99 window age
+at query time) next to the NRMSE actually served at query time, the
+revised NRMSE after late arrivals are re-ingested, and the WAN bytes
+(which latency never changes).
 """
 from __future__ import annotations
 
@@ -18,8 +18,23 @@ import time
 
 import numpy as np
 
+from benchmarks.common import run_scenario
+from repro.api import DataSpec, ScenarioConfig, TransportSpec
 from repro.core import plan_window
 from repro.core.types import PlannerConfig, WindowBatch
+
+_PERIOD = 1000.0
+WAN_SCENARIOS = [
+    ScenarioConfig(
+        name=f"fig6/wan_latency_{mult:g}x",
+        data=DataSpec(dataset="smartcity", n_points=2048, window=256, seed=0),
+        budget_fraction=0.3, planner=PlannerConfig(seed=0),
+        transport=TransportSpec(latency_ms=mult * _PERIOD,
+                                jitter_ms=0.2 * _PERIOD,
+                                window_period_ms=_PERIOD),
+        queries=("AVG",))
+    for mult in (0.0, 0.5, 1.5, 3.0)
+]
 
 
 def _window(k, n, seed=0):
@@ -46,38 +61,31 @@ def _plan_latency(k, n, model):
 
 def _wan_latency_rows():
     """End-to-end freshness/accuracy sweep over link latency (async WAN)."""
-    from repro.data import smartcity_like
-    from repro.streaming import run_experiment
-
-    vals, _ = smartcity_like(2048, seed=0)
-    period = 1000.0
     rows = []
-    for mult in (0.0, 0.5, 1.5, 3.0):
-        r = run_experiment(vals, 256, 0.3, "model", query_names=("AVG",),
-                           cfg=PlannerConfig(seed=0),
-                           latency_ms=mult * period, jitter_ms=0.2 * period,
-                           window_period_ms=period)
-        f = r["freshness_ms"]
+    for s in WAN_SCENARIOS:
+        r = run_scenario(s)
+        f = r.freshness_ms
         rows.append((
-            f"fig6/wan_latency_{mult:g}x", 0.0,
+            s.name, 0.0,
             f"age_p50={f['p50_ms']:.0f}ms;age_p99={f['p99_ms']:.0f}ms;"
-            f"nrmse_at_query={np.nanmean(r['nrmse_at_query']['AVG']):.4f};"
-            f"nrmse_revised={np.nanmean(r['nrmse']['AVG']):.4f};"
-            f"revisions={r['revisions']};bytes={r['wan_bytes']}"))
+            f"nrmse_at_query={r.nrmse_at_query['AVG']:.4f};"
+            f"nrmse_revised={r.nrmse['AVG']:.4f};"
+            f"revisions={r.revisions};bytes={r.wan_bytes}"))
     return rows
 
 
 def run():
     rows = []
-    for model in ("model", "mean"):
+    for model in ("cubic", "mean"):
+        label = "model" if model == "cubic" else model
         for k in (5, 10, 25, 50):
             t0 = time.perf_counter()
             ms = _plan_latency(k, 48, model)
             us = (time.perf_counter() - t0) * 1e6
-            rows.append((f"fig6/latency_{model}_k{k}", us,
+            rows.append((f"fig6/latency_{label}_k{k}", us,
                          f"{ms:.1f}ms_per_window (paper<400ms@50)"))
     for n in (12, 24, 48, 96):
-        ms = _plan_latency(10, n, "model")
+        ms = _plan_latency(10, n, "cubic")
         rows.append((f"fig6/latency_points{n}", 0.0, f"{ms:.1f}ms_per_window"))
     rows.extend(_wan_latency_rows())
     return rows

@@ -4,29 +4,38 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
-
+from benchmarks.common import run_scenario
+from repro.api import DataSpec, ScenarioConfig
 from repro.core.types import PlannerConfig
-from repro.data import smartcity_like
-from repro.streaming import run_experiment
+
+DATA = DataSpec(dataset="smartcity", n_points=3072, window=256, seed=5)
+SCENARIOS = [
+    ScenarioConfig(name=f"fig7/{model}@{se}SE", data=DATA, method=model,
+                   budget_fraction=0.5,
+                   planner=PlannerConfig(epsilon_policy="k_se",
+                                         epsilon_scale=se, model=model),
+                   queries=("AVG", "VAR"))
+    for model in ("cubic", "mean")
+    for se in (0.5, 1.0, 2.0, 3.0)
+]
 
 
 def run():
     rows = []
-    vals, _ = smartcity_like(3072, seed=5)
-    for model in ("model", "mean"):
+    for model in ("cubic", "mean"):
         avg_err, var_err = {}, {}
         t0 = time.perf_counter()
-        for se in (0.5, 1.0, 2.0, 3.0):
-            cfg = PlannerConfig(epsilon_policy="k_se", epsilon_scale=se,
-                                model=model)
-            r = run_experiment(vals, 256, 0.5, model, cfg=cfg,
-                               query_names=("AVG", "VAR"))
-            avg_err[se] = float(np.nanmean(r["nrmse"]["AVG"]))
-            var_err[se] = float(np.nanmean(r["nrmse"]["VAR"]))
+        for s in SCENARIOS:
+            if s.method != model:
+                continue
+            r = run_scenario(s)
+            se = s.planner.epsilon_scale
+            avg_err[se] = r.nrmse["AVG"]
+            var_err[se] = r.nrmse["VAR"]
         us = (time.perf_counter() - t0) * 1e6
-        rows.append((f"fig7/{model}_avg_vs_tolerance", us,
+        name = "model" if model == "cubic" else model
+        rows.append((f"fig7/{name}_avg_vs_tolerance", us,
                      " ".join(f"{k}SE:{v:.4f}" for k, v in avg_err.items())))
-        rows.append((f"fig7/{model}_var_vs_tolerance", 0.0,
+        rows.append((f"fig7/{name}_var_vs_tolerance", 0.0,
                      " ".join(f"{k}SE:{v:.4f}" for k, v in var_err.items())))
     return rows

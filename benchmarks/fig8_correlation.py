@@ -4,31 +4,42 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
-
+from benchmarks.common import run_scenario
+from repro.api import DataSpec, ScenarioConfig
 from repro.core import plan_window
 from repro.core.types import PlannerConfig
 from repro.data import mvn_pair, windows_from_matrix
-from repro.streaming import run_experiment
+
+RHOS = (0.0, 0.2, 0.4, 0.6, 0.8, 0.95)
+
+
+def _planner(se):
+    return PlannerConfig(epsilon_policy="k_se", epsilon_scale=se,
+                         dependence="pearson", model="linear")
+
+
+def _scenario(rho, se):
+    return ScenarioConfig(
+        name=f"fig8/rho{rho:g}@{se}SE",
+        data=DataSpec(dataset="mvn", n_points=4096, window=512,
+                      seed=int(rho * 100), options={"rho": rho}),
+        method="linear", budget_fraction=0.3, planner=_planner(se),
+        queries=("AVG",))
 
 
 def run():
     rows = []
-    rhos = (0.0, 0.2, 0.4, 0.6, 0.8, 0.95)
     for se in (0.5, 1.0, 3.0):
         imp_frac, errs = {}, {}
         t0 = time.perf_counter()
-        for rho in rhos:
+        for rho in RHOS:
+            # single-window imputation share (direct planner probe)
             vals, _ = mvn_pair(rho, 4096, seed=int(rho * 100))
-            cfg = PlannerConfig(epsilon_policy="k_se", epsilon_scale=se,
-                                dependence="pearson", model="linear")
             w = windows_from_matrix(vals, 512)[0]
-            payload, _ = plan_window(w, int(0.3 * 2 * 512), cfg)
+            payload, _ = plan_window(w, int(0.3 * 2 * 512), _planner(se))
             imp_frac[rho] = float(payload.n_imputed.sum()
                                   / max(payload.n_real.sum(), 1))
-            r = run_experiment(vals, 512, 0.3, "model", cfg=cfg,
-                               query_names=("AVG",))
-            errs[rho] = float(np.nanmean(r["nrmse"]["AVG"]))
+            errs[rho] = run_scenario(_scenario(rho, se)).nrmse["AVG"]
         us = (time.perf_counter() - t0) * 1e6
         rows.append((f"fig8/imputation_allowed_{se}SE", us,
                      " ".join(f"{r}:{v:.2f}" for r, v in imp_frac.items())))

@@ -4,24 +4,23 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
-
+from benchmarks.common import run_scenario
+from repro.api import DataSpec, ScenarioConfig
 from repro.core.types import PlannerConfig
-from repro.data import smartcity_like
-from repro.streaming import run_experiment
+
+DATA = DataSpec(dataset="smartcity", n_points=3072, window=256, seed=13)
+SCENARIOS = [
+    ScenarioConfig(name=f"fig9/{mode}", data=DATA, budget_fraction=0.3,
+                   planner=PlannerConfig(iid_mode=mode, m_lags=1),
+                   queries=("AVG",))
+    for mode in ("iid", "thinning", "m_dependence")
+]
 
 
 def run():
-    rows = []
-    vals, _ = smartcity_like(3072, seed=13)
     t0 = time.perf_counter()
-    out = {}
-    for mode in ("iid", "thinning", "m_dependence"):
-        cfg = PlannerConfig(iid_mode=mode, m_lags=1)
-        r = run_experiment(vals, 256, 0.3, "model", cfg=cfg,
-                           query_names=("AVG",))
-        out[mode] = float(np.nanmean(r["nrmse"]["AVG"]))
+    out = {s.planner.iid_mode: run_scenario(s).nrmse["AVG"]
+           for s in SCENARIOS}
     us = (time.perf_counter() - t0) * 1e6
-    rows.append(("fig9/avg_error_by_iid_mode", us,
-                 " ".join(f"{m}:{v:.4f}" for m, v in out.items())))
-    return rows
+    return [("fig9/avg_error_by_iid_mode", us,
+             " ".join(f"{m}:{v:.4f}" for m, v in out.items()))]

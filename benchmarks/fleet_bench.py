@@ -1,13 +1,14 @@
 """Fleet benchmarks: batched vs host-loop planning throughput at E = 64,
-static vs rebalanced fleet budgets at equal WAN spend, and an async-WAN
-latency sweep (per-region end-to-end freshness at query time).
+static vs rebalanced fleet budgets at equal WAN spend, cost-aware vs
+cost-blind water-filling at equal sample spend, and an async-WAN latency
+sweep (per-region end-to-end freshness at query time).
 
 Acceptance targets (ISSUE 1): >= 5x planning-throughput speedup for the
 batched path over the E-loop host path, and lower fleet NRMSE for the
 rebalanced budget at (approximately) equal WAN bytes.  ISSUE 2 adds the
-latency sweep: heterogeneous per-region link latencies against a shrinking
-window period report p50/p99 window age, the NRMSE actually served at query
-time vs the revised NRMSE, and the late-arrival revision count.
+latency sweep; ISSUE 3 moves every experiment row onto the Scenario API
+(``ScenarioConfig`` tables + the shared driver in benchmarks/common.py)
+and adds the link-cost-aware controller comparison.
 """
 from __future__ import annotations
 
@@ -16,12 +17,56 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks.common import run_scenario
+from repro.api import (ControllerSpec, DataSpec, ScenarioConfig,
+                       TopologySpec, TransportSpec)
 from repro.core.types import PlannerConfig
 from repro.data import fleet_like, fleet_windows
-from repro.fleet import (BudgetController, FleetExperiment, fleet_plan,
-                         host_loop_plan, make_topology)
+from repro.fleet import fleet_plan, host_loop_plan
 
 E, R, K, W = 64, 4, 6, 128
+
+_HETERO_DATA = DataSpec(
+    dataset="fleet", n_points=32 * 128, window=128, seed=2,
+    options={"k": 6, "region_strength": [0.9, 0.7, 0.4, 0.15],
+             "region_volatility": [0.4, 1.0, 1.8, 3.0]})
+
+REBALANCE_SCENARIOS = [
+    ScenarioConfig(name=f"fleet/{mode}", data=_HETERO_DATA,
+                   budget_fraction=0.2,
+                   planner=PlannerConfig(solver="closed_form"),
+                   topology=TopologySpec(n_regions=4, sites_per_region=4,
+                                         seed=2),
+                   controller=ControllerSpec(mode=mode),
+                   queries=("AVG",))
+    for mode in ("static", "rebalance")
+]
+
+COST_AWARE_SCENARIOS = [
+    ScenarioConfig(name=f"fleet/cost_aware_{flag}", data=_HETERO_DATA,
+                   budget_fraction=0.2,
+                   planner=PlannerConfig(solver="closed_form"),
+                   topology=TopologySpec(n_regions=4, sites_per_region=4,
+                                         seed=2),
+                   controller=ControllerSpec(mode="rebalance",
+                                             link_cost_aware=flag),
+                   queries=("AVG",))
+    for flag in (False, True)
+]
+
+LATENCY_SCENARIOS = [
+    ScenarioConfig(name=f"fleet/latency_period{period:g}ms",
+                   data=DataSpec(dataset="fleet", n_points=8 * 128,
+                                 window=128, seed=3, options={"k": 6}),
+                   budget_fraction=0.2,
+                   planner=PlannerConfig(solver="closed_form"),
+                   topology=TopologySpec(n_regions=4, sites_per_region=4,
+                                         seed=3),
+                   controller=ControllerSpec(),
+                   transport=TransportSpec(window_period_ms=period),
+                   queries=("AVG",))
+    for period in (1000.0, 60.0, 20.0)
+]
 
 
 def _throughput_rows():
@@ -59,63 +104,52 @@ def _throughput_rows():
 def _rebalance_rows():
     # heterogeneous fleet: calm strongly-correlated regions through volatile
     # weakly-correlated ones — the regime cross-edge rebalancing exploits
-    e, r, k, w_len = 16, 4, 6, 128
-    vals, _ = fleet_like(e, r, k, n_points=32 * w_len, seed=2,
-                         region_strength=[0.9, 0.7, 0.4, 0.15],
-                         region_volatility=[0.4, 1.0, 1.8, 3.0])
-    wins = fleet_windows(vals, w_len)
-    total = 0.2 * e * k * w_len
-
-    results = {}
-    for mode in ("static", "rebalance"):
-        topo = make_topology(r, e // r, k, seed=2)
-        ctrl = BudgetController(total_budget=total, n_sites=e, mode=mode)
-        exp = FleetExperiment(topology=topo, controller=ctrl,
-                              cfg=PlannerConfig(solver="closed_form"),
-                              query_names=("AVG",))
-        results[mode] = exp.run(wins)
-
+    results = {s.controller.mode: run_scenario(s)
+               for s in REBALANCE_SCENARIOS}
     for mode, res in results.items():
-        yield (f"fleet_nrmse_{mode}", res["plan_seconds"] * 1e6,
-               f"AVG={res['fleet_nrmse']['AVG']:.5f};"
-               f"wan_bytes={res['wan_bytes']}")
+        yield (f"fleet_nrmse_{mode}", res.plan_seconds * 1e6,
+               f"AVG={res.nrmse['AVG']:.5f};wan_bytes={res.wan_bytes}")
     s, rb = results["static"], results["rebalance"]
-    gain = (s["fleet_nrmse"]["AVG"] - rb["fleet_nrmse"]["AVG"]) \
-        / max(s["fleet_nrmse"]["AVG"], 1e-12)
-    byte_delta = abs(rb["wan_bytes"] - s["wan_bytes"]) / s["wan_bytes"]
+    gain = (s.nrmse["AVG"] - rb.nrmse["AVG"]) / max(s.nrmse["AVG"], 1e-12)
+    byte_delta = abs(rb.wan_bytes - s.wan_bytes) / s.wan_bytes
     yield ("fleet_rebalance_gain", 0.0,
            f"nrmse_reduction={gain:.1%};byte_delta={byte_delta:.1%}")
+
+
+def _cost_aware_rows():
+    # same fleet + budget, controller discounts demand by uplink $/byte:
+    # expensive (distant) regions yield budget first -> lower WAN $ at a
+    # small error trade (ROADMAP: link-cost-aware water-filling)
+    results = {s.controller.link_cost_aware: run_scenario(s)
+               for s in COST_AWARE_SCENARIOS}
+    blind, aware = results[False], results[True]
+    saving = (blind.wan_cost - aware.wan_cost) / max(blind.wan_cost, 1e-9)
+    yield ("fleet_cost_aware_waterfill", 0.0,
+           f"cost_blind=$ {blind.wan_cost:.0f};cost_aware=$ {aware.wan_cost:.0f};"
+           f"saving={saving:.1%};nrmse_blind={blind.nrmse['AVG']:.5f};"
+           f"nrmse_aware={aware.nrmse['AVG']:.5f}")
 
 
 def _latency_rows():
     # region0 links sit at ~30ms, region3 at ~105ms (make_topology); sweep
     # the window period through that band so distant regions go stale first
-    e, r, k, w_len = 16, 4, 6, 128
-    vals, _ = fleet_like(e, r, k, n_points=8 * w_len, seed=3)
-    wins = fleet_windows(vals, w_len)
-    total = 0.2 * e * k * w_len
-
-    for period in (1000.0, 60.0, 20.0):
-        topo = make_topology(r, e // r, k, seed=3)
-        ctrl = BudgetController(total_budget=total, n_sites=e)
-        exp = FleetExperiment(topology=topo, controller=ctrl,
-                              cfg=PlannerConfig(solver="closed_form"),
-                              query_names=("AVG",),
-                              window_period_ms=period)
-        res = exp.run(wins)
-        f = res["freshness_ms"]
-        near = res["freshness_by_region"]["region0"]
-        far = res["freshness_by_region"]["region3"]
+    for s in LATENCY_SCENARIOS:
+        res = run_scenario(s)
+        f = res.freshness_ms
+        near = res.freshness_by_region["region0"]
+        far = res.freshness_by_region["region3"]
+        period = s.transport.window_period_ms
         yield (f"fleet_latency_period{period:g}ms", 0.0,
                f"age_p50={f['p50_ms']:.0f}ms;age_p99={f['p99_ms']:.0f}ms;"
                f"region0_p99={near['p99_ms']:.0f}ms;"
                f"region3_p99={far['p99_ms']:.0f}ms;"
-               f"nrmse_at_query={res['fleet_nrmse_at_query']['AVG']:.5f};"
-               f"nrmse_revised={res['fleet_nrmse']['AVG']:.5f};"
-               f"revisions={res['revisions']}")
+               f"nrmse_at_query={res.nrmse_at_query['AVG']:.5f};"
+               f"nrmse_revised={res.nrmse['AVG']:.5f};"
+               f"revisions={res.revisions}")
 
 
 def run():
     yield from _throughput_rows()
     yield from _rebalance_rows()
+    yield from _cost_aware_rows()
     yield from _latency_rows()

@@ -1,84 +1,97 @@
 """Geo-distributed fleet demo: 12 edge sites in 3 regions, one shared WAN
-budget, batched planning, and cross-edge budget rebalancing.
+budget, batched planning, and cross-edge budget rebalancing — declared as
+Scenario-API configs (one ScenarioConfig per controller mode).
 
 Regions range from calm + strongly-correlated (cheap to reconstruct: the
 compact models impute most values) to volatile + weakly-correlated (every
 real sample counts).  The controller watches per-site reconstruction error
-and correlation strength and water-fills the fleet budget accordingly.
+and correlation strength and water-fills the fleet budget accordingly;
+``link_cost_aware=True`` additionally discounts demand by each uplink's
+$/byte so expensive links yield budget first.
 
     PYTHONPATH=src python examples/fleet_demo.py
 """
 import numpy as np
 
+from repro.api import (ControllerSpec, DataSpec, Experiment, ScenarioConfig,
+                       TopologySpec, TransportSpec)
 from repro.core.types import PlannerConfig
-from repro.data import fleet_like, fleet_windows
-from repro.fleet import BudgetController, FleetExperiment, make_topology
 
 E, R, K, W, T = 12, 3, 6, 128, 16
-STRENGTH = [0.9, 0.5, 0.15]        # within-site correlation per region
-VOLATILITY = [0.5, 1.0, 2.5]       # stream spread (CoV) per region
+DATA = DataSpec(dataset="fleet", n_points=T * W, window=W, seed=0,
+                options={"k": K,
+                         "region_strength": [0.9, 0.5, 0.15],
+                         "region_volatility": [0.5, 1.0, 2.5]})
+TOPO = TopologySpec(n_regions=R, sites_per_region=E // R, seed=0)
 
 
-def run(mode: str) -> dict:
-    vals, _ = fleet_like(E, R, K, n_points=T * W, seed=0,
-                         region_strength=STRENGTH,
-                         region_volatility=VOLATILITY)
-    topo = make_topology(R, E // R, K, seed=0)
-    ctrl = BudgetController(total_budget=0.2 * E * K * W, n_sites=E,
-                            mode=mode)
-    exp = FleetExperiment(topology=topo, controller=ctrl,
-                          cfg=PlannerConfig(solver="closed_form"),
-                          query_names=("AVG", "VAR"))
-    res = exp.run(fleet_windows(vals, W))
-    res["corr_strength"] = ctrl.correlation_strength
-    return res
+def scenario(mode: str, **controller_kw) -> ScenarioConfig:
+    return ScenarioConfig(
+        data=DATA, budget_fraction=0.2,
+        planner=PlannerConfig(solver="closed_form"),
+        topology=TOPO,
+        controller=ControllerSpec(mode=mode, **controller_kw),
+        queries=("AVG", "VAR"), name=f"fleet_demo/{mode}")
 
 
 def main():
     for mode in ("static", "rebalance"):
-        res = run(mode)
+        exp = Experiment.from_scenario(scenario(mode))
+        res = exp.run()
         print(f"== budget mode: {mode} ==")
-        for reg, errs in res["region_nrmse"].items():
-            byts = res["wan_bytes_by_region"][reg]
-            cost = res["wan_cost_by_region"][reg]
+        for reg, errs in res.region_nrmse.items():
             print(f"  {reg}: AVG_nrmse={errs['AVG']:.4f} "
-                  f"VAR_nrmse={errs['VAR']:.4f} wan={byts:7d}B "
-                  f"cost={cost:9.0f}")
-        print(f"  fleet: AVG_nrmse={res['fleet_nrmse']['AVG']:.4f} "
-              f"wan={res['wan_bytes']}B "
-              f"({res['wan_bytes'] / res['full_bytes']:.0%} of raw) "
-              f"plan={res['plan_seconds']:.2f}s "
-              f"for {res['plan_windows']} windows")
+                  f"VAR_nrmse={errs['VAR']:.4f} "
+                  f"wan={res.wan_bytes_by_region[reg]:7d}B "
+                  f"cost={res.wan_cost_by_region[reg]:9.0f}")
+        print(f"  fleet: AVG_nrmse={res.nrmse['AVG']:.4f} "
+              f"wan={res.wan_bytes}B ({res.wan_fraction:.0%} of raw) "
+              f"plan={res.plan_seconds:.2f}s "
+              f"for {res.raw['plan_windows']} windows")
         if mode == "rebalance":
-            per_region = np.round(res["budget_history"][-1]).astype(int)
-            print(f"  final per-site budgets: {per_region.tolist()}")
+            ctrl = exp.runtime.controller
+            per_site = np.round(res.raw["budget_history"][-1]).astype(int)
+            print(f"  final per-site budgets: {per_site.tolist()}")
             print(f"  observed correlation strength (EWMA R^2): "
-                  f"{np.round(res['corr_strength'], 2).tolist()}")
+                  f"{np.round(ctrl.correlation_strength, 2).tolist()}")
+
+    # -- link-cost-aware water-filling: same fleet + sample budget, demand
+    # discounted by each uplink's $/byte (region2 pays ~2x region0)
+    res_aware = Experiment.from_scenario(
+        scenario("rebalance", link_cost_aware=True)).run()
+    res_blind = Experiment.from_scenario(scenario("rebalance")).run()
+    saving = 1 - res_aware.wan_cost / max(res_blind.wan_cost, 1e-9)
+    print("== link-cost-aware water-filling ==")
+    print(f"  cost-blind: ${res_blind.wan_cost:.0f} "
+          f"AVG_nrmse={res_blind.nrmse['AVG']:.4f}")
+    print(f"  cost-aware: ${res_aware.wan_cost:.0f} "
+          f"AVG_nrmse={res_aware.nrmse['AVG']:.4f} "
+          f"(WAN $ saving {saving:.1%})")
 
     # -- async WAN: shrink the window period below the link latencies so the
     # distant regions' payloads arrive after their queries are due.  Results
     # are revised retroactively (docs/transport.md); freshness quantifies
     # what was actually served on time.
     print("== async WAN: 20ms windows against 30-80ms links ==")
-    vals, _ = fleet_like(E, R, K, n_points=T * W, seed=0,
-                         region_strength=STRENGTH,
-                         region_volatility=VOLATILITY)
-    topo = make_topology(R, E // R, K, seed=0, jitter_ms=10.0)
-    ctrl = BudgetController(total_budget=0.2 * E * K * W, n_sites=E)
-    exp = FleetExperiment(topology=topo, controller=ctrl,
-                          cfg=PlannerConfig(solver="closed_form"),
-                          query_names=("AVG",), window_period_ms=20.0)
-    res = exp.run(fleet_windows(vals, W))
-    f = res["freshness_ms"]
+    async_scenario = ScenarioConfig(
+        data=DATA, budget_fraction=0.2,
+        planner=PlannerConfig(solver="closed_form"),
+        topology=TopologySpec(n_regions=R, sites_per_region=E // R, seed=0,
+                              jitter_ms=10.0),
+        controller=ControllerSpec(),
+        transport=TransportSpec(window_period_ms=20.0),
+        queries=("AVG",), name="fleet_demo/async")
+    res = Experiment.from_scenario(async_scenario).run()
+    f = res.freshness_ms
     print(f"  window age at query: p50={f['p50_ms']:.0f}ms "
-          f"p99={f['p99_ms']:.0f}ms  revisions={res['revisions']} "
-          f"late_drops={res['late_drops']}")
-    for reg, fr in res["freshness_by_region"].items():
+          f"p99={f['p99_ms']:.0f}ms  revisions={res.revisions} "
+          f"late_drops={res.late_drops}")
+    for reg, fr in res.freshness_by_region.items():
         print(f"  {reg}: age_p99={fr['p99_ms']:.0f}ms")
     print(f"  per-site arrival lag (EWMA): "
-          f"{np.round(res['site_arrival_lag_ms']).astype(int).tolist()}")
-    print(f"  AVG_nrmse at query={res['fleet_nrmse_at_query']['AVG']:.4f} "
-          f"after revision={res['fleet_nrmse']['AVG']:.4f}")
+          f"{np.round(res.raw['site_arrival_lag_ms']).astype(int).tolist()}")
+    print(f"  AVG_nrmse at query={res.nrmse_at_query['AVG']:.4f} "
+          f"after revision={res.nrmse['AVG']:.4f}")
 
 
 if __name__ == "__main__":

@@ -2,58 +2,55 @@
 a permanently straggling device — the paper's imputation doubles as
 straggler mitigation (DESIGN.md §4) — and a high-latency backhaul where
 queries are served stale and revised when late payloads land
-(docs/transport.md).
+(docs/transport.md).  Each site is one declarative ScenarioConfig; the
+straggler is the only non-serializable knob and is injected at build time
+via ``Experiment.from_scenario(..., straggler_drop=...)``.
 
     PYTHONPATH=src python examples/geo_streaming.py
 """
-import numpy as np
-
+from repro.api import DataSpec, Experiment, ScenarioConfig, TransportSpec
 from repro.core.types import PlannerConfig
-from repro.data import smartcity_like, turbine_like
-from repro.streaming import (AsyncTransport, CloudNode, EdgeNode,
-                             StreamingExperiment)
-from repro.data.streams import windows_from_matrix
+
+CITY = DataSpec(dataset="smartcity", n_points=2048, window=256, seed=0)
+FARM = DataSpec(dataset="turbine", n_points=2048, window=256, seed=1,
+                options={"k": 6})
 
 
-def run_site(name, vals, straggler=None, drop=0.0, latency_ms=0.0,
+def run_site(name, data, straggler=None, drop=0.0, latency_ms=0.0,
              jitter_ms=0.0):
-    exp = StreamingExperiment(
-        edge=EdgeNode(cfg=PlannerConfig(seed=0), budget_fraction=0.25,
-                      method="model", straggler_drop=straggler),
-        cloud=CloudNode(query_names=("AVG", "VAR")),
-        transport=AsyncTransport(drop_prob=drop, seed=1,
-                                 latency_ms=latency_ms, jitter_ms=jitter_ms),
-    )
-    r = exp.run(windows_from_matrix(vals, 256))
+    scenario = ScenarioConfig(
+        data=data, method="model", budget_fraction=0.25,
+        planner=PlannerConfig(seed=0),
+        transport=TransportSpec(drop_prob=drop, latency_ms=latency_ms,
+                                jitter_ms=jitter_ms),
+        queries=("AVG", "VAR"), name=f"geo/{name}")
+    r = Experiment.from_scenario(scenario, straggler_drop=straggler).run()
     extra = ""
     if latency_ms or jitter_ms:
-        extra = (f" age_p99={r['freshness_ms']['p99_ms']:.0f}ms "
-                 f"revisions={r['revisions']} "
-                 f"at_query_AVG={np.nanmean(r['nrmse_at_query']['AVG']):.4f}")
-    print(f"site={name:10s} wan={r['wan_bytes']:7d}B "
-          f"({r['wan_bytes']/r['full_bytes']:.0%} of raw) "
-          f"AVG_nrmse={np.nanmean(r['nrmse']['AVG']):.4f} "
-          f"VAR_nrmse={np.nanmean(r['nrmse']['VAR']):.4f} "
-          f"dropped_windows={r['gaps']}{extra}")
+        extra = (f" age_p99={r.freshness_ms['p99_ms']:.0f}ms "
+                 f"revisions={r.revisions} "
+                 f"at_query_AVG={r.nrmse_at_query['AVG']:.4f}")
+    print(f"site={name:10s} wan={r.wan_bytes:7d}B "
+          f"({r.wan_fraction:.0%} of raw) "
+          f"AVG_nrmse={r.nrmse['AVG']:.4f} "
+          f"VAR_nrmse={r.nrmse['VAR']:.4f} "
+          f"dropped_windows={r.gaps}{extra}")
 
 
 def main():
-    city, _ = smartcity_like(2048, seed=0)
-    farm, _ = turbine_like(2048, seed=1, k=6)
-
     print("-- healthy sites --")
-    run_site("city", city)
-    run_site("wind-farm", farm)
+    run_site("city", CITY)
+    run_site("wind-farm", FARM)
 
     print("-- wind-farm sensor 1 misses every deadline (straggler) --")
-    run_site("wind-farm", farm, straggler=lambda wid, i: i == 1)
+    run_site("wind-farm", FARM, straggler=lambda wid, i: i == 1)
 
     print("-- city uplink drops 30% of payloads (stale-window serving) --")
-    run_site("city", city, drop=0.3)
+    run_site("city", CITY, drop=0.3)
 
     print("-- satellite backhaul: 1.8s latency + jitter on 1s windows --")
     print("   (queries served stale, then revised when late payloads land)")
-    run_site("outpost", farm, latency_ms=1800.0, jitter_ms=400.0)
+    run_site("outpost", FARM, latency_ms=1800.0, jitter_ms=400.0)
 
 
 if __name__ == "__main__":

@@ -3,33 +3,34 @@
 Runs the full Algorithm-1 pipeline (window -> stats -> predictors -> compact
 models -> eq.-1 solve -> WAN payload -> cloud reconstruction -> aggregate
 queries) on the Smart-City synthetic and compares WAN bytes + NRMSE against
-ApproxIoT-style stratified sampling.
+ApproxIoT-style stratified sampling — all through the Scenario API: each
+(method, budget) cell is a declarative, JSON-serializable ScenarioConfig.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import numpy as np
+from repro.api import DataSpec, Experiment, ScenarioConfig
 
-from repro.core.types import PlannerConfig
-from repro.data import smartcity_like
-from repro.streaming import run_experiment
+DATA = DataSpec(dataset="smartcity", n_points=2048, window=256, seed=0)
 
 
 def main():
-    vals, meta = smartcity_like(n_points=2048, seed=0)
-    print(f"dataset: {meta['name']}  k={meta['k']} streams x "
-          f"{vals.shape[1]} tuples")
+    print(f"dataset: {DATA.dataset}  seed={DATA.seed}  "
+          f"{DATA.n_points} tuples per stream, window={DATA.window}")
     print(f"{'method':12s} {'budget':>6s} {'WAN bytes':>10s} "
           f"{'AVG':>8s} {'VAR':>8s} {'MAX':>8s}")
     for method in ("approx_iot", "s_voila", "mean", "model"):
         for frac in (0.2, 0.4):
-            r = run_experiment(vals, 256, frac, method,
-                               cfg=PlannerConfig(seed=0))
-            n = r["nrmse"]
-            print(f"{method:12s} {frac:6.0%} {r['wan_bytes']:10d} "
-                  f"{np.nanmean(n['AVG']):8.4f} {np.nanmean(n['VAR']):8.4f} "
-                  f"{np.nanmean(n['MAX']):8.4f}")
+            scenario = ScenarioConfig(data=DATA, method=method,
+                                      budget_fraction=frac)
+            r = Experiment.from_scenario(scenario).run()
+            print(f"{method:12s} {frac:6.0%} {r.wan_bytes:10d} "
+                  f"{r.nrmse['AVG']:8.4f} {r.nrmse['VAR']:8.4f} "
+                  f"{r.nrmse['MAX']:8.4f}")
     print("\n'model' = this paper (edge sampling + cloud imputation).")
     print("Note how it reaches baseline error levels with fewer WAN bytes.")
+    print("\nEvery cell above is one ScenarioConfig; e.g. the last one:")
+    print(ScenarioConfig(data=DATA, method="model",
+                         budget_fraction=0.4).to_json(indent=2)[:400] + " ...")
 
 
 if __name__ == "__main__":

@@ -62,27 +62,67 @@ print(f"docs OK: {len(pkgs)} packages mentioned, "
       f"links resolve in {len(md_files)} markdown files")
 PY
 
+echo "== registry coverage =="
+python - <<'PY'
+"""Every registered component name must be exercised by at least one test
+or benchmark scenario: walk the registries (repro.api.registry) and require
+each name to appear as a *quoted string literal* in tests/ or benchmarks/
+sources (bare substrings would be vacuously satisfied by identifiers like
+np.nanmean or mean_model).  Keeps the plugin surface honest — registering
+a component without wiring it into a scenario or test fails CI."""
+import os
+import re
+import sys
+
+from repro.api.registry import populate
+
+sources = []
+for d in ("tests", "benchmarks"):
+    for f in sorted(os.listdir(d)):
+        if f.endswith(".py"):
+            sources.append(open(os.path.join(d, f)).read())
+blob = "\n".join(sources)
+
+fail = []
+total = 0
+for reg_name, reg in populate().items():
+    for name in reg.names():
+        total += 1
+        if not re.search(rf"""['"]{re.escape(name)}['"]""", blob):
+            fail.append(f"registry '{reg_name}': component '{name}' is not "
+                        f"exercised (as a quoted name) by any test or "
+                        f"benchmark scenario")
+if fail:
+    print("\n".join(fail))
+    sys.exit(1)
+print(f"registry coverage OK: {total} registered component names all "
+      f"appear in tests/ or benchmarks/")
+PY
+
+echo "== scenario-API smoke (benchmarks/run.py --smoke) =="
+python -m benchmarks.run --smoke
+
 echo "== fleet smoke (small E, interpret-mode kernels) =="
 python - <<'PY'
 import numpy as np
+from repro.api import (ControllerSpec, DataSpec, Experiment, ScenarioConfig,
+                       TopologySpec)
 from repro.core.types import PlannerConfig
-from repro.data import fleet_like, fleet_windows
-from repro.fleet import BudgetController, FleetExperiment, make_topology
 
 E, R, K, W = 6, 2, 4, 128
-vals, _ = fleet_like(E, R, K, n_points=2 * W, seed=0)
-topo = make_topology(R, E // R, K, seed=0)
-ctrl = BudgetController(total_budget=0.25 * E * K * W, n_sites=E)
-exp = FleetExperiment(topology=topo, controller=ctrl,
-                      cfg=PlannerConfig(solver="closed_form"),
-                      use_kernel=True, interpret=True)
-res = exp.run(fleet_windows(vals, W))
-assert np.isfinite(res["fleet_nrmse"]["AVG"]), res
-assert res["wan_bytes"] < res["full_bytes"], res
-assert np.isfinite(res["freshness_ms"]["p99_ms"]), res
-print("fleet smoke OK:", {q: round(v, 4) for q, v in res["fleet_nrmse"].items()},
-      f"wan={res['wan_bytes']}B",
-      f"age_p99={res['freshness_ms']['p99_ms']:.0f}ms")
+scenario = ScenarioConfig(
+    data=DataSpec(dataset="fleet", n_points=2 * W, window=W, seed=0,
+                  options={"k": K}),
+    budget_fraction=0.25, planner=PlannerConfig(solver="closed_form"),
+    topology=TopologySpec(n_regions=R, sites_per_region=E // R, seed=0),
+    controller=ControllerSpec(), queries=("AVG", "VAR"))
+res = Experiment.from_scenario(scenario, use_kernel=True, interpret=True).run()
+assert np.isfinite(res.nrmse["AVG"]), res
+assert res.wan_bytes < res.full_bytes, res
+assert np.isfinite(res.freshness_ms["p99_ms"]), res
+print("fleet smoke OK:", {q: round(v, 4) for q, v in res.nrmse.items()},
+      f"wan={res.wan_bytes}B",
+      f"age_p99={res.freshness_ms['p99_ms']:.0f}ms")
 PY
 
 echo "CI OK"

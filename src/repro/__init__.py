@@ -1,5 +1,7 @@
 """repro — Wolfrath & Chandra (2022) edge-sampled dependent-stream
 transmission, reproduced and scaled to a multi-pod JAX training/serving
-framework.  See README.md / DESIGN.md / EXPERIMENTS.md."""
+framework.  Experiments run through the Scenario API (``repro.api``):
+registry-backed components, declarative ``ScenarioConfig``, one
+``Experiment`` runtime.  See README.md and docs/api.md."""
 
-__version__ = "0.1.0"
+__version__ = "0.2.0"

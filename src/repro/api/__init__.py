@@ -1,0 +1,57 @@
+"""repro.api — the unified Scenario API.
+
+Three layers (docs/api.md):
+
+  * :mod:`repro.api.registry` — component registries (solvers, imputation
+    models, epsilon policies, dependence measures, samplers, baselines,
+    queries, datasets) with decorator registration and unknown-name errors
+    that list the alternatives.
+  * :mod:`repro.api.scenario` — :class:`ScenarioConfig`, a frozen,
+    JSON-round-trippable description of one experiment (data source,
+    topology, planner, transport, controller, queries, seeds).
+  * :mod:`repro.api.experiment` — :class:`Experiment`, the one runtime that
+    subsumes the legacy single-edge and fleet experiment loops
+    (``Experiment.from_scenario(cfg).run()`` -> :class:`RunReport`).
+
+This ``__init__`` stays import-light on purpose: ``repro.core`` modules
+import :mod:`repro.api.registry` at definition time to register their
+components, so anything heavier here would be a circular import.  The
+scenario/experiment names are provided lazily (PEP 562).
+"""
+from __future__ import annotations
+
+from repro.api.registry import (ALL_REGISTRIES, BASELINES, DATASETS,
+                                DEPENDENCE, EPSILON_POLICIES, MODELS, QUERIES,
+                                Registry, SAMPLERS, SOLVERS,
+                                UnknownComponentError)
+
+_LAZY = {
+    "ScenarioConfig": "repro.api.scenario",
+    "DataSpec": "repro.api.scenario",
+    "TopologySpec": "repro.api.scenario",
+    "TransportSpec": "repro.api.scenario",
+    "ControllerSpec": "repro.api.scenario",
+    "Experiment": "repro.api.experiment",
+    "RunReport": "repro.api.experiment",
+    "SingleEdgeRuntime": "repro.api.experiment",
+    "FleetRuntime": "repro.api.experiment",
+}
+
+__all__ = ["Registry", "UnknownComponentError", "ALL_REGISTRIES",
+           "SOLVERS", "MODELS", "EPSILON_POLICIES", "DEPENDENCE",
+           "SAMPLERS", "BASELINES", "QUERIES", "DATASETS",
+           *_LAZY]
+
+
+def __getattr__(name: str):
+    if name in _LAZY:
+        import importlib
+        mod = importlib.import_module(_LAZY[name])
+        obj = getattr(mod, name)
+        globals()[name] = obj
+        return obj
+    raise AttributeError(f"module 'repro.api' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_LAZY))

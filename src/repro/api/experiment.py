@@ -1,0 +1,624 @@
+"""The one experiment runtime behind the Scenario API.
+
+``Experiment.from_scenario(cfg)`` builds everything a run needs from a
+:class:`~repro.api.scenario.ScenarioConfig` — data windows, edge planner,
+WAN transport(s), cloud(s), fleet controller — and ``run()`` returns a
+structured :class:`RunReport` instead of a loose dict.
+
+Two engines live here (moved verbatim from the legacy runtimes, so the
+PR-2 lock-step pins still hold bit-for-bit):
+
+  * :class:`SingleEdgeRuntime` — one edge, one uplink, one cloud on the
+    event-driven virtual clock (the former
+    ``repro.streaming.runtime.StreamingExperiment``).
+  * :class:`FleetRuntime` — E edges, per-site uplinks/clouds, batched
+    planning and the fleet budget controller (the former
+    ``repro.fleet.runtime.FleetExperiment``).
+
+``Experiment`` picks the engine from the scenario: no topology (or a
+one-site topology) is the E=1 degenerate fleet and runs single-edge with
+the lone link's WAN character; anything larger runs the fleet engine.  The
+legacy classes remain as deprecation shims delegating here.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import queries as Q
+from repro.core.reconstruct import reconstruct_window
+from repro.core.types import CompactModel, EdgePayload, PlannerConfig, WindowBatch
+from repro.api.scenario import ControllerSpec, ScenarioConfig
+
+
+# ==========================================================================
+# single-edge engine (formerly streaming.runtime.StreamingExperiment)
+# ==========================================================================
+
+@dataclasses.dataclass
+class SingleEdgeRuntime:
+    """Event-driven edge->WAN->cloud run on a virtual clock.
+
+    Window ``wid`` closes at the edge at ``wid * window_period_ms``; its
+    query is answered one period later (``t_due``), from whatever has
+    arrived by then.  Payloads landing after their due time but within
+    ``staleness_deadline_ms`` revise the already-emitted result
+    retroactively (``revisions`` count, ``nrmse`` reflects the revised
+    table, ``nrmse_at_query`` what was actually served on time); payloads
+    past the deadline fall back to stale serving and count as ``gaps``.
+
+    With zero latency and an infinite deadline this reproduces the
+    lock-step runtime bit-for-bit (tests/test_async_transport.py).
+    """
+
+    edge: "EdgeNode"
+    cloud: "CloudNode"
+    transport: "Transport"
+    window_period_ms: float = 1000.0
+    staleness_deadline_ms: Optional[float] = None
+
+    def __post_init__(self):
+        from repro.streaming.events import AsyncTransport, ReorderCloudNode
+        if not isinstance(self.transport, AsyncTransport):
+            self.transport = AsyncTransport.from_transport(self.transport)
+        self._user_cloud = None
+        if not isinstance(self.cloud, ReorderCloudNode):
+            # upgrade a plain CloudNode; its counters are mirrored back
+            # after run() so callers holding the original still see them
+            self._user_cloud = self.cloud
+            self.cloud = ReorderCloudNode(query_names=self.cloud.query_names)
+        self.cloud.window_period_ms = self.window_period_ms
+        if self.staleness_deadline_ms is not None:
+            self.cloud.deadline_ms = self.staleness_deadline_ms
+
+    def run(self, windows: list[WindowBatch]) -> dict:
+        from repro.streaming.events import freshness_percentiles
+        k = windows[0].k
+        T = len(windows)
+        qnames = self.cloud.query_names
+        period = self.window_period_ms
+        est = {q: np.full((T, k), np.nan) for q in qnames}       # revised
+        est_q = {q: np.full((T, k), np.nan) for q in qnames}     # at query
+        tru = {q: np.full((T, k), np.nan) for q in qnames}
+        ages = np.full(T, np.nan)
+        revised = np.zeros(T, bool)
+
+        def _record(wid, rec, tables):
+            res = self.cloud.query(rec)
+            for q in qnames:
+                row = res.get(q, [])
+                vals = np.asarray(row) if len(row) == k else np.full(k, np.nan)
+                for tbl in tables:
+                    tbl[q][wid] = vals
+
+        def _apply(outcome):
+            if outcome.kind == "revised":
+                _record(outcome.window_id, outcome.reconstruction, (est,))
+                revised[outcome.window_id] = True
+
+        for wid, w in enumerate(windows):
+            now = wid * period
+            q_time = now + period
+            payload = self.edge.process_window(w)
+            payload = dataclasses.replace(payload, sent_at_ms=now)
+            self.transport.send(payload, now_ms=now)
+            for ev in self.transport.drain(q_time):
+                _apply(self.cloud.ingest_event(ev.payload, now_ms=ev.at_ms))
+            rec, age, _ = self.cloud.serve(wid, q_time)
+            _record(wid, rec, (est, est_q))
+            ages[wid] = age
+            full = [np.asarray(w.values[i, : int(w.counts[i])])
+                    for i in range(k)]
+            _record(wid, full, (tru,))
+
+        # in-flight payloads may still land within the deadline and revise
+        for ev in self.transport.drain(float("inf")):
+            _apply(self.cloud.ingest_event(ev.payload, now_ms=ev.at_ms))
+        self.cloud.finalize(T)
+        if self._user_cloud is not None:
+            self._user_cloud.gaps = self.cloud.gaps
+            self._user_cloud.windows_seen = self.cloud.windows_seen
+            self._user_cloud.last_reconstruction = self.cloud.last_reconstruction
+
+        nrmse = {q: Q.nrmse_table(est[q].T, tru[q].T) for q in qnames}
+        nrmse_q = {q: Q.nrmse_table(est_q[q].T, tru[q].T) for q in qnames}
+        total_tuples = int(sum(int(np.sum(w.counts)) for w in windows))
+        return {
+            "nrmse": nrmse,
+            "nrmse_at_query": nrmse_q,
+            "wan_bytes": self.transport.bytes_sent,
+            "wan_cost": float(self.transport.bytes_cost),
+            "full_bytes": total_tuples * 4,
+            "plan_seconds": self.edge.plan_seconds,
+            "gaps": self.cloud.gaps,
+            "revisions": self.cloud.revisions,
+            "late_drops": self.cloud.late_drops,
+            "duplicates": self.cloud.duplicates,
+            "window_age_ms": ages,
+            "revised_windows": revised,
+            "freshness_ms": freshness_percentiles(ages),
+        }
+
+
+# ==========================================================================
+# fleet engine (formerly fleet.runtime.FleetExperiment)
+# ==========================================================================
+
+def _draw_real_np(rng: np.random.Generator, values: np.ndarray,
+                  counts: np.ndarray, alloc: np.ndarray) -> list[np.ndarray]:
+    """SRS without replacement per stream (host-side numpy; the jax-PRNG
+    sampler in core.samplers costs one dispatch per stream — at fleet scale
+    that is E*k dispatches per window, which would dwarf planning)."""
+    out = []
+    for i in range(len(alloc)):
+        n_i = int(min(int(alloc[i]), int(counts[i])))
+        if n_i <= 0:
+            out.append(np.zeros((0,), np.float32))
+            continue
+        idx = rng.permutation(int(counts[i]))[:n_i]
+        out.append(values[i, idx].astype(np.float32))
+    return out
+
+
+@dataclasses.dataclass
+class FleetRuntime:
+    """Simulates E edge sites against one cloud for a window sequence."""
+
+    topology: "FleetTopology"
+    controller: "BudgetController"
+    cfg: PlannerConfig = dataclasses.field(default_factory=PlannerConfig)
+    planning: str = "batched"          # "batched" | "host_loop"
+    use_kernel: Optional[bool] = None  # None=auto: Pallas kernel on TPU only
+    interpret: bool = False            # kernel interpret mode (CPU testing)
+    straggler_drop: Optional[Callable[[int, int, int], bool]] = None
+    query_names: tuple = ("AVG", "VAR")
+    window_period_ms: float = 1000.0   # virtual tumbling-window cadence
+    staleness_deadline_ms: float = float("inf")
+
+    def __post_init__(self):
+        from repro.streaming.events import AsyncTransport, ReorderCloudNode
+        sites = self.topology.sites
+        self.transports = [AsyncTransport(drop_prob=s.link.drop_prob,
+                                          seed=self.cfg.seed + s.site_id,
+                                          cost_per_byte=s.link.cost_per_byte,
+                                          latency_ms=s.link.latency_ms,
+                                          jitter_ms=s.link.jitter_ms)
+                           for s in sites]
+        self.clouds = [ReorderCloudNode(query_names=self.query_names,
+                                        window_period_ms=self.window_period_ms,
+                                        deadline_ms=self.staleness_deadline_ms)
+                       for _ in sites]
+        self.plan_seconds = 0.0
+        self.plan_windows = 0
+        self._rng = np.random.default_rng(self.cfg.seed)
+
+    # ---------------------------------------------------------------- plan
+    def _plan(self, wid: int, values: np.ndarray, counts: np.ndarray,
+              budgets: np.ndarray) -> dict:
+        """(E,k,N) window -> host-side plan arrays (or per-site payloads)."""
+        from repro.fleet.batched_planner import fleet_plan
+        t0 = time.perf_counter()
+        if self.planning == "batched":
+            plan = fleet_plan(jnp.asarray(values, jnp.float32),
+                              jnp.asarray(counts, jnp.int32),
+                              jnp.asarray(budgets, jnp.float32),
+                              self.cfg.epsilon_scale,
+                              dependence=self.cfg.dependence,
+                              model=self.cfg.model,
+                              epsilon_policy=self.cfg.epsilon_policy,
+                              use_kernel=self.use_kernel,
+                              interpret=self.interpret)
+            out = {f.name: np.asarray(getattr(plan, f.name))
+                   for f in dataclasses.fields(plan)}
+        else:   # the replaced path: E independent plan_window round trips
+            from repro.core.planner import plan_window
+            payloads, r2 = [], np.zeros(values.shape[0])
+            for s in range(values.shape[0]):
+                batch = WindowBatch.from_numpy(values[s], counts[s], wid)
+                payload, diag = plan_window(batch, float(budgets[s]), self.cfg)
+                payloads.append(payload)
+                if payload.model is not None:
+                    ev = np.asarray(payload.model.explained_var
+                                    if not isinstance(payload.model, dict)
+                                    else payload.model["explained_var"])
+                    var = np.maximum(payload.stats_digest["var"], 1e-12)
+                    r2[s] = float(np.mean(np.clip(ev / var, 0.0, 1.0)))
+            out = {"payloads": payloads, "r2": r2}
+        self.plan_seconds += time.perf_counter() - t0
+        self.plan_windows += 1
+        return out
+
+    def _payload(self, plan: dict, s: int, wid: int, values: np.ndarray,
+                 counts: np.ndarray) -> EdgePayload:
+        if "payloads" in plan:
+            return plan["payloads"][s]
+        real = _draw_real_np(self._rng, values, counts, plan["n_real"][s])
+        pred = plan["predictor"][s]
+        ns = plan["n_imputed"][s].copy()
+        for i in range(len(ns)):
+            ns[i] = min(ns[i], len(real[int(pred[i])]))       # 1d, post-draw
+        model = CompactModel(coeffs=plan["coeffs"][s], loc=plan["loc"][s],
+                             scale=plan["scale"][s],
+                             explained_var=plan["explained_var"][s],
+                             predictor=pred)
+        return EdgePayload(
+            window_id=wid,
+            n_real=np.asarray([len(v) for v in real], np.int64),
+            n_imputed=ns.astype(np.int64),
+            real_values=real,
+            model=model,
+            mean_imputation=False,
+            predictor=np.asarray(pred, np.int64),
+            stats_digest={"mean": np.asarray(plan["mean"][s]),
+                          "var": np.asarray(plan["var"][s])})
+
+    # ----------------------------------------------------------------- run
+    def run(self, fleet_windows: list[np.ndarray]) -> dict:
+        """fleet_windows: list over time of (E, k, N) float arrays.
+
+        Event-driven on a virtual clock: window ``wid`` is planned and sent
+        at ``wid * window_period_ms``, each site's query is answered one
+        period later from whatever its uplink has delivered by then, and
+        late-but-within-deadline arrivals revise their window's entry in the
+        (revised) estimate table retroactively.  Heterogeneous per-site
+        ``LinkSpec.latency_ms`` therefore shows up as per-site window age
+        (``freshness_ms``, ``site_arrival_lag_ms``) instead of being a dead
+        accounting field.
+        """
+        from repro.streaming.events import freshness_percentiles
+        E, k, n = fleet_windows[0].shape
+        T = len(fleet_windows)
+        reg_idx = self.topology.region_of()
+        qnames = self.query_names
+        period = self.window_period_ms
+        est = {q: np.full((T, E, k), np.nan) for q in qnames}    # revised
+        est_q = {q: np.full((T, E, k), np.nan) for q in qnames}  # at query
+        tru = {q: np.full((T, E, k), np.nan) for q in qnames}
+        ages = np.full((T, E), np.nan)
+        budget_history = []
+
+        def _row(res):
+            return {q: (np.asarray(res[q]) if len(res.get(q, [])) == k
+                        else np.full(k, np.nan)) for q in qnames}
+
+        def _apply(s, outcome):
+            if outcome.kind == "revised":
+                res = _row(self.clouds[s].query(outcome.reconstruction))
+                for q in qnames:
+                    est[q][outcome.window_id, s] = res[q]
+
+        for wid, w in enumerate(fleet_windows):
+            now = wid * period
+            q_time = now + period
+            w = np.asarray(w, np.float32)
+            counts = np.full((E, k), n, np.int64)
+            if self.straggler_drop is not None:
+                for s in range(E):
+                    for i in range(k):
+                        if self.straggler_drop(wid, s, i):
+                            counts[s, i] = 0
+            budgets = np.maximum(np.floor(self.controller.budgets()), 2.0)
+            budget_history.append(budgets)
+            plan = self._plan(wid, w, counts, budgets)
+
+            obs_err = np.zeros(E)
+            lag_obs = np.full(E, np.nan)
+            for s in range(E):
+                payload = self._payload(plan, s, wid, w[s], counts[s])
+                payload = dataclasses.replace(payload, sent_at_ms=now)
+                self.transports[s].send(payload, now_ms=now)
+                lags = []
+                for ev in self.transports[s].drain(q_time):
+                    lags.append(ev.at_ms - ev.payload.sent_at_ms)
+                    _apply(s, self.clouds[s].ingest_event(ev.payload,
+                                                          now_ms=ev.at_ms))
+                if lags:
+                    lag_obs[s] = float(np.mean(lags))
+                rec, age, _ = self.clouds[s].serve(wid, q_time)
+                res = _row(self.clouds[s].query(rec))
+                res_true = _row(self.clouds[s].query([w[s, i]
+                                                      for i in range(k)]))
+                for q in qnames:
+                    est[q][wid, s] = res[q]
+                    est_q[q][wid, s] = res[q]
+                    tru[q][wid, s] = res_true[q]
+                ages[wid, s] = age
+                # edge-local error proxy: the edge knows its true window and
+                # its own payload, so it can score the reconstruction the
+                # cloud *would* produce — feeds the controller for free
+                edge_rec = reconstruct_window(payload)
+                t_mean = np.asarray([np.mean(w[s, i]) for i in range(k)])
+                e_mean = np.asarray([np.mean(r) if len(r) else np.nan
+                                     for r in edge_rec])
+                obs_err[s] = np.nanmean(np.abs(e_mean - t_mean)
+                                        / np.maximum(np.abs(t_mean), 1e-6))
+            self.controller.update(obs_err, plan["r2"],
+                                   objective=plan.get("objective"),
+                                   arrival_lag=lag_obs)
+
+        # drain in-flight payloads: late revisions and gap accounting
+        for s in range(E):
+            for ev in self.transports[s].drain(float("inf")):
+                _apply(s, self.clouds[s].ingest_event(ev.payload,
+                                                      now_ms=ev.at_ms))
+            self.clouds[s].finalize(T)
+
+        # ------------------------------------------------- aggregate errors
+        nrmse_site = {}                         # {q: (E, k)}
+        nrmse_site_q = {}
+        for q in qnames:
+            e_arr = est[q].transpose(1, 2, 0)   # (E, k, T)
+            eq_arr = est_q[q].transpose(1, 2, 0)
+            t_arr = tru[q].transpose(1, 2, 0)
+            nrmse_site[q] = np.asarray(
+                [Q.nrmse_table(e_arr[s], t_arr[s]) for s in range(E)])
+            nrmse_site_q[q] = np.asarray(
+                [Q.nrmse_table(eq_arr[s], t_arr[s]) for s in range(E)])
+
+        region_nrmse = {name: {} for name in self.topology.region_names}
+        for r, name in enumerate(self.topology.region_names):
+            sel = reg_idx == r
+            for q in qnames:
+                region_nrmse[name][q] = float(np.nanmean(nrmse_site[q][sel]))
+
+        bytes_by_region = {name: 0 for name in self.topology.region_names}
+        cost_by_region = {name: 0.0 for name in self.topology.region_names}
+        for s, site in enumerate(self.topology.sites):
+            bytes_by_region[site.region] += self.transports[s].bytes_sent
+            cost_by_region[site.region] += self.transports[s].bytes_cost
+        total_tuples = T * E * k * n
+
+        freshness_by_region = {
+            name: freshness_percentiles(ages[:, reg_idx == r])
+            for r, name in enumerate(self.topology.region_names)}
+
+        return {
+            "fleet_nrmse": {q: float(np.nanmean(nrmse_site[q]))
+                            for q in qnames},
+            "fleet_nrmse_at_query": {q: float(np.nanmean(nrmse_site_q[q]))
+                                     for q in qnames},
+            "region_nrmse": region_nrmse,
+            "site_nrmse": nrmse_site,
+            "wan_bytes": int(sum(t.bytes_sent for t in self.transports)),
+            "wan_bytes_by_region": bytes_by_region,
+            "wan_cost": float(sum(t.bytes_cost for t in self.transports)),
+            "wan_cost_by_region": cost_by_region,
+            "full_bytes": total_tuples * 4,
+            "gaps": int(sum(c.gaps for c in self.clouds)),
+            "revisions": int(sum(c.revisions for c in self.clouds)),
+            "late_drops": int(sum(c.late_drops for c in self.clouds)),
+            "duplicates": int(sum(c.duplicates for c in self.clouds)),
+            "freshness_ms": freshness_percentiles(ages),
+            "freshness_by_region": freshness_by_region,
+            "window_age_ms": ages,
+            "site_arrival_lag_ms": self.controller.arrival_lag_ms,
+            "plan_seconds": self.plan_seconds,
+            "plan_windows": self.plan_windows,
+            "budget_history": np.asarray(budget_history),
+        }
+
+
+# ==========================================================================
+# RunReport: one structured result shape for both engines
+# ==========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class RunReport:
+    """Structured result of one scenario run.
+
+    ``nrmse``/``nrmse_at_query`` are per-query scalar summaries (fleet-wide
+    nan-mean); ``nrmse_per_stream`` keeps the full table ((k,) single-edge,
+    (E, k) fleet).  Single-edge runs report one region named ``"local"``.
+    ``raw`` is the engine's native dict for anything not lifted here
+    (window ages, budget history, revised-window flags, ...).
+    """
+
+    scenario: Optional[ScenarioConfig]
+    n_sites: int
+    nrmse: dict                    # {query: float}
+    nrmse_at_query: dict           # {query: float}
+    nrmse_per_stream: dict         # {query: np.ndarray}
+    region_nrmse: dict             # {region: {query: float}}
+    wan_bytes: int
+    wan_cost: float
+    full_bytes: int
+    wan_bytes_by_region: dict
+    wan_cost_by_region: dict
+    gaps: int
+    revisions: int
+    late_drops: int
+    duplicates: int
+    freshness_ms: dict             # {"p50_ms": .., "p99_ms": ..}
+    freshness_by_region: dict
+    plan_seconds: float
+    raw: dict
+
+    @property
+    def wan_fraction(self) -> float:
+        """WAN bytes as a fraction of shipping every tuple raw."""
+        return self.wan_bytes / max(self.full_bytes, 1)
+
+    def to_dict(self) -> dict:
+        """JSON-friendly summary (drops the raw arrays)."""
+        return {
+            "scenario": (None if self.scenario is None
+                         else self.scenario.to_dict()),
+            "n_sites": self.n_sites,
+            "nrmse": dict(self.nrmse),
+            "nrmse_at_query": dict(self.nrmse_at_query),
+            "region_nrmse": {r: dict(qs)
+                             for r, qs in self.region_nrmse.items()},
+            "wan_bytes": self.wan_bytes,
+            "wan_cost": self.wan_cost,
+            "full_bytes": self.full_bytes,
+            "wan_bytes_by_region": dict(self.wan_bytes_by_region),
+            "wan_cost_by_region": dict(self.wan_cost_by_region),
+            "gaps": self.gaps,
+            "revisions": self.revisions,
+            "late_drops": self.late_drops,
+            "duplicates": self.duplicates,
+            "freshness_ms": dict(self.freshness_ms),
+            "plan_seconds": self.plan_seconds,
+        }
+
+    def summary(self) -> str:
+        errs = " ".join(f"{q}={v:.4f}" for q, v in self.nrmse.items())
+        return (f"{errs} wan={self.wan_bytes}B ({self.wan_fraction:.0%} of "
+                f"raw) cost={self.wan_cost:.0f} gaps={self.gaps} "
+                f"age_p99={self.freshness_ms['p99_ms']:.0f}ms")
+
+
+def _report_single(scenario, r: dict) -> RunReport:
+    nrmse = {q: float(np.nanmean(v)) for q, v in r["nrmse"].items()}
+    nrmse_q = {q: float(np.nanmean(v))
+               for q, v in r["nrmse_at_query"].items()}
+    return RunReport(
+        scenario=scenario, n_sites=1,
+        nrmse=nrmse, nrmse_at_query=nrmse_q,
+        nrmse_per_stream={q: np.asarray(v) for q, v in r["nrmse"].items()},
+        region_nrmse={"local": nrmse},
+        wan_bytes=int(r["wan_bytes"]), wan_cost=float(r.get("wan_cost", 0.0)),
+        full_bytes=int(r["full_bytes"]),
+        wan_bytes_by_region={"local": int(r["wan_bytes"])},
+        wan_cost_by_region={"local": float(r.get("wan_cost", 0.0))},
+        gaps=int(r["gaps"]), revisions=int(r["revisions"]),
+        late_drops=int(r["late_drops"]), duplicates=int(r["duplicates"]),
+        freshness_ms=dict(r["freshness_ms"]),
+        freshness_by_region={"local": dict(r["freshness_ms"])},
+        plan_seconds=float(r["plan_seconds"]),
+        raw=r)
+
+
+def _report_fleet(scenario, r: dict, n_sites: int) -> RunReport:
+    return RunReport(
+        scenario=scenario, n_sites=n_sites,
+        nrmse=dict(r["fleet_nrmse"]),
+        nrmse_at_query=dict(r["fleet_nrmse_at_query"]),
+        nrmse_per_stream={q: np.asarray(v)
+                          for q, v in r["site_nrmse"].items()},
+        region_nrmse={reg: dict(qs)
+                      for reg, qs in r["region_nrmse"].items()},
+        wan_bytes=int(r["wan_bytes"]), wan_cost=float(r["wan_cost"]),
+        full_bytes=int(r["full_bytes"]),
+        wan_bytes_by_region=dict(r["wan_bytes_by_region"]),
+        wan_cost_by_region=dict(r["wan_cost_by_region"]),
+        gaps=int(r["gaps"]), revisions=int(r["revisions"]),
+        late_drops=int(r["late_drops"]), duplicates=int(r["duplicates"]),
+        freshness_ms=dict(r["freshness_ms"]),
+        freshness_by_region={reg: dict(f)
+                             for reg, f in r["freshness_by_region"].items()},
+        plan_seconds=float(r["plan_seconds"]),
+        raw=r)
+
+
+# ==========================================================================
+# Experiment: scenario in, report out
+# ==========================================================================
+
+@dataclasses.dataclass
+class Experiment:
+    """One runnable experiment, built declaratively from a scenario.
+
+    ``straggler_drop`` is the only non-serializable knob: a callable
+    ``(wid, stream) -> bool`` (single-edge) or ``(wid, site, stream) ->
+    bool`` (fleet) injected at build time for fault studies.
+    """
+
+    scenario: ScenarioConfig
+    runtime: object                    # SingleEdgeRuntime | FleetRuntime
+
+    @classmethod
+    def from_scenario(cls, scenario: ScenarioConfig,
+                      straggler_drop: Optional[Callable] = None,
+                      planning: str = "batched",
+                      use_kernel: Optional[bool] = None,
+                      interpret: bool = False) -> "Experiment":
+        from repro.streaming.events import AsyncTransport
+        from repro.streaming.runtime import CloudNode, EdgeNode
+        tspec = scenario.transport
+        if scenario.is_fleet:
+            topo = scenario.topology.build(cls._fleet_k(scenario))
+            controller = cls._build_controller(scenario, topo)
+            runtime = FleetRuntime(
+                topology=topo, controller=controller, cfg=scenario.planner,
+                planning=planning, use_kernel=use_kernel, interpret=interpret,
+                straggler_drop=straggler_drop,
+                query_names=tuple(scenario.queries),
+                window_period_ms=tspec.window_period_ms,
+                staleness_deadline_ms=(float("inf")
+                                       if tspec.staleness_deadline_ms is None
+                                       else tspec.staleness_deadline_ms))
+            return cls(scenario=scenario, runtime=runtime)
+
+        # single edge — the E=1 degenerate fleet.  A one-site topology
+        # contributes its link's WAN character; otherwise TransportSpec
+        # describes the uplink directly.
+        drop, cost, lat, jit = (tspec.drop_prob, 1.0, tspec.latency_ms,
+                                tspec.jitter_ms)
+        if scenario.topology is not None:
+            link = scenario.topology.build(1).sites[0].link
+            drop, cost, lat, jit = (link.drop_prob, link.cost_per_byte,
+                                    link.latency_ms, link.jitter_ms)
+        runtime = SingleEdgeRuntime(
+            edge=EdgeNode(cfg=scenario.planner,
+                          budget_fraction=scenario.budget_fraction,
+                          method=scenario.method,
+                          straggler_drop=straggler_drop),
+            cloud=CloudNode(query_names=tuple(scenario.queries)),
+            transport=AsyncTransport(drop_prob=drop, seed=scenario.planner.seed,
+                                     cost_per_byte=cost, latency_ms=lat,
+                                     jitter_ms=jit),
+            window_period_ms=tspec.window_period_ms,
+            staleness_deadline_ms=tspec.staleness_deadline_ms)
+        return cls(scenario=scenario, runtime=runtime)
+
+    # ------------------------------------------------------------- helpers
+    @staticmethod
+    def _fleet_k(scenario: ScenarioConfig) -> int:
+        return int(scenario.data.options.get("k", 6))
+
+    @staticmethod
+    def _build_controller(scenario: ScenarioConfig, topo) -> "BudgetController":
+        from repro.fleet.controller import BudgetController
+        spec = scenario.controller or ControllerSpec()
+        E = topo.n_sites
+        total = (scenario.budget_fraction * E * topo.k
+                 * scenario.data.window)
+        link_cost = np.asarray([s.link.cost_per_byte for s in topo.sites])
+        return BudgetController(
+            total_budget=total, n_sites=E, mode=spec.mode,
+            floor_mult=spec.floor_mult, ceil_mult=spec.ceil_mult,
+            ewma=spec.ewma,
+            link_cost=link_cost if spec.link_cost_aware else None,
+            cost_aware=spec.link_cost_aware)
+
+    def make_windows(self):
+        """Materialize the scenario's window sequence (deterministic)."""
+        from repro.api.registry import DATASETS
+        data = self.scenario.data
+        if self.scenario.is_fleet:
+            from repro.data.streams import fleet_windows
+            topo_spec = self.scenario.topology
+            gen = DATASETS.get(data.dataset)
+            vals, _ = gen(n_sites=topo_spec.n_sites,
+                          n_regions=topo_spec.n_regions,
+                          n_points=data.n_points, seed=data.seed,
+                          **dict(data.options))
+            return fleet_windows(vals, data.window)
+        from repro.data.streams import windows_from_matrix
+        vals, _ = data.generate()
+        return windows_from_matrix(vals, data.window)
+
+    # ----------------------------------------------------------------- run
+    def run(self, windows=None) -> RunReport:
+        if windows is None:
+            windows = self.make_windows()
+        r = self.runtime.run(windows)
+        if isinstance(self.runtime, FleetRuntime):
+            return _report_fleet(self.scenario, r,
+                                 self.runtime.topology.n_sites)
+        return _report_single(self.scenario, r)

@@ -1,0 +1,146 @@
+"""Component registries — the single namespace behind every stringly-typed
+config field.
+
+Every pluggable piece of the pipeline (solver, imputation model, epsilon
+policy, dependence measure, allocation sampler, baseline planner, aggregate
+query, dataset generator) registers itself here under a short name.  The
+string fields of :class:`~repro.core.types.PlannerConfig`, the ``method``
+argument of the runtimes, and :class:`~repro.api.scenario.ScenarioConfig`
+all resolve through these registries, so
+
+  * adding a component is one decorator, not a fork of a runtime loop;
+  * an unknown name fails fast with the list of registered alternatives;
+  * discovery is programmatic (``SOLVERS.names()``) — CI walks the
+    registries to assert every component is exercised somewhere.
+
+This module is deliberately import-light (stdlib only): the defining
+modules in ``repro.core`` / ``repro.data`` import it to register their
+components at import time, so it must not import them back.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Iterator, Optional
+
+
+class UnknownComponentError(KeyError):
+    """Lookup of a name nobody registered; carries the alternatives."""
+
+    def __init__(self, kind: str, name: str, alternatives: tuple):
+        self.kind = kind
+        self.name = name
+        self.alternatives = alternatives
+        opts = ", ".join(repr(a) for a in alternatives) or "<none>"
+        super().__init__(
+            f"unknown {kind} {name!r}; registered {kind}s: {opts}")
+
+    def __str__(self) -> str:      # KeyError.__str__ repr()s the message
+        return self.args[0]
+
+
+class Registry:
+    """Name -> component mapping with decorator registration.
+
+    Usable both as ``@REG.register("name")`` and ``REG.register("name",
+    obj)``; read access is dict-like (``REG["name"]``, ``in``, ``.items()``)
+    so existing call sites that indexed a plain dict keep working.
+    """
+
+    def __init__(self, kind: str):
+        self.kind = kind
+        self._items: dict[str, Any] = {}
+
+    # ------------------------------------------------------------ write
+    def register(self, name: str, obj: Optional[Any] = None,
+                 aliases: tuple[str, ...] = ()):
+        def _add(target):
+            for n in (name, *aliases):
+                if n in self._items and self._items[n] is not target:
+                    raise ValueError(
+                        f"{self.kind} {n!r} already registered")
+                self._items[n] = target
+            return target
+
+        if obj is None:            # decorator form
+            return _add
+        return _add(obj)
+
+    # ------------------------------------------------------------- read
+    def get(self, name: str) -> Any:
+        try:
+            return self._items[name]
+        except KeyError:
+            raise UnknownComponentError(self.kind, name,
+                                        self.names()) from None
+
+    def names(self) -> tuple[str, ...]:
+        return tuple(sorted(self._items))
+
+    def __getitem__(self, name: str) -> Any:
+        return self.get(name)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._items
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(sorted(self._items))
+
+    def __len__(self) -> int:
+        return len(self._items)
+
+    def keys(self):
+        return self.names()
+
+    def items(self):
+        return tuple((n, self._items[n]) for n in self.names())
+
+    def __repr__(self) -> str:
+        return f"Registry({self.kind!r}, names={list(self.names())})"
+
+
+# --------------------------------------------------------------------------
+# The global registries.  Populated by the defining modules at import time:
+#   SOLVERS           repro.core.solver      (ipm | slsqp | closed_form)
+#   MODELS            repro.core.planner     (linear | cubic | mean | multi)
+#   EPSILON_POLICIES  repro.core.epsilon     (k_se | alpha | exact_mse)
+#   DEPENDENCE        repro.core.stats       (pearson | spearman)
+#   SAMPLERS          repro.core.samplers    (srs | stratified | svoila |
+#                                             neyman_cost)
+#   BASELINES         repro.core.planner     (srs | approx_iot | s_voila |
+#                                             neyman_cost)
+#   QUERIES           repro.core.queries     (AVG | VAR | MIN | MAX | MEDIAN)
+#   DATASETS          repro.data.streams     (home | turbine | smartcity |
+#                                             mvn | fleet)
+# --------------------------------------------------------------------------
+
+SOLVERS = Registry("solver")
+MODELS = Registry("imputation model")
+EPSILON_POLICIES = Registry("epsilon policy")
+DEPENDENCE = Registry("dependence measure")
+SAMPLERS = Registry("allocation sampler")
+BASELINES = Registry("baseline planner")
+QUERIES = Registry("query")
+DATASETS = Registry("dataset")
+
+ALL_REGISTRIES: dict[str, Registry] = {
+    "solvers": SOLVERS,
+    "models": MODELS,
+    "epsilon_policies": EPSILON_POLICIES,
+    "dependence": DEPENDENCE,
+    "samplers": SAMPLERS,
+    "baselines": BASELINES,
+    "queries": QUERIES,
+    "datasets": DATASETS,
+}
+
+
+def populate() -> dict[str, Registry]:
+    """Import every registering module, then return ``ALL_REGISTRIES``.
+
+    The registries fill lazily as their defining modules import; tools that
+    want the complete picture (CI coverage check, ``docs/api.md`` tables)
+    call this to force all registrations.
+    """
+    import repro.core.planner    # noqa: F401  (pulls solver/epsilon/stats/..)
+    import repro.core.queries    # noqa: F401
+    import repro.data.streams    # noqa: F401
+    return ALL_REGISTRIES

@@ -1,0 +1,257 @@
+"""ScenarioConfig — one frozen, JSON-round-trippable experiment description.
+
+A scenario names everything an :class:`~repro.api.experiment.Experiment`
+needs: the data source, the (optional) fleet topology, the Algorithm-1
+planner configuration, the WAN transport timing, the fleet budget
+controller, the queries and every seed.  All stringly-typed component
+fields are validated against the registries at construction time, so a typo
+fails at config-build with the registered alternatives listed instead of
+deep inside a run.
+
+Round trip: ``ScenarioConfig.from_json(cfg.to_json()) == cfg`` (array-like
+planner fields are normalized to nested tuples for that reason).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Optional
+
+import numpy as np
+
+from repro.api import registry as _reg
+from repro.core.types import PlannerConfig
+
+_reg.populate()        # component validation needs the registries filled
+
+
+def _freeze(v):
+    """Arrays/lists -> nested tuples so frozen configs compare and hash."""
+    if isinstance(v, np.ndarray):
+        return _freeze(v.tolist())
+    if isinstance(v, (list, tuple)):
+        return tuple(_freeze(x) for x in v)
+    if isinstance(v, (np.integer,)):
+        return int(v)
+    if isinstance(v, (np.floating,)):
+        return float(v)
+    return v
+
+
+def _thaw(v):
+    """JSON-side: tuples -> lists (json.dumps handles the rest)."""
+    if isinstance(v, tuple):
+        return [_thaw(x) for x in v]
+    if isinstance(v, dict):
+        return {k: _thaw(x) for k, x in v.items()}
+    return v
+
+
+@dataclasses.dataclass(frozen=True)
+class DataSpec:
+    """Which dataset generator feeds the experiment.
+
+    ``dataset`` resolves through the dataset registry; ``options`` are
+    passed to the generator verbatim (e.g. ``{"k": 6}`` for turbine,
+    ``{"rho": 0.8}`` for mvn, ``{"region_strength": [...]}`` for fleet).
+    ``window`` is the tumbling-window length in tuples.
+    """
+
+    dataset: str = "smartcity"
+    n_points: int = 2048
+    window: int = 256
+    seed: int = 0
+    options: dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        _reg.DATASETS.get(self.dataset)
+        object.__setattr__(self, "options",
+                           {k: _freeze(v) for k, v in self.options.items()})
+
+    def __hash__(self):
+        # the dataclass-generated hash chokes on the dict field; option
+        # values are already frozen to nested tuples, so hash its items
+        return hash((self.dataset, self.n_points, self.window, self.seed,
+                     tuple(sorted(self.options.items()))))
+
+    def generate(self):
+        """(values, meta) from the registered generator."""
+        gen = _reg.DATASETS.get(self.dataset)
+        return gen(n_points=self.n_points, seed=self.seed,
+                   **dict(self.options))
+
+
+@dataclasses.dataclass(frozen=True)
+class TopologySpec:
+    """Fleet geometry + per-link WAN character (repro.fleet.topology).
+
+    ``None`` in :class:`ScenarioConfig` means single-edge; a spec whose
+    ``n_sites`` is 1 also degenerates to the single-edge runtime (its lone
+    link feeding the transport).
+    """
+
+    n_regions: int = 1
+    sites_per_region: int = 1
+    seed: int = 0
+    drop_prob: float = 0.0
+    hetero_links: bool = True
+    latency_scale: float = 1.0
+    jitter_ms: float = 0.0
+
+    @property
+    def n_sites(self) -> int:
+        return self.n_regions * self.sites_per_region
+
+    def build(self, k: int):
+        from repro.fleet.topology import make_topology
+        return make_topology(self.n_regions, self.sites_per_region, k,
+                             seed=self.seed, drop_prob=self.drop_prob,
+                             hetero_links=self.hetero_links,
+                             latency_scale=self.latency_scale,
+                             jitter_ms=self.jitter_ms)
+
+
+@dataclasses.dataclass(frozen=True)
+class TransportSpec:
+    """WAN timing for the event-driven runtime (docs/transport.md).
+
+    ``drop_prob``/``latency_ms``/``jitter_ms`` configure the single-edge
+    uplink; fleet links come from the topology instead.  ``None`` deadline
+    means infinite (late payloads always revise).
+    """
+
+    drop_prob: float = 0.0
+    latency_ms: float = 0.0
+    jitter_ms: float = 0.0
+    window_period_ms: float = 1000.0
+    staleness_deadline_ms: Optional[float] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ControllerSpec:
+    """Fleet budget controller (repro.fleet.controller.BudgetController).
+
+    ``link_cost_aware`` switches on cost-aware water-filling: per-site
+    demand is discounted by sqrt of the site's relative $/byte so expensive
+    uplinks yield budget first.  Default off — bit-for-bit parity with the
+    pre-registry controller.
+    """
+
+    mode: str = "rebalance"            # "rebalance" | "static"
+    floor_mult: float = 0.3
+    ceil_mult: float = 3.0
+    ewma: float = 0.5
+    link_cost_aware: bool = False
+
+    def __post_init__(self):
+        if self.mode not in ("rebalance", "static"):
+            raise ValueError(f"controller mode must be 'rebalance' or "
+                             f"'static', got {self.mode!r}")
+
+
+def _valid_method(method: str) -> None:
+    # "model" = run the Algorithm-1 planner with the scenario's
+    # planner.model; a registered model name pins that family instead;
+    # a registered baseline name bypasses the planner entirely.
+    if method == "model" or method in _reg.MODELS or method in _reg.BASELINES:
+        return
+    alternatives = ("model", *_reg.MODELS.names(), *_reg.BASELINES.names())
+    raise _reg.UnknownComponentError("method", method, alternatives)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioConfig:
+    """Everything one experiment run depends on, declaratively."""
+
+    data: DataSpec = dataclasses.field(default_factory=DataSpec)
+    method: str = "model"
+    budget_fraction: float = 0.25
+    planner: PlannerConfig = dataclasses.field(default_factory=PlannerConfig)
+    topology: Optional[TopologySpec] = None
+    controller: Optional[ControllerSpec] = None
+    transport: TransportSpec = dataclasses.field(default_factory=TransportSpec)
+    queries: tuple = ("AVG", "VAR", "MIN", "MAX")
+    name: str = ""
+
+    def __post_init__(self):
+        # normalize array-like planner fields to tuples (JSON round trip +
+        # dataclass equality), then validate every registry-backed string
+        planner = self.planner
+        for f in ("cost_per_sample", "fixed_predictors"):
+            v = getattr(planner, f)
+            if v is not None and not isinstance(v, tuple):
+                planner = dataclasses.replace(planner, **{f: _freeze(v)})
+        object.__setattr__(self, "planner", planner)
+        object.__setattr__(self, "queries", tuple(self.queries))
+
+        _valid_method(self.method)
+        _reg.SOLVERS.get(planner.solver)
+        _reg.MODELS.get(planner.model)
+        _reg.EPSILON_POLICIES.get(planner.epsilon_policy)
+        _reg.DEPENDENCE.get(planner.dependence)
+        for q in self.queries:
+            _reg.QUERIES.get(q)
+
+        # dataset/topology pairing: fleet generators produce an (E, k, T)
+        # site tensor and need a multi-site topology; matrix generators
+        # cannot be spread over one.  Catch it here, not deep inside run().
+        gen_is_fleet = bool(getattr(_reg.DATASETS.get(self.data.dataset),
+                                    "is_fleet_dataset", False))
+        if gen_is_fleet and not self.is_fleet:
+            raise ValueError(
+                f"dataset {self.data.dataset!r} is a fleet generator; it "
+                f"needs a topology with more than one site")
+        if self.is_fleet and not gen_is_fleet:
+            raise ValueError(
+                f"topology has {self.topology.n_sites} sites but dataset "
+                f"{self.data.dataset!r} is single-edge (k, T); use a fleet "
+                f"dataset or drop the topology")
+
+    # ------------------------------------------------------------ derived
+    @property
+    def is_fleet(self) -> bool:
+        return self.topology is not None and self.topology.n_sites > 1
+
+    # --------------------------------------------------------- serialization
+    def to_dict(self) -> dict:
+        d = {
+            "data": _thaw(dataclasses.asdict(self.data)),
+            "method": self.method,
+            "budget_fraction": self.budget_fraction,
+            "planner": _thaw(dataclasses.asdict(self.planner)),
+            "topology": (None if self.topology is None
+                         else dataclasses.asdict(self.topology)),
+            "controller": (None if self.controller is None
+                           else dataclasses.asdict(self.controller)),
+            "transport": dataclasses.asdict(self.transport),
+            "queries": list(self.queries),
+            "name": self.name,
+        }
+        return d
+
+    def to_json(self, **kw) -> str:
+        kw.setdefault("sort_keys", True)
+        return json.dumps(self.to_dict(), **kw)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ScenarioConfig":
+        d = dict(d)
+        planner = {k: (_freeze(v) if isinstance(v, list) else v)
+                   for k, v in d.get("planner", {}).items()}
+        return cls(
+            data=DataSpec(**d.get("data", {})),
+            method=d.get("method", "model"),
+            budget_fraction=d.get("budget_fraction", 0.25),
+            planner=PlannerConfig(**planner),
+            topology=(None if d.get("topology") is None
+                      else TopologySpec(**d["topology"])),
+            controller=(None if d.get("controller") is None
+                        else ControllerSpec(**d["controller"])),
+            transport=TransportSpec(**d.get("transport", {})),
+            queries=tuple(d.get("queries", ("AVG", "VAR", "MIN", "MAX"))),
+            name=d.get("name", ""),
+        )
+
+    @classmethod
+    def from_json(cls, s: str) -> "ScenarioConfig":
+        return cls.from_dict(json.loads(s))

@@ -3,6 +3,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.api.registry import EPSILON_POLICIES
 from repro.core.types import StreamStats
 
 
@@ -48,10 +49,13 @@ def exact_mse_cap(stats: StreamStats, n_real: np.ndarray, n_imp: np.ndarray,
     return np.sqrt(np.maximum(v_std - v_new, 0.0))
 
 
+EPSILON_POLICIES.register("alpha", lambda stats, scale: alpha_fraction(stats, alpha=scale))
+EPSILON_POLICIES.register("k_se", lambda stats, scale: k_standard_errors(stats, k_se=scale))
+# exact_mse starts from the k-SE default and is capped post-solve
+# (planner.apply_exact_mse_cap)
+EPSILON_POLICIES.register("exact_mse", lambda stats, scale: k_standard_errors(stats, k_se=scale))
+
+
 def make_epsilon(policy: str, stats: StreamStats, scale: float) -> np.ndarray:
-    if policy == "alpha":
-        return alpha_fraction(stats, alpha=scale)
-    if policy in ("k_se", "exact_mse"):
-        # exact_mse starts from the 1-SE default and is capped post-solve
-        return k_standard_errors(stats, k_se=scale)
-    raise ValueError(f"unknown epsilon policy: {policy}")
+    """Resolve ``policy`` through the epsilon-policy registry and apply it."""
+    return EPSILON_POLICIES.get(policy)(stats, scale)

@@ -12,12 +12,13 @@ returns the :class:`EdgePayload` that crosses the WAN plus diagnostics.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api.registry import BASELINES, MODELS
 from repro.core import epsilon as eps_mod
 from repro.core import models as models_mod
 from repro.core import predictor as pred_mod
@@ -36,6 +37,40 @@ class PlanDiagnostics:
     strides: Optional[np.ndarray]
     predictor: np.ndarray
     solver_feasible: bool
+
+
+# --------------------------------------------------------------------------
+# imputation-model registry: each entry bundles how to pick predictors, how
+# to fit the compact model and what it costs on the wire (constraint 1f)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """One registered imputation-model family (``PlannerConfig.model``)."""
+
+    name: str
+    select: Callable        # (corr) -> (k,) or (k, 2) predictor assignment
+    fit: Callable           # (values, counts, predictor) -> compact model
+    per_model_bytes: float  # WAN upload per imputing stream (constraint 1f)
+    multi: bool = False     # two predictor streams per target (§V-G)
+    mean: bool = False      # degenerate mean-imputation model
+
+
+MODELS.register("linear", ModelSpec(
+    name="linear", select=pred_mod.heuristic_predictors,
+    fit=lambda v, c, p: models_mod.fit_models(v, c, p, degree=1),
+    per_model_bytes=float(CompactModel.param_bytes())))
+MODELS.register("cubic", ModelSpec(
+    name="cubic", select=pred_mod.heuristic_predictors,
+    fit=lambda v, c, p: models_mod.fit_models(v, c, p, degree=3),
+    per_model_bytes=float(CompactModel.param_bytes())))
+MODELS.register("mean", ModelSpec(
+    name="mean", select=pred_mod.heuristic_predictors,
+    fit=models_mod.mean_model, per_model_bytes=4.0, mean=True))
+MODELS.register("multi", ModelSpec(
+    name="multi", select=pred_mod.heuristic_predictors_multi,
+    fit=models_mod.fit_models_multi,
+    per_model_bytes=float(4 * 4 + 4 * 4 + 8), multi=True))
 
 
 def apply_exact_mse_cap(p: solver_mod.ProblemData, stats, nr: np.ndarray,
@@ -73,27 +108,16 @@ def plan_window(batch: WindowBatch, budget: float, cfg: PlannerConfig,
     cnts_j = jnp.asarray(counts)
     stats = stats_mod.window_stats(vals_j, cnts_j, dependence=cfg.dependence)
 
-    # --- predictor selection (heuristic §IV-A, or caller-fixed for the
-    # Fig.-3 optimal-assignment comparison) ---
-    multi = cfg.model == "multi"
+    # --- predictor selection + compact models via the model registry
+    # (heuristic §IV-A; predictors caller-fixed for the Fig.-3
+    # optimal-assignment comparison; "multi" = beyond-paper §V-G) ---
+    spec = MODELS.get(cfg.model)
+    multi, mean_imp = spec.multi, spec.mean
     if cfg.fixed_predictors is not None:
         predictor = np.asarray(cfg.fixed_predictors, np.int64)
-    elif multi:
-        predictor = np.asarray(
-            pred_mod.heuristic_predictors_multi(stats.corr))     # (k, 2)
     else:
-        predictor = np.asarray(pred_mod.heuristic_predictors(stats.corr))
-
-    # --- compact models (§IV-B; "multi" = beyond-paper §V-G) ---
-    mean_imp = cfg.model == "mean"
-    if mean_imp:
-        model = models_mod.mean_model(vals_j, cnts_j, jnp.asarray(predictor))
-    elif multi:
-        model = models_mod.fit_models_multi(vals_j, cnts_j,
-                                            jnp.asarray(predictor))
-    else:
-        degree = 1 if cfg.model == "linear" else 3
-        model = models_mod.fit_models(vals_j, cnts_j, jnp.asarray(predictor), degree=degree)
+        predictor = np.asarray(spec.select(stats.corr))
+    model = spec.fit(vals_j, cnts_j, jnp.asarray(predictor))
 
     # --- epsilon policy (§IV-C) ---
     eps = eps_mod.make_epsilon(cfg.epsilon_policy, stats, cfg.epsilon_scale)
@@ -107,13 +131,7 @@ def plan_window(batch: WindowBatch, budget: float, cfg: PlannerConfig,
     # An exact per-stream indicator ("model shipped iff n_s>0") is non-convex,
     # so we reserve the upload for every stream up front (conservative: nearly
     # all streams impute in practice).  Budget is in 4-byte sample units.
-    if mean_imp:
-        per_model_bytes = 4.0
-    elif multi:
-        per_model_bytes = 4 * 4 + 4 * 4 + 8      # coeffs + loc/scale x2 + idx
-    else:
-        per_model_bytes = model.param_bytes()
-    budget_net = max(budget - per_model_bytes / 4.0 * len(counts), 2.0)
+    budget_net = max(budget - spec.per_model_bytes / 4.0 * len(counts), 2.0)
 
     problem = solver_mod.build_problem(
         stats, model, eps, budget_net,
@@ -154,24 +172,46 @@ def plan_window(batch: WindowBatch, budget: float, cfg: PlannerConfig,
     return payload, diag
 
 
-def plan_with_baseline(batch: WindowBatch, budget: int, method: str,
-                       key: Optional[jax.Array] = None, seed: int = 0):
-    """Baseline samplers (§V-A3) behind the same payload interface:
-    method in {'srs', 'approx_iot', 's_voila'} — sampling only, no imputation."""
+# --------------------------------------------------------------------------
+# baseline-planner registry (§V-A3, appendix C): sampling only, no
+# imputation, behind the same EdgePayload interface.  Each entry maps
+# (counts, sigma, budget, cost) -> integer allocation.
+# --------------------------------------------------------------------------
+
+BASELINES.register("srs",
+                   lambda counts, sigma, budget, cost: samplers.srs_allocation(
+                       counts, int(budget)))
+BASELINES.register("approx_iot",
+                   lambda counts, sigma, budget, cost: samplers.stratified_allocation(
+                       counts, int(budget)))
+BASELINES.register("s_voila",
+                   lambda counts, sigma, budget, cost: samplers.svoila_allocation(
+                       counts.astype(np.float64), sigma, int(budget)))
+BASELINES.register("neyman_cost",
+                   lambda counts, sigma, budget, cost: samplers.neyman_cost_allocation(
+                       counts.astype(np.float64), sigma,
+                       np.ones(len(counts)) if cost is None
+                       else np.asarray(cost, np.float64), float(budget)))
+
+
+def plan_with_baseline(batch: WindowBatch, budget: float, method: str,
+                       key: Optional[jax.Array] = None, seed: int = 0,
+                       cost: Optional[np.ndarray] = None):
+    """Baseline samplers (§V-A3) behind the same payload interface.
+
+    ``method`` resolves through the baseline registry
+    (``repro.api.registry.BASELINES``): 'srs' | 'approx_iot' | 's_voila' |
+    'neyman_cost' — sampling only, no imputation.  ``budget`` is a float in
+    sample units (matching :func:`plan_window`); allocators round
+    internally.  ``cost`` is the optional (k,) per-stream sampling cost
+    consumed by the cost-aware baselines.
+    """
     if key is None:
         key = jax.random.PRNGKey(seed ^ (int(batch.window_id) * 9176))
-    values = np.asarray(batch.values)
     counts = np.asarray(batch.counts)
     stats = stats_mod.window_stats(batch.values, batch.counts, dependence="pearson")
     sigma = np.sqrt(np.maximum(np.asarray(stats.var), 0.0))
-    if method == "srs":
-        alloc = samplers.srs_allocation(counts, int(budget))
-    elif method == "approx_iot":
-        alloc = samplers.stratified_allocation(counts, int(budget))
-    elif method == "s_voila":
-        alloc = samplers.svoila_allocation(counts.astype(np.float64), sigma, int(budget))
-    else:
-        raise ValueError(method)
+    alloc = BASELINES.get(method)(counts, sigma, budget, cost)
     real_values = samplers.draw_samples(key, batch.values, batch.counts, alloc)
     k = len(counts)
     payload = EdgePayload(

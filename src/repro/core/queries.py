@@ -8,23 +8,30 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.api.registry import QUERIES
 
+
+@QUERIES.register("AVG")
 def avg(x: np.ndarray) -> float:
     return float(np.mean(x)) if len(x) else float("nan")
 
 
+@QUERIES.register("VAR")
 def var(x: np.ndarray) -> float:
     return float(np.var(x, ddof=1)) if len(x) > 1 else float("nan")
 
 
+@QUERIES.register("MIN")
 def vmin(x: np.ndarray) -> float:
     return float(np.min(x)) if len(x) else float("nan")
 
 
+@QUERIES.register("MAX")
 def vmax(x: np.ndarray) -> float:
     return float(np.max(x)) if len(x) else float("nan")
 
 
+@QUERIES.register("MEDIAN")
 def median(x: np.ndarray) -> float:
     return float(np.median(x)) if len(x) else float("nan")
 
@@ -33,7 +40,9 @@ def quantile(x: np.ndarray, q: float) -> float:
     return float(np.quantile(x, q)) if len(x) else float("nan")
 
 
-QUERIES = {"AVG": avg, "VAR": var, "MIN": vmin, "MAX": vmax, "MEDIAN": median}
+# QUERIES is the global query registry (repro.api.registry): dict-style
+# access (QUERIES["AVG"], "AVG" in QUERIES) keeps working; unknown names
+# raise with the registered alternatives listed.
 
 
 def nrmse(estimates: np.ndarray, truth: np.ndarray) -> float:

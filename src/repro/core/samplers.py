@@ -10,6 +10,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api.registry import SAMPLERS
+
 
 def _largest_remainder(frac: np.ndarray, budget: int, cap: np.ndarray) -> np.ndarray:
     frac = np.maximum(frac, 0.0)
@@ -80,6 +82,12 @@ def neyman_cost_allocation(n_obs: np.ndarray, sigma: np.ndarray,
             n[j] += 1
             left -= cost[j]
     return n
+
+
+SAMPLERS.register("srs", srs_allocation)
+SAMPLERS.register("stratified", stratified_allocation)
+SAMPLERS.register("svoila", svoila_allocation)
+SAMPLERS.register("neyman_cost", neyman_cost_allocation)
 
 
 def draw_samples(key: jax.Array, values: jnp.ndarray, counts: jnp.ndarray,

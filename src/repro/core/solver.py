@@ -41,6 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api.registry import SOLVERS
 from repro.core.types import Allocation, Array
 
 _DELTA = 1e-2          # strict margin for constraint 1e
@@ -452,16 +453,30 @@ def round_allocation(p: ProblemData, n: np.ndarray, eps: np.ndarray):
     return nr, ns
 
 
-def solve(p: ProblemData, method: str = "ipm") -> Allocation:
-    if method == "closed_form":
-        return solve_closed_form(p)   # does its own (jnp) rounding
-    if method == "slsqp":
-        n, fval, eps, ok = solve_slsqp(p)
-    else:
-        n, fval, eps, ok = solve_ipm(p)
+def _rounded(p: ProblemData, n: np.ndarray, fval: float, eps: np.ndarray,
+             ok: bool) -> Allocation:
     nr, ns = round_allocation(p, n, eps)
     return Allocation(n_real=jnp.asarray(nr, jnp.int32),
                       n_imputed=jnp.asarray(ns, jnp.int32),
                       objective=jnp.asarray(fval, jnp.float32),
                       feasible=jnp.asarray(ok),
                       eps_used=jnp.asarray(eps, jnp.float32))
+
+
+@SOLVERS.register("ipm")
+def _ipm_allocation(p: ProblemData) -> Allocation:
+    return _rounded(p, *solve_ipm(p))
+
+
+@SOLVERS.register("slsqp")
+def _slsqp_allocation(p: ProblemData) -> Allocation:
+    return _rounded(p, *solve_slsqp(p))
+
+
+SOLVERS.register("closed_form", solve_closed_form)  # does its own rounding
+
+
+def solve(p: ProblemData, method: str = "ipm") -> Allocation:
+    """Solve one eq.-1 instance; ``method`` resolves through the solver
+    registry (``repro.api.registry.SOLVERS``)."""
+    return SOLVERS.get(method)(p)

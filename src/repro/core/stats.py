@@ -12,6 +12,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.api.registry import DEPENDENCE
 from repro.core.types import Array, StreamStats, WindowBatch
 
 _EPS = 1e-12
@@ -99,15 +100,17 @@ def spearman_corr(values: Array, counts: Array) -> Array:
     return pearson_corr(rank_transform(values, counts), counts)
 
 
+DEPENDENCE.register("pearson", pearson_corr)
+DEPENDENCE.register("spearman", spearman_corr)
+
+
 @functools.partial(jax.jit, static_argnames=("dependence",))
 def window_stats(values: Array, counts: Array, dependence: str = "pearson") -> StreamStats:
     mean, var, _m2, m4 = masked_central_moments(values, counts)
     vov = var_of_var_estimator(var, m4, counts)
     cov = masked_cov(values, counts)
-    if dependence == "spearman":
-        corr = spearman_corr(values, counts)
-    else:
-        corr = pearson_corr(values, counts)
+    # static under jit: the registry lookup happens once per trace
+    corr = DEPENDENCE.get(dependence)(values, counts)
     return StreamStats(count=counts, mean=mean, var=var, m4=m4,
                        var_of_var=vov, cov=cov, corr=corr)
 

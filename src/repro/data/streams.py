@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.api.registry import DATASETS
 from repro.core.types import WindowBatch
 
 
@@ -173,4 +174,14 @@ def windows_from_matrix(values: np.ndarray, window: int) -> list[WindowBatch]:
     return out
 
 
-DATASETS = {"home": home_like, "turbine": turbine_like, "smartcity": smartcity_like}
+# DATASETS is the global dataset registry (repro.api.registry): dict-style
+# access keeps working, ScenarioConfig.data.dataset resolves through it.
+# ``is_fleet_dataset`` marks generators that return an (E, k, T) site
+# tensor and take n_sites/n_regions — ScenarioConfig requires those to be
+# paired with a multi-site topology (and vice versa).
+fleet_like.is_fleet_dataset = True
+DATASETS.register("home", home_like)
+DATASETS.register("turbine", turbine_like)
+DATASETS.register("smartcity", smartcity_like)
+DATASETS.register("mvn", mvn_pair)
+DATASETS.register("fleet", fleet_like)

@@ -7,8 +7,11 @@ batched_planner — one jitted (E, k, N) planning pass for the whole fleet
                   solver); host_loop_plan is the E-loop baseline it replaces.
 controller      — per-window water-filling of the fleet-wide sample budget,
                   with arrival-lag telemetry from the async WAN.
-runtime         — FleetExperiment: edges -> per-site async transports ->
-                  reorder-buffer clouds (docs/transport.md).
+runtime         — FleetExperiment: deprecation shim over the unified
+                  Scenario-API runtime (repro.api.experiment.FleetRuntime;
+                  edges -> per-site async transports -> reorder-buffer
+                  clouds, docs/transport.md); new code builds a
+                  repro.api.ScenarioConfig instead.
 """
 from repro.fleet.batched_planner import FleetPlan, fleet_plan, host_loop_plan
 from repro.fleet.controller import BudgetController, water_fill

@@ -67,6 +67,8 @@ class BudgetController:
     ceil_mult: float = 3.0         # max share, x equal split
     ewma: float = 0.5              # weight of the newest observation
     site_capacity: Optional[np.ndarray] = None   # (E,) tuples cached/window
+    link_cost: Optional[np.ndarray] = None       # (E,) relative $/byte/uplink
+    cost_aware: bool = False       # weight demand by link cost (see budgets)
 
     def __post_init__(self):
         self._demand = np.ones(self.n_sites)
@@ -94,7 +96,16 @@ class BudgetController:
         return self.total_budget / self.n_sites
 
     def budgets(self) -> np.ndarray:
-        """(E,) per-site budgets for the next window (floats; callers floor)."""
+        """(E,) per-site budgets for the next window (floats; callers floor).
+
+        With ``cost_aware`` on, demand is discounted by the uplink's
+        relative $/byte before water-filling: the Lagrangian of
+        min sum_s A_s / b_s + lambda sum_s c_s b_s gives b*_s ∝
+        sqrt(A_s / c_s), i.e. demand_s / sqrt(c_s) — expensive uplinks
+        yield budget first at equal error pressure, cutting fleet WAN $
+        while conserving the fleet-wide sample total.  Off (the default)
+        this is bit-for-bit the cost-blind controller.
+        """
         eq = self.equal_share
         hi = np.full(self.n_sites, self.ceil_mult * eq)
         if self.site_capacity is not None:
@@ -103,7 +114,12 @@ class BudgetController:
             b = np.minimum(np.full(self.n_sites, eq), hi)
         else:
             lo = np.minimum(np.full(self.n_sites, self.floor_mult * eq), hi)
-            b = water_fill(self._demand, self.total_budget, lo, hi)
+            demand = self._demand
+            if self.cost_aware and self.link_cost is not None:
+                c = np.asarray(self.link_cost, np.float64)
+                c = np.maximum(c / max(float(c.mean()), 1e-12), 1e-6)
+                demand = demand / np.sqrt(c)
+            b = water_fill(demand, self.total_budget, lo, hi)
         self._last_budgets = b
         return b
 

@@ -1,66 +1,37 @@
-"""Geo-distributed multi-edge runtime: E edges -> per-region WAN -> one cloud.
+"""Geo-distributed multi-edge runtime — deprecation shim.
 
-``FleetExperiment`` scales the single-edge runtime (repro.streaming.runtime)
-to a whole fleet while reusing its building blocks unchanged: per-site
-``AsyncTransport`` (byte/cost accounting + injectable drops + event-queue
-delivery, configured from the topology's :class:`LinkSpec`), per-site
-``ReorderCloudNode`` (window reconstruction, out-of-order ingestion behind
-a staleness deadline, stale-window serving) and the same fault semantics —
-stragglers contribute N_i = 0 tuples and are covered by imputation; dropped
-payloads are served stale.
+The fleet experiment loop moved to
+:class:`repro.api.experiment.FleetRuntime` (the unified Scenario API
+runtime; ``Experiment.from_scenario`` builds it from a declarative
+:class:`repro.api.ScenarioConfig`).  :class:`FleetExperiment` is kept here
+as a thin shim so existing imports and the PR-1/PR-2 pins keep working
+bit-for-bit: it forwards construction to the engine, delegates ``run`` and
+exposes the engine's state (``transports``, ``clouds``, ``plan_seconds``,
+...) as attributes.
 
-What is new at fleet scale:
-  * planning runs through ``fleet_plan`` — one jitted batched pass for all E
-    sites per window (``planning='host_loop'`` keeps the E-loop for
-    comparison);
-  * a :class:`BudgetController` rebalances the fleet-wide WAN sample budget
-    across sites each window from observed correlation strength, edge-local
-    reconstruction error and WAN arrival lag;
-  * heterogeneous per-site link latency is live (docs/transport.md): windows
-    travel the WAN as delivery events, queries are answered from what has
-    arrived, and late payloads revise results within the deadline;
-  * results aggregate per region (NRMSE, WAN bytes, WAN cost, freshness)
-    as well as fleet-wide.
+See docs/fleet.md for the subsystem overview (topology, batched planning,
+budget controller, per-region reporting) and docs/transport.md for the
+event-driven WAN semantics shared with the single-edge runtime.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
+import warnings
 from typing import Callable, Optional
 
-import numpy as np
-
-from repro.core import queries as Q
-from repro.core.reconstruct import reconstruct_window
-from repro.core.types import CompactModel, EdgePayload, PlannerConfig
-from repro.fleet.batched_planner import fleet_plan
+from repro.core.types import PlannerConfig
 from repro.fleet.controller import BudgetController
 from repro.fleet.topology import FleetTopology
-from repro.streaming.events import (AsyncTransport, ReorderCloudNode,
-                                    freshness_percentiles)
-
-import jax.numpy as jnp
-
-
-def _draw_real_np(rng: np.random.Generator, values: np.ndarray,
-                  counts: np.ndarray, alloc: np.ndarray) -> list[np.ndarray]:
-    """SRS without replacement per stream (host-side numpy; the jax-PRNG
-    sampler in core.samplers costs one dispatch per stream — at fleet scale
-    that is E*k dispatches per window, which would dwarf planning)."""
-    out = []
-    for i in range(len(alloc)):
-        n_i = int(min(int(alloc[i]), int(counts[i])))
-        if n_i <= 0:
-            out.append(np.zeros((0,), np.float32))
-            continue
-        idx = rng.permutation(int(counts[i]))[:n_i]
-        out.append(values[i, idx].astype(np.float32))
-    return out
 
 
 @dataclasses.dataclass
 class FleetExperiment:
-    """Simulates E edge sites against one cloud for a window sequence."""
+    """Deprecated shim — use ``repro.api.Experiment.from_scenario``.
+
+    Simulates E edge sites against one cloud for a window sequence by
+    delegating to :class:`repro.api.experiment.FleetRuntime` (the same
+    loop, moved verbatim; results are bit-for-bit unchanged).
+    """
 
     topology: FleetTopology
     controller: BudgetController
@@ -74,221 +45,24 @@ class FleetExperiment:
     staleness_deadline_ms: float = float("inf")
 
     def __post_init__(self):
-        sites = self.topology.sites
-        self.transports = [AsyncTransport(drop_prob=s.link.drop_prob,
-                                          seed=self.cfg.seed + s.site_id,
-                                          cost_per_byte=s.link.cost_per_byte,
-                                          latency_ms=s.link.latency_ms,
-                                          jitter_ms=s.link.jitter_ms)
-                           for s in sites]
-        self.clouds = [ReorderCloudNode(query_names=self.query_names,
-                                        window_period_ms=self.window_period_ms,
-                                        deadline_ms=self.staleness_deadline_ms)
-                       for _ in sites]
-        self.plan_seconds = 0.0
-        self.plan_windows = 0
-        self._rng = np.random.default_rng(self.cfg.seed)
+        warnings.warn(
+            "FleetExperiment is deprecated; build a repro.api.ScenarioConfig "
+            "and use repro.api.Experiment.from_scenario instead",
+            DeprecationWarning, stacklevel=3)
+        from repro.api.experiment import FleetRuntime
+        self._engine = FleetRuntime(
+            topology=self.topology, controller=self.controller, cfg=self.cfg,
+            planning=self.planning, use_kernel=self.use_kernel,
+            interpret=self.interpret, straggler_drop=self.straggler_drop,
+            query_names=self.query_names,
+            window_period_ms=self.window_period_ms,
+            staleness_deadline_ms=self.staleness_deadline_ms)
 
-    # ---------------------------------------------------------------- plan
-    def _plan(self, wid: int, values: np.ndarray, counts: np.ndarray,
-              budgets: np.ndarray) -> dict:
-        """(E,k,N) window -> host-side plan arrays (or per-site payloads)."""
-        t0 = time.perf_counter()
-        if self.planning == "batched":
-            plan = fleet_plan(jnp.asarray(values, jnp.float32),
-                              jnp.asarray(counts, jnp.int32),
-                              jnp.asarray(budgets, jnp.float32),
-                              self.cfg.epsilon_scale,
-                              dependence=self.cfg.dependence,
-                              model=self.cfg.model,
-                              epsilon_policy=self.cfg.epsilon_policy,
-                              use_kernel=self.use_kernel,
-                              interpret=self.interpret)
-            out = {f.name: np.asarray(getattr(plan, f.name))
-                   for f in dataclasses.fields(plan)}
-        else:   # the replaced path: E independent plan_window round trips
-            from repro.core.planner import plan_window
-            from repro.core.types import WindowBatch
-            payloads, r2 = [], np.zeros(values.shape[0])
-            for s in range(values.shape[0]):
-                batch = WindowBatch.from_numpy(values[s], counts[s], wid)
-                payload, diag = plan_window(batch, float(budgets[s]), self.cfg)
-                payloads.append(payload)
-                if payload.model is not None:
-                    ev = np.asarray(payload.model.explained_var
-                                    if not isinstance(payload.model, dict)
-                                    else payload.model["explained_var"])
-                    var = np.maximum(payload.stats_digest["var"], 1e-12)
-                    r2[s] = float(np.mean(np.clip(ev / var, 0.0, 1.0)))
-            out = {"payloads": payloads, "r2": r2}
-        self.plan_seconds += time.perf_counter() - t0
-        self.plan_windows += 1
-        return out
+    def __getattr__(self, name):
+        # engine state (transports, clouds, plan_seconds, plan_windows, ...)
+        if name.startswith("__") or name == "_engine":
+            raise AttributeError(name)
+        return getattr(self._engine, name)
 
-    def _payload(self, plan: dict, s: int, wid: int, values: np.ndarray,
-                 counts: np.ndarray) -> EdgePayload:
-        if "payloads" in plan:
-            return plan["payloads"][s]
-        real = _draw_real_np(self._rng, values, counts, plan["n_real"][s])
-        pred = plan["predictor"][s]
-        ns = plan["n_imputed"][s].copy()
-        for i in range(len(ns)):
-            ns[i] = min(ns[i], len(real[int(pred[i])]))       # 1d, post-draw
-        model = CompactModel(coeffs=plan["coeffs"][s], loc=plan["loc"][s],
-                             scale=plan["scale"][s],
-                             explained_var=plan["explained_var"][s],
-                             predictor=pred)
-        return EdgePayload(
-            window_id=wid,
-            n_real=np.asarray([len(v) for v in real], np.int64),
-            n_imputed=ns.astype(np.int64),
-            real_values=real,
-            model=model,
-            mean_imputation=False,
-            predictor=np.asarray(pred, np.int64),
-            stats_digest={"mean": np.asarray(plan["mean"][s]),
-                          "var": np.asarray(plan["var"][s])})
-
-    # ----------------------------------------------------------------- run
-    def run(self, fleet_windows: list[np.ndarray]) -> dict:
-        """fleet_windows: list over time of (E, k, N) float arrays.
-
-        Event-driven on a virtual clock: window ``wid`` is planned and sent
-        at ``wid * window_period_ms``, each site's query is answered one
-        period later from whatever its uplink has delivered by then, and
-        late-but-within-deadline arrivals revise their window's entry in the
-        (revised) estimate table retroactively.  Heterogeneous per-site
-        ``LinkSpec.latency_ms`` therefore shows up as per-site window age
-        (``freshness_ms``, ``site_arrival_lag_ms``) instead of being a dead
-        accounting field.
-        """
-        E, k, n = fleet_windows[0].shape
-        T = len(fleet_windows)
-        reg_idx = self.topology.region_of()
-        qnames = self.query_names
-        period = self.window_period_ms
-        est = {q: np.full((T, E, k), np.nan) for q in qnames}    # revised
-        est_q = {q: np.full((T, E, k), np.nan) for q in qnames}  # at query
-        tru = {q: np.full((T, E, k), np.nan) for q in qnames}
-        ages = np.full((T, E), np.nan)
-        budget_history = []
-
-        def _row(res):
-            return {q: (np.asarray(res[q]) if len(res.get(q, [])) == k
-                        else np.full(k, np.nan)) for q in qnames}
-
-        def _apply(s, outcome):
-            if outcome.kind == "revised":
-                res = _row(self.clouds[s].query(outcome.reconstruction))
-                for q in qnames:
-                    est[q][outcome.window_id, s] = res[q]
-
-        for wid, w in enumerate(fleet_windows):
-            now = wid * period
-            q_time = now + period
-            w = np.asarray(w, np.float32)
-            counts = np.full((E, k), n, np.int64)
-            if self.straggler_drop is not None:
-                for s in range(E):
-                    for i in range(k):
-                        if self.straggler_drop(wid, s, i):
-                            counts[s, i] = 0
-            budgets = np.maximum(np.floor(self.controller.budgets()), 2.0)
-            budget_history.append(budgets)
-            plan = self._plan(wid, w, counts, budgets)
-
-            obs_err = np.zeros(E)
-            lag_obs = np.full(E, np.nan)
-            for s in range(E):
-                payload = self._payload(plan, s, wid, w[s], counts[s])
-                payload = dataclasses.replace(payload, sent_at_ms=now)
-                self.transports[s].send(payload, now_ms=now)
-                lags = []
-                for ev in self.transports[s].drain(q_time):
-                    lags.append(ev.at_ms - ev.payload.sent_at_ms)
-                    _apply(s, self.clouds[s].ingest_event(ev.payload,
-                                                          now_ms=ev.at_ms))
-                if lags:
-                    lag_obs[s] = float(np.mean(lags))
-                rec, age, _ = self.clouds[s].serve(wid, q_time)
-                res = _row(self.clouds[s].query(rec))
-                res_true = _row(self.clouds[s].query([w[s, i]
-                                                      for i in range(k)]))
-                for q in qnames:
-                    est[q][wid, s] = res[q]
-                    est_q[q][wid, s] = res[q]
-                    tru[q][wid, s] = res_true[q]
-                ages[wid, s] = age
-                # edge-local error proxy: the edge knows its true window and
-                # its own payload, so it can score the reconstruction the
-                # cloud *would* produce — feeds the controller for free
-                edge_rec = reconstruct_window(payload)
-                t_mean = np.asarray([np.mean(w[s, i]) for i in range(k)])
-                e_mean = np.asarray([np.mean(r) if len(r) else np.nan
-                                     for r in edge_rec])
-                obs_err[s] = np.nanmean(np.abs(e_mean - t_mean)
-                                        / np.maximum(np.abs(t_mean), 1e-6))
-            self.controller.update(obs_err, plan["r2"],
-                                   objective=plan.get("objective"),
-                                   arrival_lag=lag_obs)
-
-        # drain in-flight payloads: late revisions and gap accounting
-        for s in range(E):
-            for ev in self.transports[s].drain(float("inf")):
-                _apply(s, self.clouds[s].ingest_event(ev.payload,
-                                                      now_ms=ev.at_ms))
-            self.clouds[s].finalize(T)
-
-        # ------------------------------------------------- aggregate errors
-        nrmse_site = {}                         # {q: (E, k)}
-        nrmse_site_q = {}
-        for q in qnames:
-            e_arr = est[q].transpose(1, 2, 0)   # (E, k, T)
-            eq_arr = est_q[q].transpose(1, 2, 0)
-            t_arr = tru[q].transpose(1, 2, 0)
-            nrmse_site[q] = np.asarray(
-                [Q.nrmse_table(e_arr[s], t_arr[s]) for s in range(E)])
-            nrmse_site_q[q] = np.asarray(
-                [Q.nrmse_table(eq_arr[s], t_arr[s]) for s in range(E)])
-
-        region_nrmse = {name: {} for name in self.topology.region_names}
-        for r, name in enumerate(self.topology.region_names):
-            sel = reg_idx == r
-            for q in qnames:
-                region_nrmse[name][q] = float(np.nanmean(nrmse_site[q][sel]))
-
-        bytes_by_region = {name: 0 for name in self.topology.region_names}
-        cost_by_region = {name: 0.0 for name in self.topology.region_names}
-        for s, site in enumerate(self.topology.sites):
-            bytes_by_region[site.region] += self.transports[s].bytes_sent
-            cost_by_region[site.region] += self.transports[s].bytes_cost
-        total_tuples = T * E * k * n
-
-        freshness_by_region = {
-            name: freshness_percentiles(ages[:, reg_idx == r])
-            for r, name in enumerate(self.topology.region_names)}
-
-        return {
-            "fleet_nrmse": {q: float(np.nanmean(nrmse_site[q]))
-                            for q in qnames},
-            "fleet_nrmse_at_query": {q: float(np.nanmean(nrmse_site_q[q]))
-                                     for q in qnames},
-            "region_nrmse": region_nrmse,
-            "site_nrmse": nrmse_site,
-            "wan_bytes": int(sum(t.bytes_sent for t in self.transports)),
-            "wan_bytes_by_region": bytes_by_region,
-            "wan_cost": float(sum(t.bytes_cost for t in self.transports)),
-            "wan_cost_by_region": cost_by_region,
-            "full_bytes": total_tuples * 4,
-            "gaps": int(sum(c.gaps for c in self.clouds)),
-            "revisions": int(sum(c.revisions for c in self.clouds)),
-            "late_drops": int(sum(c.late_drops for c in self.clouds)),
-            "duplicates": int(sum(c.duplicates for c in self.clouds)),
-            "freshness_ms": freshness_percentiles(ages),
-            "freshness_by_region": freshness_by_region,
-            "window_age_ms": ages,
-            "site_arrival_lag_ms": self.controller.arrival_lag_ms,
-            "plan_seconds": self.plan_seconds,
-            "plan_windows": self.plan_windows,
-            "budget_history": np.asarray(budget_history),
-        }
+    def run(self, fleet_windows) -> dict:
+        return self._engine.run(fleet_windows)

@@ -1,12 +1,17 @@
-"""Edge-cloud streaming runtime (Fig. 1/2 topology), JAX-native.
+"""Edge-cloud streaming building blocks (Fig. 1/2 topology), JAX-native.
 
-Replaces the paper's Storm/Kinesis pipeline with an explicit, testable
-runtime: EdgeNode caches a tumbling window and runs the Algorithm-1 planner;
+Replaces the paper's Storm/Kinesis pipeline with explicit, testable parts:
+EdgeNode caches a tumbling window and runs the Algorithm-1 planner;
 Transport moves payloads with byte accounting, injectable failures and
 latency; CloudNode reconstructs windows and answers aggregate queries.
-The experiment loop itself is event-driven (repro.streaming.events): sends
-enqueue delivery events on a virtual clock and the cloud ingests payloads
-out of order behind a staleness deadline — see docs/transport.md.
+
+The experiment loop itself lives in :mod:`repro.api.experiment`
+(``SingleEdgeRuntime``; event-driven on a virtual clock via
+repro.streaming.events — see docs/transport.md).  The
+:class:`StreamingExperiment` class kept here is a deprecation shim for the
+pre-Scenario-API entry point; new code should build a
+:class:`repro.api.ScenarioConfig` and call
+``repro.api.Experiment.from_scenario``.
 
 Fault tolerance:
   * device straggler/failure — a stream that misses the window deadline
@@ -19,11 +24,12 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Callable, Optional
 
-import jax
 import numpy as np
 
+from repro.api.registry import MODELS
 from repro.core import queries as Q
 from repro.core.planner import plan_window, plan_with_baseline
 from repro.core.reconstruct import reconstruct_window
@@ -65,11 +71,18 @@ class Transport:
 
 @dataclasses.dataclass
 class EdgeNode:
-    """Caches one tumbling window then plans (Algorithm 1)."""
+    """Caches one tumbling window then plans (Algorithm 1).
+
+    ``method`` routes through the registries: ``"model"`` runs the planner
+    with ``cfg.model`` as configured; a registered imputation-model name
+    ("linear" | "cubic" | "mean" | "multi") pins that family; anything else
+    resolves through the baseline registry ("srs" | "approx_iot" |
+    "s_voila" | "neyman_cost") and bypasses the planner.
+    """
 
     cfg: PlannerConfig
     budget_fraction: float
-    method: str = "model"          # "model" | "mean" | baseline names
+    method: str = "model"          # "model" | model names | baseline names
     straggler_drop: Optional[Callable[[int, int], bool]] = None
     plan_seconds: float = 0.0
 
@@ -85,12 +98,15 @@ class EdgeNode:
         budget = int(self.budget_fraction * int(np.sum(counts)))
         budget = max(budget, 2)
         t0 = time.perf_counter()
-        if self.method in ("model", "mean", "multi"):
+        if self.method == "model":
+            payload, _ = plan_window(batch, budget, self.cfg)
+        elif self.method in MODELS:
             cfg = dataclasses.replace(self.cfg, model=self.method)
             payload, _ = plan_window(batch, budget, cfg)
         else:
             payload = plan_with_baseline(batch, budget, self.method,
-                                         seed=self.cfg.seed)
+                                         seed=self.cfg.seed,
+                                         cost=self.cfg.cost_per_sample)
         self.plan_seconds += time.perf_counter() - t0
         return payload
 
@@ -128,18 +144,13 @@ class CloudNode:
 
 @dataclasses.dataclass
 class StreamingExperiment:
-    """Event-driven edge->WAN->cloud run on a virtual clock.
+    """Deprecated shim — use ``repro.api.Experiment.from_scenario``.
 
-    Window ``wid`` closes at the edge at ``wid * window_period_ms``; its
-    query is answered one period later (``t_due``), from whatever has
-    arrived by then.  Payloads landing after their due time but within
-    ``staleness_deadline_ms`` revise the already-emitted result
-    retroactively (``revisions`` count, ``nrmse`` reflects the revised
-    table, ``nrmse_at_query`` what was actually served on time); payloads
-    past the deadline fall back to stale serving and count as ``gaps``.
-
-    With zero latency and an infinite deadline this reproduces the
-    lock-step runtime bit-for-bit (tests/test_async_transport.py).
+    Delegates to :class:`repro.api.experiment.SingleEdgeRuntime` (the same
+    loop, moved); behavior and results are bit-for-bit unchanged, including
+    the transport/cloud upgrades (``self.transport`` becomes the
+    AsyncTransport, ``self.cloud`` the ReorderCloudNode, and a plain
+    CloudNode passed in still receives the run counters afterwards).
     """
 
     edge: EdgeNode
@@ -149,85 +160,21 @@ class StreamingExperiment:
     staleness_deadline_ms: Optional[float] = None
 
     def __post_init__(self):
-        from repro.streaming.events import AsyncTransport, ReorderCloudNode
-        if not isinstance(self.transport, AsyncTransport):
-            self.transport = AsyncTransport.from_transport(self.transport)
-        self._user_cloud = None
-        if not isinstance(self.cloud, ReorderCloudNode):
-            # upgrade a plain CloudNode; its counters are mirrored back
-            # after run() so callers holding the original still see them
-            self._user_cloud = self.cloud
-            self.cloud = ReorderCloudNode(query_names=self.cloud.query_names)
-        self.cloud.window_period_ms = self.window_period_ms
-        if self.staleness_deadline_ms is not None:
-            self.cloud.deadline_ms = self.staleness_deadline_ms
+        warnings.warn(
+            "StreamingExperiment is deprecated; build a "
+            "repro.api.ScenarioConfig and use "
+            "repro.api.Experiment.from_scenario instead",
+            DeprecationWarning, stacklevel=3)
+        from repro.api.experiment import SingleEdgeRuntime
+        self._engine = SingleEdgeRuntime(
+            edge=self.edge, cloud=self.cloud, transport=self.transport,
+            window_period_ms=self.window_period_ms,
+            staleness_deadline_ms=self.staleness_deadline_ms)
+        self.transport = self._engine.transport
+        self.cloud = self._engine.cloud
 
     def run(self, windows: list[WindowBatch]) -> dict:
-        from repro.streaming.events import freshness_percentiles
-        k = windows[0].k
-        T = len(windows)
-        qnames = self.cloud.query_names
-        period = self.window_period_ms
-        est = {q: np.full((T, k), np.nan) for q in qnames}       # revised
-        est_q = {q: np.full((T, k), np.nan) for q in qnames}     # at query
-        tru = {q: np.full((T, k), np.nan) for q in qnames}
-        ages = np.full(T, np.nan)
-        revised = np.zeros(T, bool)
-
-        def _record(wid, rec, tables):
-            res = self.cloud.query(rec)
-            for q in qnames:
-                row = res.get(q, [])
-                vals = np.asarray(row) if len(row) == k else np.full(k, np.nan)
-                for tbl in tables:
-                    tbl[q][wid] = vals
-
-        def _apply(outcome):
-            if outcome.kind == "revised":
-                _record(outcome.window_id, outcome.reconstruction, (est,))
-                revised[outcome.window_id] = True
-
-        for wid, w in enumerate(windows):
-            now = wid * period
-            q_time = now + period
-            payload = self.edge.process_window(w)
-            payload = dataclasses.replace(payload, sent_at_ms=now)
-            self.transport.send(payload, now_ms=now)
-            for ev in self.transport.drain(q_time):
-                _apply(self.cloud.ingest_event(ev.payload, now_ms=ev.at_ms))
-            rec, age, _ = self.cloud.serve(wid, q_time)
-            _record(wid, rec, (est, est_q))
-            ages[wid] = age
-            full = [np.asarray(w.values[i, : int(w.counts[i])])
-                    for i in range(k)]
-            _record(wid, full, (tru,))
-
-        # in-flight payloads may still land within the deadline and revise
-        for ev in self.transport.drain(float("inf")):
-            _apply(self.cloud.ingest_event(ev.payload, now_ms=ev.at_ms))
-        self.cloud.finalize(T)
-        if self._user_cloud is not None:
-            self._user_cloud.gaps = self.cloud.gaps
-            self._user_cloud.windows_seen = self.cloud.windows_seen
-            self._user_cloud.last_reconstruction = self.cloud.last_reconstruction
-
-        nrmse = {q: Q.nrmse_table(est[q].T, tru[q].T) for q in qnames}
-        nrmse_q = {q: Q.nrmse_table(est_q[q].T, tru[q].T) for q in qnames}
-        total_tuples = int(sum(int(np.sum(w.counts)) for w in windows))
-        return {
-            "nrmse": nrmse,
-            "nrmse_at_query": nrmse_q,
-            "wan_bytes": self.transport.bytes_sent,
-            "full_bytes": total_tuples * 4,
-            "plan_seconds": self.edge.plan_seconds,
-            "gaps": self.cloud.gaps,
-            "revisions": self.cloud.revisions,
-            "late_drops": self.cloud.late_drops,
-            "duplicates": self.cloud.duplicates,
-            "window_age_ms": ages,
-            "revised_windows": revised,
-            "freshness_ms": freshness_percentiles(ages),
-        }
+        return self._engine.run(windows)
 
 
 def run_experiment(values: np.ndarray, window: int, budget_fraction: float,
@@ -237,13 +184,23 @@ def run_experiment(values: np.ndarray, window: int, budget_fraction: float,
                    latency_ms: float = 0.0, jitter_ms: float = 0.0,
                    window_period_ms: float = 1000.0,
                    staleness_deadline_ms: Optional[float] = None) -> dict:
-    """One (dataset, method, budget) experiment over all tumbling windows."""
+    """One (dataset, method, budget) experiment over all tumbling windows.
+
+    Deprecated string-config path: prefer ``repro.api.ScenarioConfig`` +
+    ``Experiment.from_scenario`` (same engine underneath; this helper is
+    kept for in-memory value matrices and returns the legacy dict).
+    """
+    from repro.api.experiment import SingleEdgeRuntime
     from repro.data.streams import windows_from_matrix
     from repro.streaming.events import AsyncTransport
 
+    warnings.warn(
+        "run_experiment is deprecated; build a repro.api.ScenarioConfig "
+        "and use repro.api.Experiment.from_scenario instead",
+        DeprecationWarning, stacklevel=2)
     cfg = cfg or PlannerConfig()
     windows = windows_from_matrix(values, window)
-    exp = StreamingExperiment(
+    exp = SingleEdgeRuntime(
         edge=EdgeNode(cfg=cfg, budget_fraction=budget_fraction, method=method,
                       straggler_drop=straggler_drop),
         cloud=CloudNode(query_names=query_names),

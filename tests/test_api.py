@@ -1,0 +1,344 @@
+"""Scenario API: registries, ScenarioConfig round trips, the unified
+Experiment runtime, deprecation shims and the link-cost-aware controller.
+
+Covers the ISSUE-3 acceptance matrix:
+  * ScenarioConfig JSON round-trip equality (single-edge and fleet, with
+    array-valued planner fields),
+  * registry unknown-name errors list the registered alternatives,
+  * ``Experiment.from_scenario`` (E=1, zero latency, infinite deadline)
+    reproduces the legacy ``StreamingExperiment`` results bit-for-bit —
+    and the fleet path reproduces ``FleetExperiment``,
+  * the legacy shims emit DeprecationWarning and behave unchanged,
+  * cost-aware water-filling shifts budget off expensive uplinks and is
+    bit-for-bit parity when off.
+"""
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.api import (BASELINES, ControllerSpec, DataSpec, EPSILON_POLICIES,
+                       Experiment, MODELS, QUERIES, Registry, RunReport,
+                       SOLVERS, ScenarioConfig, TopologySpec, TransportSpec,
+                       UnknownComponentError)
+from repro.core.planner import plan_with_baseline
+from repro.core.types import PlannerConfig
+from repro.data import smartcity_like, fleet_like, fleet_windows
+from repro.data.streams import windows_from_matrix
+from repro.fleet import BudgetController, FleetExperiment, make_topology
+from repro.streaming import (CloudNode, EdgeNode, StreamingExperiment,
+                             Transport, run_experiment)
+
+
+# ------------------------------------------------------------- registries
+
+def test_registry_decorator_and_dict_access():
+    reg = Registry("widget")
+
+    @reg.register("spin")
+    def spin():
+        return 42
+
+    reg.register("twirl", spin, aliases=("whirl",))
+    assert reg["spin"] is spin and reg.get("twirl") is spin
+    assert "whirl" in reg and reg.names() == ("spin", "twirl", "whirl")
+    assert dict(reg.items())["spin"] is spin
+
+
+def test_registry_unknown_name_lists_alternatives():
+    with pytest.raises(UnknownComponentError) as ei:
+        SOLVERS.get("newton")
+    msg = str(ei.value)
+    for alt in ("'ipm'", "'slsqp'", "'closed_form'"):
+        assert alt in msg
+    with pytest.raises(UnknownComponentError, match="'cubic'"):
+        MODELS.get("quartic")
+    with pytest.raises(UnknownComponentError, match="'k_se'"):
+        EPSILON_POLICIES.get("fixed")
+    with pytest.raises(UnknownComponentError, match="'MEDIAN'"):
+        QUERIES.get("P95")
+
+
+def test_registry_rejects_conflicting_reregistration():
+    reg = Registry("widget")
+    reg.register("a", object())
+    with pytest.raises(ValueError, match="already registered"):
+        reg.register("a", object())
+
+
+def test_sampler_registry_resolves_allocators():
+    from repro.api import SAMPLERS
+    counts = np.asarray([50, 50, 50])
+    sigma = np.ones(3)
+    allocs = [
+        SAMPLERS.get("srs")(counts, 30),
+        SAMPLERS.get("stratified")(counts, 30),
+        SAMPLERS.get("svoila")(counts.astype(np.float64), sigma, 30),
+        SAMPLERS.get("neyman_cost")(counts.astype(np.float64), sigma,
+                                    np.ones(3), 30.0),
+    ]
+    for a in allocs:
+        assert (a >= 0).all() and (a <= counts).all()
+        assert a.sum() > 0
+
+
+def test_plan_with_baseline_unknown_method():
+    vals, _ = smartcity_like(256, seed=0)
+    w = windows_from_matrix(vals, 256)[0]
+    with pytest.raises(UnknownComponentError, match="'approx_iot'"):
+        plan_with_baseline(w, 100.0, "reservoir")
+    assert "reservoir" not in BASELINES
+
+
+def test_scenario_validates_components_at_construction():
+    with pytest.raises(UnknownComponentError, match="solver"):
+        ScenarioConfig(planner=PlannerConfig(solver="newton"))
+    with pytest.raises(UnknownComponentError, match="method"):
+        ScenarioConfig(method="reservoir")
+    with pytest.raises(UnknownComponentError, match="query"):
+        ScenarioConfig(queries=("AVG", "P95"))
+    with pytest.raises(UnknownComponentError, match="dataset"):
+        DataSpec(dataset="imagenet")
+
+
+def test_scenario_validates_dataset_topology_pairing():
+    # a fleet (E, k, T) generator without a multi-site topology ...
+    with pytest.raises(ValueError, match="fleet generator"):
+        ScenarioConfig(data=DataSpec(dataset="fleet", options={"k": 4}))
+    # ... and a single-edge (k, T) matrix spread over a fleet
+    with pytest.raises(ValueError, match="single-edge"):
+        ScenarioConfig(
+            data=DataSpec(dataset="smartcity"),
+            topology=TopologySpec(n_regions=2, sites_per_region=2))
+
+
+def test_scenario_config_is_hashable():
+    cfg = ScenarioConfig(
+        data=DataSpec(dataset="turbine", options={"k": 5}),
+        planner=PlannerConfig(cost_per_sample=(1.0, 2.0, 0.5, 1.5, 1.0)))
+    same = ScenarioConfig.from_json(cfg.to_json())
+    assert hash(cfg) == hash(same)
+    assert len({cfg, same}) == 1                  # usable as a sweep key
+
+
+# ---------------------------------------------------------- serialization
+
+def test_scenario_json_round_trip_single_edge():
+    cfg = ScenarioConfig(
+        data=DataSpec(dataset="turbine", n_points=1024, window=128, seed=3,
+                      options={"k": 5}),
+        method="mean", budget_fraction=0.4,
+        planner=PlannerConfig(model="linear", dependence="pearson",
+                              epsilon_policy="alpha", epsilon_scale=0.1,
+                              cost_per_sample=np.asarray([1.0, 2.0, 0.5,
+                                                          1.5, 1.0]),
+                              seed=7),
+        transport=TransportSpec(latency_ms=250.0, jitter_ms=50.0,
+                                staleness_deadline_ms=3000.0),
+        queries=("AVG", "MEDIAN"), name="rt")
+    # array-valued planner fields normalize to tuples at construction
+    assert isinstance(cfg.planner.cost_per_sample, tuple)
+    cfg2 = ScenarioConfig.from_json(cfg.to_json())
+    assert cfg2 == cfg
+    assert ScenarioConfig.from_dict(cfg.to_dict()) == cfg
+
+
+def test_scenario_json_round_trip_fleet():
+    cfg = ScenarioConfig(
+        data=DataSpec(dataset="fleet", n_points=256, window=128, seed=2,
+                      options={"k": 4, "region_strength": [0.9, 0.2]}),
+        budget_fraction=0.25,
+        planner=PlannerConfig(solver="closed_form"),
+        topology=TopologySpec(n_regions=2, sites_per_region=3, seed=2,
+                              jitter_ms=5.0),
+        controller=ControllerSpec(mode="rebalance", link_cost_aware=True,
+                                  ewma=0.4),
+        queries=("AVG",), name="fleet-rt")
+    cfg2 = ScenarioConfig.from_json(cfg.to_json())
+    assert cfg2 == cfg
+    assert cfg2.is_fleet and cfg2.controller.link_cost_aware
+
+
+# ----------------------------------------- unified runtime: E=1 equivalence
+
+def test_from_scenario_e1_matches_legacy_streaming_bitwise():
+    """E=1, zero latency, infinite deadline == legacy StreamingExperiment."""
+    vals, _ = smartcity_like(768, seed=1)
+    with pytest.warns(DeprecationWarning):
+        legacy = StreamingExperiment(
+            edge=EdgeNode(cfg=PlannerConfig(seed=0), budget_fraction=0.3,
+                          method="model"),
+            cloud=CloudNode(query_names=("AVG", "VAR")),
+            transport=Transport(drop_prob=0.0, seed=0),
+        ).run(windows_from_matrix(vals, 256))
+
+    scenario = ScenarioConfig(
+        data=DataSpec(dataset="smartcity", n_points=768, window=256, seed=1),
+        method="model", budget_fraction=0.3, planner=PlannerConfig(seed=0),
+        queries=("AVG", "VAR"))
+    report = Experiment.from_scenario(scenario).run()
+    assert isinstance(report, RunReport) and report.n_sites == 1
+    for q in ("AVG", "VAR"):
+        np.testing.assert_array_equal(report.raw["nrmse"][q],
+                                      legacy["nrmse"][q])
+        np.testing.assert_array_equal(report.raw["nrmse_at_query"][q],
+                                      legacy["nrmse_at_query"][q])
+    assert report.wan_bytes == legacy["wan_bytes"]
+    assert report.gaps == legacy["gaps"] == 0
+    assert report.region_nrmse["local"]["AVG"] == report.nrmse["AVG"]
+
+
+def test_from_scenario_one_site_topology_degenerates_to_single_edge():
+    from repro.api.experiment import SingleEdgeRuntime
+    scenario = ScenarioConfig(
+        data=DataSpec(dataset="smartcity", n_points=512, window=256, seed=0),
+        topology=TopologySpec(n_regions=1, sites_per_region=1, seed=0),
+        queries=("AVG",))
+    exp = Experiment.from_scenario(scenario)
+    assert isinstance(exp.runtime, SingleEdgeRuntime)
+    r = exp.run()
+    assert np.isfinite(r.nrmse["AVG"])
+    # the lone site's link cost prices the WAN bytes
+    assert r.wan_cost == pytest.approx(
+        r.wan_bytes * scenario.topology.build(1).sites[0].link.cost_per_byte)
+
+
+def test_from_scenario_fleet_matches_legacy_fleet_bitwise():
+    E, R, K, W = 4, 2, 4, 64
+    vals, _ = fleet_like(E, R, K, n_points=2 * W, seed=5)
+    with pytest.warns(DeprecationWarning):
+        legacy = FleetExperiment(
+            topology=make_topology(R, E // R, K, seed=5),
+            controller=BudgetController(total_budget=0.3 * E * K * W,
+                                        n_sites=E),
+            cfg=PlannerConfig(solver="closed_form"),
+            query_names=("AVG",),
+        ).run(fleet_windows(vals, W))
+
+    scenario = ScenarioConfig(
+        data=DataSpec(dataset="fleet", n_points=2 * W, window=W, seed=5,
+                      options={"k": K}),
+        budget_fraction=0.3, planner=PlannerConfig(solver="closed_form"),
+        topology=TopologySpec(n_regions=R, sites_per_region=E // R, seed=5),
+        controller=ControllerSpec(), queries=("AVG",))
+    report = Experiment.from_scenario(scenario).run()
+    assert report.n_sites == E
+    assert report.nrmse["AVG"] == legacy["fleet_nrmse"]["AVG"]
+    np.testing.assert_array_equal(report.nrmse_per_stream["AVG"],
+                                  legacy["site_nrmse"]["AVG"])
+    assert report.wan_bytes == legacy["wan_bytes"]
+    assert report.region_nrmse == legacy["region_nrmse"]
+
+
+# ------------------------------------------------------- deprecation shims
+
+def test_run_experiment_warns_and_matches_scenario_api():
+    vals, _ = smartcity_like(512, seed=4)
+    with pytest.warns(DeprecationWarning, match="run_experiment"):
+        legacy = run_experiment(vals, 256, 0.3, "model",
+                                cfg=PlannerConfig(seed=0),
+                                query_names=("AVG",))
+    report = Experiment.from_scenario(ScenarioConfig(
+        data=DataSpec(dataset="smartcity", n_points=512, window=256, seed=4),
+        budget_fraction=0.3, planner=PlannerConfig(seed=0),
+        queries=("AVG",))).run()
+    np.testing.assert_array_equal(report.raw["nrmse"]["AVG"],
+                                  legacy["nrmse"]["AVG"])
+    assert report.wan_bytes == legacy["wan_bytes"]
+
+
+def test_streaming_shim_warns_and_preserves_counter_mirroring():
+    vals, _ = smartcity_like(512, seed=2)
+    cloud = CloudNode(query_names=("AVG",))
+    with pytest.warns(DeprecationWarning, match="StreamingExperiment"):
+        exp = StreamingExperiment(
+            edge=EdgeNode(cfg=PlannerConfig(seed=0), budget_fraction=0.3,
+                          method="model"),
+            cloud=cloud,
+            transport=Transport(drop_prob=0.5, seed=7),
+        )
+    r = exp.run(windows_from_matrix(vals, 256))
+    # shim still exposes the upgraded transport and mirrors cloud counters
+    assert r["gaps"] == exp.transport.payloads_dropped == cloud.gaps
+    assert cloud.windows_seen == exp.cloud.windows_seen
+
+
+def test_fleet_shim_warns_and_exposes_engine_state():
+    E, R, K, W = 4, 2, 4, 64
+    vals, _ = fleet_like(E, R, K, n_points=W, seed=0)
+    with pytest.warns(DeprecationWarning, match="FleetExperiment"):
+        exp = FleetExperiment(
+            topology=make_topology(R, E // R, K, seed=0),
+            controller=BudgetController(total_budget=0.3 * E * K * W,
+                                        n_sites=E),
+            cfg=PlannerConfig(solver="closed_form"), query_names=("AVG",))
+    r = exp.run(fleet_windows(vals, W))
+    assert len(exp.transports) == E and len(exp.clouds) == E
+    assert exp.plan_windows == 1
+    assert r["wan_bytes"] == sum(t.bytes_sent for t in exp.transports)
+
+
+def test_experiment_path_does_not_warn():
+    scenario = ScenarioConfig(
+        data=DataSpec(dataset="smartcity", n_points=512, window=256, seed=0),
+        queries=("AVG",))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        Experiment.from_scenario(scenario).run()
+
+
+# --------------------------------------------- cost-aware water-filling
+
+def _fed(ctrl, err):
+    ctrl.budgets()
+    ctrl.update(np.asarray(err, float), np.zeros(ctrl.n_sites))
+    return ctrl.budgets()
+
+
+def test_cost_aware_controller_shifts_budget_off_expensive_links():
+    err = [1.0, 1.0, 1.0, 1.0]
+    cost = np.asarray([1.0, 1.0, 4.0, 4.0])
+    blind = _fed(BudgetController(total_budget=400.0, n_sites=4), err)
+    aware = _fed(BudgetController(total_budget=400.0, n_sites=4,
+                                  link_cost=cost, cost_aware=True), err)
+    # equal demand: blind splits evenly, aware yields budget on $4 links
+    assert np.allclose(blind, 100.0)
+    assert aware[2] < blind[2] and aware[3] < blind[3]
+    assert aware[0] > blind[0] and aware[1] > blind[1]
+    # the fleet-wide sample total is conserved
+    assert np.isclose(aware.sum(), 400.0)
+
+
+def test_cost_aware_off_is_bitwise_parity():
+    err = [0.5, 2.0, 1.0, 0.25]
+    cost = np.asarray([1.0, 2.0, 3.0, 4.0])
+    blind = _fed(BudgetController(total_budget=400.0, n_sites=4), err)
+    off = _fed(BudgetController(total_budget=400.0, n_sites=4,
+                                link_cost=cost, cost_aware=False), err)
+    np.testing.assert_array_equal(blind, off)
+
+
+def test_cost_aware_flag_through_scenario_lowers_wan_cost():
+    data = DataSpec(dataset="fleet", n_points=256, window=128, seed=2,
+                    options={"k": 4,
+                             "region_strength": [0.9, 0.2],
+                             "region_volatility": [0.5, 2.0]})
+
+    def _scenario(flag):
+        return ScenarioConfig(
+            data=data, budget_fraction=0.25,
+            planner=PlannerConfig(solver="closed_form"),
+            topology=TopologySpec(n_regions=2, sites_per_region=3, seed=2),
+            controller=ControllerSpec(mode="rebalance",
+                                      link_cost_aware=flag),
+            queries=("AVG",))
+
+    blind = Experiment.from_scenario(_scenario(False)).run()
+    aware = Experiment.from_scenario(_scenario(True)).run()
+    ctrl = Experiment._build_controller(_scenario(True),
+                                        _scenario(True).topology.build(4))
+    assert ctrl.cost_aware and ctrl.link_cost is not None
+    # hetero links: region1 costs more per byte; aware must not spend more $
+    assert aware.wan_cost <= blind.wan_cost
+    assert np.isfinite(aware.nrmse["AVG"])
