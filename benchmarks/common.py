@@ -124,6 +124,28 @@ SMOKE_SCENARIOS: list[ScenarioConfig] = [
                    controller=ControllerSpec(mode="rebalance",
                                              link_cost_aware=True),
                    queries=("AVG", "VAR")),
+    # plan engines selected declaratively (repro.planning.ENGINES): the
+    # batched engine covering a former host-only family (mean imputation),
+    # and the shard_map engine splitting the site axis over the local
+    # devices — coverage regressions in either fail the CI smoke
+    ScenarioConfig(name="smoke/fleet_engine_batched_mean",
+                   data=DataSpec(dataset="fleet", n_points=256, window=128,
+                                 seed=1, options={"k": 4}),
+                   planner=PlannerConfig(solver="closed_form", model="mean",
+                                         engine="batched"),
+                   topology=TopologySpec(n_regions=2, sites_per_region=3,
+                                         seed=1),
+                   queries=("AVG",)),
+    ScenarioConfig(name="smoke/fleet_engine_sharded",
+                   data=DataSpec(dataset="fleet", n_points=256, window=128,
+                                 seed=1, options={"k": 4}),
+                   planner=PlannerConfig(solver="closed_form",
+                                         epsilon_policy="exact_mse",
+                                         engine="sharded"),
+                   topology=TopologySpec(n_regions=2, sites_per_region=3,
+                                         seed=1),
+                   controller=ControllerSpec(demand_signal="max_err"),
+                   queries=("AVG",)),
 ]
 
 

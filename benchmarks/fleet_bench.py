@@ -1,20 +1,25 @@
-"""Fleet benchmarks: batched vs host-loop planning throughput at E = 64,
-static vs rebalanced fleet budgets at equal WAN spend, cost-aware vs
-cost-blind water-filling at equal sample spend, and an async-WAN latency
-sweep (per-region end-to-end freshness at query time).
+"""Fleet benchmarks: host-loop vs batched vs sharded planning throughput
+at E in {16, 64, 256} (the plan-engine registry), static vs rebalanced
+fleet budgets at equal WAN spend, cost-aware vs cost-blind water-filling
+at equal sample spend, and an async-WAN latency sweep (per-region
+end-to-end freshness at query time).
 
 Acceptance targets (ISSUE 1): >= 5x planning-throughput speedup for the
 batched path over the E-loop host path, and lower fleet NRMSE for the
 rebalanced budget at (approximately) equal WAN bytes.  ISSUE 2 adds the
 latency sweep; ISSUE 3 moves every experiment row onto the Scenario API
 (``ScenarioConfig`` tables + the shared driver in benchmarks/common.py)
-and adds the link-cost-aware controller comparison.
+and adds the link-cost-aware controller comparison.  ISSUE 5 replaces the
+single E=64 throughput pair with the three-engine comparison over the E
+grid (``repro.planning.ENGINES``); the sharded rows split the site axis
+over however many devices are present (one on a bare CPU runner — run
+under XLA_FLAGS=--xla_force_host_platform_device_count=8 to see the
+multi-device split).
 """
 from __future__ import annotations
 
 import time
 
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import run_scenario
@@ -22,9 +27,10 @@ from repro.api import (ControllerSpec, DataSpec, ScenarioConfig,
                        TopologySpec, TransportSpec)
 from repro.core.types import PlannerConfig
 from repro.data import fleet_like, fleet_windows
-from repro.fleet import fleet_plan, host_loop_plan
+from repro.planning import ENGINES
 
 E, R, K, W = 64, 4, 6, 128
+ENGINE_GRID_E = (16, 64, 256)
 
 _HETERO_DATA = DataSpec(
     dataset="fleet", n_points=32 * 128, window=128, seed=2,
@@ -69,36 +75,38 @@ LATENCY_SCENARIOS = [
 ]
 
 
-def _throughput_rows():
-    vals, _ = fleet_like(E, R, K, n_points=3 * W, seed=0)
-    wins = fleet_windows(vals, W)
-    counts = np.full((E, K), W, np.int64)
-    budgets = np.full(E, 0.25 * K * W)
+def _time_engine(name, wins, counts, budgets, cfg, reps):
+    engine = ENGINES.get(name)
+    engine.plan_fleet(wins[0], counts, budgets, cfg)   # compile / warm jits
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        for w in wins:
+            engine.plan_fleet(w, counts, budgets, cfg)
+    return (time.perf_counter() - t0) / (reps * len(wins)) * 1e6
+
+
+def _engine_rows():
+    """host-loop vs batched vs sharded planning throughput over the E grid
+    (ISSUE-5 acceptance: batched/sharded speedup rows over the host loop
+    at E=64)."""
     cfg = PlannerConfig(solver="closed_form")
-
-    def batched(w):
-        plan = fleet_plan(jnp.asarray(w), jnp.asarray(counts, jnp.int32),
-                          jnp.asarray(budgets, jnp.float32), 1.0)
-        plan.n_real.block_until_ready()
-
-    batched(wins[0])                              # compile
-    t0 = time.perf_counter()
-    for w in wins:
-        batched(w)
-    us_batched = (time.perf_counter() - t0) / len(wins) * 1e6
-
-    host_loop_plan(wins[0], counts, budgets, cfg)  # warm the jit caches
-    t0 = time.perf_counter()
-    for w in wins:
-        host_loop_plan(w, counts, budgets, cfg)
-    us_host = (time.perf_counter() - t0) / len(wins) * 1e6
-
-    speedup = us_host / max(us_batched, 1e-9)
-    yield (f"fleet_plan_batched_E{E}", us_batched,
-           f"windows_per_s={1e6 / us_batched:.1f}")
-    yield (f"fleet_plan_hostloop_E{E}", us_host,
-           f"windows_per_s={1e6 / us_host:.1f}")
-    yield (f"fleet_plan_speedup_E{E}", 0.0, f"speedup={speedup:.1f}x")
+    for e in ENGINE_GRID_E:
+        vals, _ = fleet_like(e, R, K, n_points=2 * W, seed=0)
+        wins = fleet_windows(vals, W)
+        counts = np.full((e, K), W, np.int64)
+        budgets = np.full(e, 0.25 * K * W)
+        # the host loop pays e plan_window round trips per window; keep its
+        # wall time bounded at E=256 while the array engines get more reps
+        reps_host = 1 if e >= 256 else 2
+        us = {name: _time_engine(name, wins, counts, budgets, cfg,
+                                 reps=reps_host if name == "host" else 4)
+              for name in ("host", "batched", "sharded")}
+        for name, u in us.items():
+            yield (f"fleet_plan_{name}_E{e}", u,
+                   f"windows_per_s={1e6 / u:.1f}")
+        yield (f"fleet_plan_speedup_E{e}", 0.0,
+               f"batched={us['host'] / max(us['batched'], 1e-9):.1f}x;"
+               f"sharded={us['host'] / max(us['sharded'], 1e-9):.1f}x")
 
 
 def _rebalance_rows():
@@ -149,7 +157,7 @@ def _latency_rows():
 
 
 def run():
-    yield from _throughput_rows()
+    yield from _engine_rows()
     yield from _rebalance_rows()
     yield from _cost_aware_rows()
     yield from _latency_rows()

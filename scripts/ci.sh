@@ -99,7 +99,14 @@ print(f"registry coverage OK: {total} registered component names all "
       f"appear in tests/ or benchmarks/")
 PY
 
-echo "== scenario-API smoke (benchmarks/run.py --smoke) =="
+echo "== planning-engine multi-device smoke (8 forced host devices) =="
+# the sharded engine's site-axis split is a single-device no-op on bare CPU
+# runners; forcing 8 host devices makes the shard_map path and the
+# sharded-vs-batched parity pins real
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python -m pytest -q tests/test_planning_engine.py
+
+echo "== scenario-API smoke (benchmarks/run.py --smoke, incl. batched/sharded engines) =="
 python -m benchmarks.run --smoke
 
 echo "== fleet smoke (small E, interpret-mode kernels) =="

@@ -5,20 +5,20 @@
 WAN transport(s), cloud(s), fleet controller — and ``run()`` returns a
 structured :class:`RunReport` instead of a loose dict.
 
-Two engines live here (moved verbatim from the legacy runtimes, so the
-PR-2 lock-step pins still hold bit-for-bit):
+Two runtimes live here:
 
   * :class:`SingleEdgeRuntime` — one edge, one uplink, one cloud on the
-    event-driven virtual clock (the former
-    ``repro.streaming.runtime.StreamingExperiment``).
-  * :class:`FleetRuntime` — E edges, per-site uplinks/clouds, batched
-    planning and the fleet budget controller (the former
-    ``repro.fleet.runtime.FleetExperiment``).
+    event-driven virtual clock.
+  * :class:`FleetRuntime` — E edges, per-site uplinks/clouds, planning
+    through the plan-engine registry (``repro.planning.ENGINES``) and the
+    fleet budget controller.
 
-``Experiment`` picks the engine from the scenario: no topology (or a
+``Experiment`` picks the runtime from the scenario: no topology (or a
 one-site topology) is the E=1 degenerate fleet and runs single-edge with
-the lone link's WAN character; anything larger runs the fleet engine.  The
-legacy classes remain as deprecation shims delegating here.
+the lone link's WAN character; anything larger runs the fleet runtime.
+Both plan through the same engine layer — ``plan_window`` routes the E=1
+case and ``FleetRuntime`` the (E, k, N) stack — selected declaratively via
+``PlannerConfig.engine``.
 """
 from __future__ import annotations
 
@@ -27,16 +27,15 @@ import time
 from typing import Callable, Optional
 
 import numpy as np
-import jax.numpy as jnp
 
 from repro.core import queries as Q
 from repro.core.reconstruct import reconstruct_window
-from repro.core.types import CompactModel, EdgePayload, PlannerConfig, WindowBatch
+from repro.core.types import EdgePayload, PlannerConfig, WindowBatch
 from repro.api.scenario import ControllerSpec, ScenarioConfig
 
 
 # ==========================================================================
-# single-edge engine (formerly streaming.runtime.StreamingExperiment)
+# single-edge runtime (one edge, one uplink, one cloud)
 # ==========================================================================
 
 @dataclasses.dataclass
@@ -145,7 +144,7 @@ class SingleEdgeRuntime:
 
 
 # ==========================================================================
-# fleet engine (formerly fleet.runtime.FleetExperiment)
+# fleet runtime (E edges against per-site clouds)
 # ==========================================================================
 
 def _draw_real_np(rng: np.random.Generator, values: np.ndarray,
@@ -166,12 +165,17 @@ def _draw_real_np(rng: np.random.Generator, values: np.ndarray,
 
 @dataclasses.dataclass
 class FleetRuntime:
-    """Simulates E edge sites against one cloud for a window sequence."""
+    """Simulates E edge sites against one cloud for a window sequence.
+
+    Planning goes through the engine registry (``repro.planning.ENGINES``):
+    ``planning`` overrides the engine name explicitly, otherwise
+    ``cfg.engine`` decides, and a fleet defaults to ``"batched"``.
+    """
 
     topology: "FleetTopology"
     controller: "BudgetController"
     cfg: PlannerConfig = dataclasses.field(default_factory=PlannerConfig)
-    planning: str = "batched"          # "batched" | "host_loop"
+    planning: Optional[str] = None     # ENGINES name; None = cfg.engine
     use_kernel: Optional[bool] = None  # None=auto: Pallas kernel on TPU only
     interpret: bool = False            # kernel interpret mode (CPU testing)
     straggler_drop: Optional[Callable[[int, int, int], bool]] = None
@@ -180,8 +184,12 @@ class FleetRuntime:
     staleness_deadline_ms: float = float("inf")
 
     def __post_init__(self):
+        from repro.planning import ENGINES
         from repro.streaming.events import AsyncTransport, ReorderCloudNode
         sites = self.topology.sites
+        self.engine = ENGINES.get(self.planning or self.cfg.engine
+                                  or "batched")
+        self.engine.check(self.cfg)      # fail at construction, not mid-run
         self.transports = [AsyncTransport(drop_prob=s.link.drop_prob,
                                           seed=self.cfg.seed + s.site_id,
                                           cost_per_byte=s.link.cost_per_byte,
@@ -200,61 +208,24 @@ class FleetRuntime:
     def _plan(self, wid: int, values: np.ndarray, counts: np.ndarray,
               budgets: np.ndarray) -> dict:
         """(E,k,N) window -> host-side plan arrays (or per-site payloads)."""
-        from repro.fleet.batched_planner import fleet_plan
         t0 = time.perf_counter()
-        if self.planning == "batched":
-            plan = fleet_plan(jnp.asarray(values, jnp.float32),
-                              jnp.asarray(counts, jnp.int32),
-                              jnp.asarray(budgets, jnp.float32),
-                              self.cfg.epsilon_scale,
-                              dependence=self.cfg.dependence,
-                              model=self.cfg.model,
-                              epsilon_policy=self.cfg.epsilon_policy,
-                              use_kernel=self.use_kernel,
-                              interpret=self.interpret)
-            out = {f.name: np.asarray(getattr(plan, f.name))
-                   for f in dataclasses.fields(plan)}
-        else:   # the replaced path: E independent plan_window round trips
-            from repro.core.planner import plan_window
-            payloads, r2 = [], np.zeros(values.shape[0])
-            for s in range(values.shape[0]):
-                batch = WindowBatch.from_numpy(values[s], counts[s], wid)
-                payload, diag = plan_window(batch, float(budgets[s]), self.cfg)
-                payloads.append(payload)
-                if payload.model is not None:
-                    ev = np.asarray(payload.model.explained_var
-                                    if not isinstance(payload.model, dict)
-                                    else payload.model["explained_var"])
-                    var = np.maximum(payload.stats_digest["var"], 1e-12)
-                    r2[s] = float(np.mean(np.clip(ev / var, 0.0, 1.0)))
-            out = {"payloads": payloads, "r2": r2}
+        out = self.engine.plan_fleet(values, counts, budgets, self.cfg,
+                                     window_id=wid,
+                                     use_kernel=self.use_kernel,
+                                     interpret=self.interpret)
         self.plan_seconds += time.perf_counter() - t0
         self.plan_windows += 1
         return out
 
     def _payload(self, plan: dict, s: int, wid: int, values: np.ndarray,
                  counts: np.ndarray) -> EdgePayload:
-        if "payloads" in plan:
+        if "payloads" in plan:           # the host engine drew them already
             return plan["payloads"][s]
+        from repro.api.registry import MODELS
+        from repro.planning import assemble_payload
         real = _draw_real_np(self._rng, values, counts, plan["n_real"][s])
-        pred = plan["predictor"][s]
-        ns = plan["n_imputed"][s].copy()
-        for i in range(len(ns)):
-            ns[i] = min(ns[i], len(real[int(pred[i])]))       # 1d, post-draw
-        model = CompactModel(coeffs=plan["coeffs"][s], loc=plan["loc"][s],
-                             scale=plan["scale"][s],
-                             explained_var=plan["explained_var"][s],
-                             predictor=pred)
-        return EdgePayload(
-            window_id=wid,
-            n_real=np.asarray([len(v) for v in real], np.int64),
-            n_imputed=ns.astype(np.int64),
-            real_values=real,
-            model=model,
-            mean_imputation=False,
-            predictor=np.asarray(pred, np.int64),
-            stats_digest={"mean": np.asarray(plan["mean"][s]),
-                          "var": np.asarray(plan["var"][s])})
+        return assemble_payload(MODELS.get(self.cfg.model), plan, s, wid,
+                                real)
 
     # ----------------------------------------------------------------- run
     def run(self, fleet_windows: list[np.ndarray]) -> dict:
@@ -534,7 +505,7 @@ class Experiment:
     @classmethod
     def from_scenario(cls, scenario: ScenarioConfig,
                       straggler_drop: Optional[Callable] = None,
-                      planning: str = "batched",
+                      planning: Optional[str] = None,
                       use_kernel: Optional[bool] = None,
                       interpret: bool = False) -> "Experiment":
         from repro.streaming.events import AsyncTransport
@@ -594,7 +565,8 @@ class Experiment:
             floor_mult=spec.floor_mult, ceil_mult=spec.ceil_mult,
             ewma=spec.ewma,
             link_cost=link_cost if spec.link_cost_aware else None,
-            cost_aware=spec.link_cost_aware)
+            cost_aware=spec.link_cost_aware,
+            demand_signal=spec.demand_signal)
 
     def make_windows(self):
         """Materialize the scenario's window sequence (deterministic)."""

@@ -110,6 +110,11 @@ class Registry:
 #   QUERIES           repro.core.queries     (AVG | VAR | MIN | MAX | MEDIAN)
 #   DATASETS          repro.data.streams     (home | turbine | smartcity |
 #                                             mvn | fleet)
+#   IID_MODES         repro.core.thinning    (none/iid | thinning |
+#                                             m_dependence)
+#   DEMAND_SIGNALS    repro.fleet.controller (obs_err | pred_err | max_err)
+#   ENGINES           repro.planning.engine  (host/host_loop | batched |
+#                                             sharded)
 # --------------------------------------------------------------------------
 
 SOLVERS = Registry("solver")
@@ -120,6 +125,9 @@ SAMPLERS = Registry("allocation sampler")
 BASELINES = Registry("baseline planner")
 QUERIES = Registry("query")
 DATASETS = Registry("dataset")
+IID_MODES = Registry("iid mode")
+DEMAND_SIGNALS = Registry("controller demand signal")
+ENGINES = Registry("plan engine")
 
 ALL_REGISTRIES: dict[str, Registry] = {
     "solvers": SOLVERS,
@@ -130,6 +138,9 @@ ALL_REGISTRIES: dict[str, Registry] = {
     "baselines": BASELINES,
     "queries": QUERIES,
     "datasets": DATASETS,
+    "iid_modes": IID_MODES,
+    "demand_signals": DEMAND_SIGNALS,
+    "engines": ENGINES,
 }
 
 
@@ -140,7 +151,9 @@ def populate() -> dict[str, Registry]:
     want the complete picture (CI coverage check, ``docs/api.md`` tables)
     call this to force all registrations.
     """
-    import repro.core.planner    # noqa: F401  (pulls solver/epsilon/stats/..)
-    import repro.core.queries    # noqa: F401
-    import repro.data.streams    # noqa: F401
+    import repro.core.planner       # noqa: F401  (pulls solver/epsilon/...)
+    import repro.core.queries       # noqa: F401
+    import repro.data.streams       # noqa: F401
+    import repro.fleet.controller   # noqa: F401  (demand signals)
+    import repro.planning           # noqa: F401  (plan engines)
     return ALL_REGISTRIES

@@ -134,7 +134,10 @@ class ControllerSpec:
     ``link_cost_aware`` switches on cost-aware water-filling: per-site
     demand is discounted by sqrt of the site's relative $/byte so expensive
     uplinks yield budget first.  Default off — bit-for-bit parity with the
-    pre-registry controller.
+    pre-registry controller.  ``demand_signal`` picks how per-site error
+    observations combine into the tracked demand ("obs_err" | "pred_err" |
+    "max_err"), validated against the demand-signal registry here rather
+    than deep in the runtime.
     """
 
     mode: str = "rebalance"            # "rebalance" | "static"
@@ -142,11 +145,13 @@ class ControllerSpec:
     ceil_mult: float = 3.0
     ewma: float = 0.5
     link_cost_aware: bool = False
+    demand_signal: str = "obs_err"
 
     def __post_init__(self):
         if self.mode not in ("rebalance", "static"):
             raise ValueError(f"controller mode must be 'rebalance' or "
                              f"'static', got {self.mode!r}")
+        _reg.DEMAND_SIGNALS.get(self.demand_signal)
 
 
 def _valid_method(method: str) -> None:
@@ -189,6 +194,7 @@ class ScenarioConfig:
         _reg.MODELS.get(planner.model)
         _reg.EPSILON_POLICIES.get(planner.epsilon_policy)
         _reg.DEPENDENCE.get(planner.dependence)
+        _reg.IID_MODES.get(planner.iid_mode)
         for q in self.queries:
             _reg.QUERIES.get(q)
 
@@ -206,6 +212,15 @@ class ScenarioConfig:
                 f"topology has {self.topology.n_sites} sites but dataset "
                 f"{self.data.dataset!r} is single-edge (k, T); use a fleet "
                 f"dataset or drop the topology")
+
+        # an engine that cannot honor this config (host-only solver,
+        # thinning, ...) must fail here, not deep inside a run.  With
+        # engine=None a fleet scenario resolves to the batched engine, so
+        # validate against that default too; single-edge stays on the host
+        # path, which supports everything.
+        engine = planner.engine or ("batched" if self.is_fleet else None)
+        if engine is not None:
+            _reg.ENGINES.get(engine).check(planner)
 
     # ------------------------------------------------------------ derived
     @property

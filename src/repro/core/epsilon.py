@@ -1,61 +1,112 @@
-"""Bias-tolerance (epsilon_i) selection policies (§IV-C, appendix B)."""
+"""Bias-tolerance (epsilon_i) selection policies (§IV-C, appendix B).
+
+Everything here is elementwise ``jnp`` so the same registered policy
+functions serve both the host planner (``plan_window`` — concrete (k,)
+stats) and the jitted batched engine (``repro.planning.batched`` —
+traced (E, k) stats broadcast over the leading fleet axis).  Host callers
+``np.asarray`` the result; there is deliberately no second copy of these
+formulas anywhere else.
+
+Precision: the formulas follow the input dtype — f32 in production, since
+window statistics are f32 throughout.  The pre-engine host path upcast
+its intermediates to f64 numpy; running both paths in the same f32
+arithmetic instead is what lets the host oracle and the batched engine
+agree allocation-for-allocation (tests/test_planning_engine.py), at the
+cost of a possible ±1-sample shift vs the old f64 host loop at exact
+constraint boundaries.
+"""
 from __future__ import annotations
 
-import numpy as np
+import jax.numpy as jnp
 
 from repro.api.registry import EPSILON_POLICIES
-from repro.core.types import StreamStats
+from repro.core.types import Array, StreamStats
 
 
-def alpha_fraction(stats: StreamStats, alpha: float = 0.05) -> np.ndarray:
+def alpha_fraction(stats: StreamStats, alpha: float = 0.05) -> Array:
     """eps_i = alpha * sigma_i^2 — tolerate biasing VAR by a fixed fraction."""
-    return alpha * np.maximum(np.asarray(stats.var, np.float64), 1e-12)
+    return alpha * jnp.maximum(stats.var, 1e-12)
 
 
-def k_standard_errors(stats: StreamStats, k_se: float = 1.0) -> np.ndarray:
+def k_standard_errors(stats: StreamStats, k_se: float = 1.0) -> Array:
     """eps_i = k * sqrt(Var[sigma_hat^2])  (eq. 8, the paper's default).
 
     Bias in the cloud estimator is allowed to scale with the *uncertainty* of
     the edge estimator: precise edge estimates force conservative imputation.
     """
-    se = np.sqrt(np.maximum(np.asarray(stats.var_of_var, np.float64), 0.0))
-    return k_se * np.maximum(se, 1e-12)
+    se = jnp.sqrt(jnp.maximum(stats.var_of_var, 0.0))
+    return k_se * jnp.maximum(se, 1e-12)
 
 
-def exact_mse_cap(stats: StreamStats, n_real: np.ndarray, n_imp: np.ndarray,
-                  n_std: np.ndarray) -> np.ndarray:
+def exact_mse_cap(stats: StreamStats, n_real: Array, n_imp: Array,
+                  n_std: Array) -> Array:
     """Appendix B: |Bias| <= sqrt(Var_std[s^2] - Var_new[s^2]) guarantees the
     imputing estimator's MSE is no worse than a standard n_std-sample scheme.
 
     Non-convex in (n_r, n_s), so per the paper we use it as a *post-hoc cap*:
     given a candidate allocation, return the implied bound (callers shrink n_s
-    until eq. 7's bias fits under it — see planner.apply_exact_mse_cap).
+    until eq. 7's bias fits under it — see :func:`exact_mse_shrink`).
     """
-    var = np.asarray(stats.var, np.float64)
-    m4 = np.asarray(stats.m4, np.float64)
+    var = stats.var
+    m4 = stats.m4
 
     def var_of_s2(n):
-        n = np.maximum(n, 2.0)
-        return np.maximum((m4 - (n - 3.0) / (n - 1.0) * var**2) / n, 0.0)
+        n = jnp.maximum(n, 2.0)
+        return jnp.maximum((m4 - (n - 3.0) / (n - 1.0) * var**2) / n, 0.0)
 
-    v_std = var_of_s2(np.asarray(n_std, np.float64))
-    nr = np.maximum(np.asarray(n_real, np.float64), 2.0)
-    ns = np.maximum(np.asarray(n_imp, np.float64), 0.0)
-    tot = np.maximum(nr + ns - 1.0, 1.0)
+    v_std = var_of_s2(jnp.asarray(n_std, var.dtype))
+    nr = jnp.maximum(jnp.asarray(n_real, var.dtype), 2.0)
+    ns = jnp.maximum(jnp.asarray(n_imp, var.dtype), 0.0)
+    tot = jnp.maximum(nr + ns - 1.0, 1.0)
     # Var_new[s^2] ~ ((nr-1)^2 Var[s_r^2] + (ns-1)^2 Var[s_s^2]) / (nr+ns-1)^2;
     # imputed values are deterministic given the predictor sample, so their
     # conditional variance term is dominated by the real-sample term.
     v_new = ((nr - 1.0) ** 2 * var_of_s2(nr)) / tot**2
-    return np.sqrt(np.maximum(v_std - v_new, 0.0))
+    return jnp.sqrt(jnp.maximum(v_std - v_new, 0.0))
+
+
+def exact_mse_shrink(n_real: Array, n_imp: Array, sigma2: Array,
+                     explained_var: Array, cap: Array,
+                     tol: float = 1e-12) -> Array:
+    """Closed-form appendix-B shrink: largest n_s' <= n_s whose eq.-7 bias
+    fits under ``cap`` with n_r held fixed.
+
+    Replaces the per-stream host ``while`` decrement loop with its exact
+    fixed point so it runs inside the jitted batched pass.  The eq.-7 bias
+    at (n_r, n_s) is  b(n_s) = (n_s sigma2 - (n_s-1) V) / (n_r + n_s - 1);
+    b(n_s) <= cap  is the affine condition  n_s * a <= c  with
+    a = sigma2 - V - cap and c = cap (n_r - 1) - V, so the decrement loop
+    stops at  floor(c / a)  when a > 0, keeps n_s when the bias already
+    fits, and otherwise collapses to the loop's floor (n_s = 1 for a fully
+    imputed stream, whose n_r + n_s - 1 <= 0 guard halts the decrement;
+    0 elsewhere).  Elementwise, so it broadcasts over any leading fleet
+    axis and vmaps for free.
+    """
+    ns = jnp.asarray(n_imp, jnp.result_type(sigma2, 1.0))
+    nr = jnp.asarray(n_real, ns.dtype)
+    a = sigma2 - explained_var - cap
+    c = cap * (nr - 1.0) - explained_var
+    tot0 = nr + ns - 1.0
+    bias0 = ((ns * sigma2 - (ns - 1.0) * explained_var)
+             / jnp.where(tot0 > 0, tot0, 1.0))
+    fits0 = bias0 <= cap + tol
+    ns_max = jnp.floor(c / jnp.where(a > 0, a, 1.0) + tol)
+    shrunk = jnp.where(a > 0, jnp.clip(ns_max, 0.0, ns), 0.0)
+    out = jnp.where(fits0, ns, shrunk)
+    # the loop's floor: a stream with no real samples halts the decrement at
+    # n_s = 1 (the n_r + n_s - 1 <= 0 guard), everything else may reach 0
+    floor = jnp.where(nr < 0.5, jnp.minimum(ns, 1.0), 0.0)
+    out = jnp.maximum(out, floor)
+    return jnp.where((tot0 <= 0) | (ns <= 0), ns, out)
 
 
 EPSILON_POLICIES.register("alpha", lambda stats, scale: alpha_fraction(stats, alpha=scale))
 EPSILON_POLICIES.register("k_se", lambda stats, scale: k_standard_errors(stats, k_se=scale))
 # exact_mse starts from the k-SE default and is capped post-solve
-# (planner.apply_exact_mse_cap)
+# (exact_mse_shrink, applied by both the host planner and the batched engine)
 EPSILON_POLICIES.register("exact_mse", lambda stats, scale: k_standard_errors(stats, k_se=scale))
 
 
-def make_epsilon(policy: str, stats: StreamStats, scale: float) -> np.ndarray:
+def make_epsilon(policy: str, stats: StreamStats, scale: float) -> Array:
     """Resolve ``policy`` through the epsilon-policy registry and apply it."""
     return EPSILON_POLICIES.get(policy)(stats, scale)

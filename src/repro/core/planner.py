@@ -55,6 +55,19 @@ class ModelSpec:
     multi: bool = False     # two predictor streams per target (§V-G)
     mean: bool = False      # degenerate mean-imputation model
 
+    def budget_net(self, budget, k: int):
+        """Constraint-1f accounting, the single source of truth: the model
+        upload is reserved for every stream up front (an exact per-stream
+        indicator would be non-convex; nearly all streams impute in
+        practice).  Budget is in 4-byte sample units.  Accepts a float
+        (host planner) or a traced array of per-site budgets (batched
+        engine) and never returns less than 2 samples.
+        """
+        overhead = self.per_model_bytes / 4.0 * k
+        if isinstance(budget, (int, float)):
+            return max(float(budget) - overhead, 2.0)
+        return jnp.maximum(budget - overhead, 2.0)
+
 
 MODELS.register("linear", ModelSpec(
     name="linear", select=pred_mod.heuristic_predictors,
@@ -77,24 +90,37 @@ def apply_exact_mse_cap(p: solver_mod.ProblemData, stats, nr: np.ndarray,
                         ns: np.ndarray) -> np.ndarray:
     """Appendix-B post-hoc cap: shrink n_s until eq.-7 bias fits under the
     exact-MSE bound (the bound itself is non-convex, so it cannot live inside
-    the program — see appendix B)."""
+    the program — see appendix B).  The shrink is the closed-form fixed point
+    of the decrement loop (``epsilon.exact_mse_shrink``), shared verbatim
+    with the jitted batched engine."""
     n_std = nr + ns   # the standard scheme we must not be worse than
     cap = eps_mod.exact_mse_cap(stats, nr, ns, n_std)
-    out = ns.copy()
-    for i in range(len(ns)):
-        while out[i] > 0:
-            tot = nr[i] + out[i] - 1.0
-            if tot <= 0:
-                break
-            bias = (out[i] * p.sigma2[i] - (out[i] - 1.0) * p.explained_var[i]) / tot
-            if bias <= cap[i] + 1e-12:
-                break
-            out[i] -= 1
-    return out
+    out = eps_mod.exact_mse_shrink(nr, ns, jnp.asarray(p.sigma2, cap.dtype),
+                                   jnp.asarray(p.explained_var, cap.dtype),
+                                   cap)
+    return np.asarray(out, np.int64)
 
 
 def plan_window(batch: WindowBatch, budget: float, cfg: PlannerConfig,
                 key: Optional[jax.Array] = None) -> tuple[EdgePayload, PlanDiagnostics]:
+    """Algorithm 1 for one window — the planning front door.
+
+    ``cfg.engine`` selects the implementation through the plan-engine
+    registry (``repro.planning.ENGINES``): ``None`` (the default) and
+    ``"host"`` run the host-numpy path below; ``"batched"``/``"sharded"``
+    route through the jitted engine as its degenerate E=1 case, so a
+    single edge and a fleet share one code path.
+    """
+    if cfg.engine not in (None, "host", "host_loop"):
+        from repro.planning import ENGINES
+        return ENGINES.get(cfg.engine).plan_one(batch, budget, cfg, key=key)
+    return _plan_window_host(batch, budget, cfg, key)
+
+
+def _plan_window_host(batch: WindowBatch, budget: float, cfg: PlannerConfig,
+                      key: Optional[jax.Array] = None
+                      ) -> tuple[EdgePayload, PlanDiagnostics]:
+    """The host-numpy Algorithm-1 body (the ``"host"`` engine)."""
     if key is None:
         key = jax.random.PRNGKey(cfg.seed ^ int(batch.window_id))
 
@@ -128,10 +154,7 @@ def plan_window(batch: WindowBatch, budget: float, cfg: PlannerConfig,
         sigma2_obj = thinning.m_dependence_sigma2(values, counts, cfg.m_lags)
 
     # --- model upload overhead comes out of the budget (constraint 1f) ---
-    # An exact per-stream indicator ("model shipped iff n_s>0") is non-convex,
-    # so we reserve the upload for every stream up front (conservative: nearly
-    # all streams impute in practice).  Budget is in 4-byte sample units.
-    budget_net = max(budget - spec.per_model_bytes / 4.0 * len(counts), 2.0)
+    budget_net = spec.budget_net(budget, len(counts))
 
     problem = solver_mod.build_problem(
         stats, model, eps, budget_net,

@@ -304,7 +304,7 @@ def closed_form_alloc(q: Array, cost: Array, n_obs: Array, sigma2: Array,
     strongly-predicted streams), and the >=1-sample floor (1e) may overshoot
     C by at most k·max(c) when C < sum(c).  Every op is elementwise or a
     fixed-length reduction, so the whole thing jits and vmaps across sites —
-    this is the fleet batched-planning path (repro.fleet.batched_planner).
+    this is the fleet batched-planning path (repro.planning.batched).
 
     Inputs are (k,) arrays (budget scalar); returns (n_r (k,) i32,
     n_s (k,) i32, objective scalar).

@@ -10,6 +10,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api.registry import IID_MODES
 from repro.core import stats as S
 
 
@@ -58,6 +59,11 @@ def thin_window(values: np.ndarray, counts: np.ndarray, max_lag: int = 8):
     return out, new_counts, strides
 
 
+def _identity_window(values: np.ndarray, counts: np.ndarray):
+    """The iid assumption taken at face value: the window passes through."""
+    return values, counts, None
+
+
 def m_dependence_sigma2(values: np.ndarray, counts: np.ndarray, m: int) -> np.ndarray:
     """Effective per-stream variance for the objective under m-dependence:
     sigma_eff^2 = sigma^2 + 2 sum_{j=1}^m gamma_j  (eq. 9), floored at a small
@@ -71,3 +77,15 @@ def m_dependence_sigma2(values: np.ndarray, counts: np.ndarray, m: int) -> np.nd
         g = np.asarray(S.autocovariance(v, n, m))
         out[i] = max(float(var[0]) + 2.0 * float(g.sum()), 0.05 * float(var[0]) + 1e-12)
     return out
+
+
+# PlannerConfig.iid_mode resolves through this registry so ScenarioConfig
+# can reject typos at construction ("iid" is the historical alias of
+# "none").  Entries are each mode's host-side handler for reference —
+# their signatures differ per mode (thin_window transforms the window,
+# m_dependence_sigma2 adjusts the objective variance), so the planner
+# dispatches on the *name* (core/planner.py) rather than calling entries
+# uniformly; the registry's contract here is construction-time validation.
+IID_MODES.register("none", _identity_window, aliases=("iid",))
+IID_MODES.register("thinning", thin_window)
+IID_MODES.register("m_dependence", m_dependence_sigma2)

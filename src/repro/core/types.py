@@ -144,13 +144,16 @@ class PlannerConfig:
     """Tunables for the Algorithm-1 planner."""
 
     dependence: str = "spearman"          # "pearson" | "spearman"  (§IV-B)
-    model: str = "cubic"                  # "linear" | "cubic" | "mean"
+    model: str = "cubic"                  # "linear" | "cubic" | "mean" | "multi"
     epsilon_policy: str = "k_se"          # "k_se" | "alpha" | "exact_mse"
     epsilon_scale: float = 1.0            # k in k·SE, or alpha
-    iid_mode: str = "iid"                 # "iid" | "thinning" | "m_dependence"
+    iid_mode: str = "none"                # "none" ("iid") | "thinning" | "m_dependence"
     m_lags: int = 1                       # for m_dependence
     cost_per_sample: Optional[np.ndarray] = None  # (k,) heterogeneous costs; None => 1
     weight_mode: str = "inv_mean"         # footnote 3: minimize coefficient of variation
     solver: str = "ipm"                   # "ipm" (JAX) | "slsqp" (scipy oracle)
     seed: int = 0
     fixed_predictors: Optional[np.ndarray] = None  # override §IV-A heuristic
+    engine: Optional[str] = None          # plan engine ("host" | "batched" |
+                                          # "sharded"); None = auto (host for
+                                          # plan_window, batched for fleets)

@@ -157,7 +157,7 @@ def fleet_like(n_sites: int = 16, n_regions: int = 4, k: int = 6,
 
 def fleet_windows(values: np.ndarray, window: int) -> list[np.ndarray]:
     """Slice a fleet tensor (E, k, T) into tumbling windows of (E, k, window)
-    — the stacked layout ``repro.fleet.batched_planner.fleet_plan`` consumes."""
+    — the stacked layout ``repro.planning.fleet_plan`` consumes."""
     e, k, total = values.shape
     n_win = total // window
     return [values[:, :, w * window:(w + 1) * window] for w in range(n_win)]

@@ -2,23 +2,23 @@
 planning and cross-edge WAN budget rebalancing.
 
 topology        — regions, sites, per-link WAN properties (latency/jitter).
-batched_planner — one jitted (E, k, N) planning pass for the whole fleet
-                  (block-diagonal stream_stats kernel + vmapped closed-form
-                  solver); host_loop_plan is the E-loop baseline it replaces.
 controller      — per-window water-filling of the fleet-wide sample budget,
-                  with arrival-lag telemetry from the async WAN.
-runtime         — FleetExperiment: deprecation shim over the unified
-                  Scenario-API runtime (repro.api.experiment.FleetRuntime;
-                  edges -> per-site async transports -> reorder-buffer
-                  clouds, docs/transport.md); new code builds a
-                  repro.api.ScenarioConfig instead.
+                  with arrival-lag telemetry from the async WAN and
+                  registry-validated demand signals.
+
+Planning itself lives in :mod:`repro.planning` (the engine layer:
+``fleet_plan`` one jitted (E, k, N) pass, ``host_loop_plan`` the E-loop
+oracle it replaces, and the ``shard_map`` sharded engine); the experiment
+loop is :class:`repro.api.experiment.FleetRuntime`, built from a
+declarative :class:`repro.api.ScenarioConfig` via
+``Experiment.from_scenario``.  The names below re-export the planning
+entry points for convenience.
 """
-from repro.fleet.batched_planner import FleetPlan, fleet_plan, host_loop_plan
 from repro.fleet.controller import BudgetController, water_fill
-from repro.fleet.runtime import FleetExperiment
 from repro.fleet.topology import (FleetTopology, LinkSpec, RegionSpec,
                                   SiteSpec, make_topology)
+from repro.planning import FleetPlan, fleet_plan, host_loop_plan
 
 __all__ = ["FleetPlan", "fleet_plan", "host_loop_plan", "BudgetController",
-           "water_fill", "FleetExperiment", "FleetTopology", "LinkSpec",
+           "water_fill", "FleetTopology", "LinkSpec",
            "RegionSpec", "SiteSpec", "make_topology"]

@@ -32,6 +32,47 @@ from typing import Optional
 
 import numpy as np
 
+from repro.api.registry import DEMAND_SIGNALS
+
+
+# --------------------------------------------------------------------------
+# demand-signal registry: how a window's per-site observations combine into
+# the error estimate the sqrt(err · b) demand tracks.  Each entry maps
+# (obs_err (E,), pred_err (E,) or None) -> (E,) error.  ScenarioConfig
+# validates ControllerSpec.demand_signal against these names at
+# construction instead of failing deep in the runtime.
+# --------------------------------------------------------------------------
+
+def _obs_err(obs: np.ndarray, pred: Optional[np.ndarray]) -> np.ndarray:
+    """Edge-local observed error; solver-predicted error fills the gaps
+    (sites with no finite observation yet).  The default — bit-for-bit the
+    pre-registry controller."""
+    if pred is None:
+        return obs
+    return np.where(np.isfinite(obs) & (obs > 0), obs, pred)
+
+
+def _pred_err(obs: np.ndarray, pred: Optional[np.ndarray]) -> np.ndarray:
+    """Solver-predicted error (sqrt of the relaxed eq.-2 objective) alone —
+    the planner's own forecast, useful when the edge-local proxy is noisy.
+    Falls back to the observed error when no objective is reported (the
+    host engine's payload path carries none)."""
+    return obs if pred is None else pred
+
+
+def _max_err(obs: np.ndarray, pred: Optional[np.ndarray]) -> np.ndarray:
+    """Pessimistic max of observed and predicted error — the conservative
+    signal for deployments dominated by tail-sensitive queries (VAR/MAX
+    care about a different budget than AVG)."""
+    if pred is None:
+        return obs
+    return np.maximum(np.where(np.isfinite(obs), obs, 0.0), pred)
+
+
+DEMAND_SIGNALS.register("obs_err", _obs_err)
+DEMAND_SIGNALS.register("pred_err", _pred_err)
+DEMAND_SIGNALS.register("max_err", _max_err)
+
 
 def water_fill(demand: np.ndarray, total: float, lo: np.ndarray,
                hi: np.ndarray, iters: int = 8) -> np.ndarray:
@@ -69,8 +110,10 @@ class BudgetController:
     site_capacity: Optional[np.ndarray] = None   # (E,) tuples cached/window
     link_cost: Optional[np.ndarray] = None       # (E,) relative $/byte/uplink
     cost_aware: bool = False       # weight demand by link cost (see budgets)
+    demand_signal: str = "obs_err"  # DEMAND_SIGNALS registry name
 
     def __post_init__(self):
+        self._signal = DEMAND_SIGNALS.get(self.demand_signal)
         self._demand = np.ones(self.n_sites)
         self._r2 = np.zeros(self.n_sites)
         self._lag = np.zeros(self.n_sites)
@@ -150,10 +193,9 @@ class BudgetController:
             self._lag = np.where(ok, mixed, self._lag)
             self._lag_seen |= ok
         b = np.maximum(self._last_budgets, 1.0)
-        err = np.asarray(obs_err, np.float64)
-        if objective is not None:
-            pred_err = np.sqrt(np.maximum(np.asarray(objective), 0.0))
-            err = np.where(np.isfinite(err) & (err > 0), err, pred_err)
+        pred_err = (None if objective is None
+                    else np.sqrt(np.maximum(np.asarray(objective), 0.0)))
+        err = self._signal(np.asarray(obs_err, np.float64), pred_err)
         err = np.nan_to_num(err, nan=1.0)
         demand = np.sqrt(np.maximum(err, 1e-9) * b)     # sqrt(A_s) estimate
         a = self.ewma

@@ -20,21 +20,9 @@ import numpy as np
 
 from repro.models.config import ModelConfig, MoEConfig, SSMConfig
 from repro.parallel.sharding import logical_sharding_constraint as shard
+from repro.parallel.sharding import shard_map_compat as _shard_map
 
 Array = jax.Array
-
-
-def _shard_map(f, *, mesh, in_specs, out_specs, axis_names, check_vma=False):
-    """jax.shard_map across jax versions: new API (axis_names/check_vma) when
-    present, else jax.experimental.shard_map (auto/check_rep)."""
-    if hasattr(jax, "shard_map"):
-        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs, axis_names=axis_names,
-                             check_vma=check_vma)
-    from jax.experimental.shard_map import shard_map as _sm
-    auto = frozenset(mesh.axis_names) - set(axis_names)
-    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-               check_rep=check_vma, auto=auto)
 
 
 # ---------------------------------------------------------------- init utils

@@ -1,0 +1,26 @@
+"""repro.planning — the one planning engine layer (docs/planning.md).
+
+Algorithm 1 has exactly one front door: a :class:`PlanEngine` resolved from
+the ``ENGINES`` registry.  ``plan_window`` (``repro.core.planner``) routes
+through it as the degenerate E=1 case and the fleet runtime feeds it the
+full (E, k, N) stack, so a single edge and a fleet share one code path.
+
+engine   — the PlanEngine interface, the host (E-loop) engine, shared
+           payload assembly, and ``host_loop_plan`` (the stacked-array
+           oracle/baseline).
+batched  — ``fleet_plan``: one jitted (E, k, N) pass covering every
+           registered model family and epsilon policy (incl. the
+           closed-form exact-MSE shrink).
+sharded  — the batched pass under ``shard_map`` across the site axis
+           (``repro.parallel.sharding.site_mesh``).
+"""
+from repro.api.registry import ENGINES
+from repro.planning.batched import BatchedEngine, FleetPlan, fleet_plan
+from repro.planning.engine import (HostEngine, PlanEngine,
+                                   UnsupportedPlanConfig, assemble_payload,
+                                   host_loop_plan)
+from repro.planning.sharded import ShardedEngine
+
+__all__ = ["ENGINES", "PlanEngine", "HostEngine", "BatchedEngine",
+           "ShardedEngine", "FleetPlan", "fleet_plan", "host_loop_plan",
+           "assemble_payload", "UnsupportedPlanConfig"]

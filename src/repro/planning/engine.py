@@ -1,0 +1,203 @@
+"""The PlanEngine abstraction — one front door for Algorithm-1 planning.
+
+Every runtime (single edge or fleet) plans through an engine resolved from
+the ``ENGINES`` registry (``repro.api.registry``):
+
+  * ``"host"`` (alias ``"host_loop"``) — E independent round trips of the
+    host-numpy ``plan_window``; supports every :class:`PlannerConfig`
+    (thinning / m-dependence, the IPM and SLSQP solvers, fixed predictors,
+    heterogeneous per-sample costs).  The parity oracle and the throughput
+    baseline the batched path replaces.
+  * ``"batched"`` — the whole fleet's windows stacked into one ``(E, k, N)``
+    tensor and planned in one jitted pass (``repro.planning.batched``);
+    covers every registered model family and epsilon policy.
+  * ``"sharded"`` — the batched pass split across devices on the
+    embarrassingly-parallel site axis via ``shard_map``
+    (``repro.planning.sharded``).
+
+Engines expose two entry points: :meth:`PlanEngine.plan_fleet` (the
+``(E, k, N)`` stack → per-site plan arrays or payloads) and
+:meth:`PlanEngine.plan_one` (one :class:`WindowBatch` → ``EdgePayload`` —
+the degenerate E=1 case ``plan_window`` routes through, so a single edge
+and a fleet share one code path).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.registry import ENGINES, MODELS
+from repro.core import samplers
+from repro.core.planner import ModelSpec, PlanDiagnostics, _plan_window_host
+from repro.core.types import (Allocation, CompactModel, EdgePayload,
+                              PlannerConfig, WindowBatch)
+
+
+class UnsupportedPlanConfig(ValueError):
+    """A PlannerConfig the selected engine cannot honor.
+
+    Raised instead of silently falling back to another code path (the
+    pre-engine ``fleet_plan`` quietly substituted the closed-form solver and
+    the default epsilon accounting for whatever the config asked — exactly
+    the drift this registry exists to prevent).
+    """
+
+    def __init__(self, engine: str, reason: str):
+        self.engine = engine
+        self.reason = reason
+        super().__init__(f"plan engine {engine!r} cannot run this "
+                         f"PlannerConfig: {reason}")
+
+
+def assemble_payload(spec: ModelSpec, plan: dict, s: int, window_id: int,
+                     real_values: list) -> EdgePayload:
+    """One site's plan arrays + drawn real samples -> the WAN payload.
+
+    Shared by the fleet runtime (numpy-RNG sampling at fleet scale) and the
+    E=1 ``plan_one`` path (jax-PRNG sampling): the 1d cap against what
+    actually shipped, mean-imputation flagging, the multi-predictor dict
+    model.  (The host planner body assembles its payload inline from the
+    fitted model objects rather than plan arrays — that copy predates this
+    helper and is pinned bit-for-bit by the lock-step tests.)
+    """
+    real_values = [np.asarray(v, np.float32) for v in real_values]
+    pred = np.asarray(plan["predictor"][s], np.int64)
+    ns = np.asarray(plan["n_imputed"][s], np.int64).copy()
+    # imputation is keyed to the *front* of the predictor's real sample, so
+    # cap n_s at what actually shipped (constraint 1d, post-draw)
+    for i in range(len(ns)):
+        if spec.multi:
+            ns[i] = min(ns[i], len(real_values[int(pred[i, 0])]),
+                        len(real_values[int(pred[i, 1])]))
+        else:
+            ns[i] = min(ns[i], len(real_values[int(pred[i])]))
+    if spec.mean:
+        model = None
+    elif spec.multi:
+        model = {"coeffs": np.asarray(plan["coeffs"][s]),
+                 "loc": np.asarray(plan["loc"][s]),
+                 "scale": np.asarray(plan["scale"][s]),
+                 "explained_var": np.asarray(plan["explained_var"][s]),
+                 "predictor": pred}
+    else:
+        model = CompactModel(coeffs=plan["coeffs"][s], loc=plan["loc"][s],
+                             scale=plan["scale"][s],
+                             explained_var=plan["explained_var"][s],
+                             predictor=pred)
+    return EdgePayload(
+        window_id=int(window_id),
+        n_real=np.asarray([len(v) for v in real_values], np.int64),
+        n_imputed=ns,
+        real_values=real_values,
+        model=model,
+        mean_imputation=spec.mean,
+        predictor=pred,
+        stats_digest={"mean": np.asarray(plan["mean"][s]),
+                      "var": np.asarray(plan["var"][s])})
+
+
+class PlanEngine:
+    """Interface every registered plan engine implements."""
+
+    name: str = "?"
+
+    def check(self, cfg: PlannerConfig) -> None:
+        """Raise :class:`UnsupportedPlanConfig` if ``cfg`` needs a feature
+        this engine does not implement.  Default: everything supported."""
+
+    # ------------------------------------------------------------- fleet
+    def plan_fleet(self, values: np.ndarray, counts: np.ndarray,
+                   budgets: np.ndarray, cfg: PlannerConfig, *,
+                   window_id: int = 0, use_kernel: Optional[bool] = None,
+                   interpret: bool = False) -> dict:
+        """(E, k, N) windows + per-site budgets -> one plan for all sites.
+
+        Returns a dict of host numpy arrays keyed like
+        :class:`~repro.planning.batched.FleetPlan` fields (array engines) or
+        ``{"payloads": [...], "r2": (E,)}`` (the host loop, which draws its
+        samples inside ``plan_window``).
+        """
+        raise NotImplementedError
+
+    # --------------------------------------------------------------- E=1
+    def plan_one(self, batch: WindowBatch, budget: float, cfg: PlannerConfig,
+                 key: Optional[jax.Array] = None
+                 ) -> tuple[EdgePayload, PlanDiagnostics]:
+        """One window through the engine — the degenerate E=1 fleet."""
+        self.check(cfg)
+        if key is None:
+            key = jax.random.PRNGKey(cfg.seed ^ int(batch.window_id))
+        values = np.asarray(batch.values)
+        counts = np.asarray(batch.counts)
+        plan = self.plan_fleet(values[None], counts[None],
+                               np.asarray([budget], np.float32), cfg,
+                               window_id=int(batch.window_id))
+        spec = MODELS.get(cfg.model)
+        real_values = samplers.draw_samples(key, jnp.asarray(values),
+                                            jnp.asarray(counts),
+                                            plan["n_real"][0])
+        payload = assemble_payload(spec, plan, 0, int(batch.window_id),
+                                   real_values)
+        # same feasibility semantics as the host closed-form entry: spend
+        # within the model-upload-net budget (the >=1-sample floor can
+        # overshoot it when the budget is tiny — report that honestly)
+        spent = float(np.sum(plan["n_real"][0]))
+        budget_net = spec.budget_net(float(budget), len(counts))
+        alloc = Allocation(
+            n_real=jnp.asarray(plan["n_real"][0], jnp.int32),
+            n_imputed=jnp.asarray(plan["n_imputed"][0], jnp.int32),
+            objective=jnp.asarray(plan["objective"][0], jnp.float32),
+            feasible=jnp.asarray(spent <= budget_net + 1e-6),
+            eps_used=jnp.asarray(plan["eps"][0], jnp.float32))
+        diag = PlanDiagnostics(stats=None, allocation=alloc,
+                               eps=np.asarray(plan["eps"][0]), strides=None,
+                               predictor=payload.predictor,
+                               solver_feasible=bool(alloc.feasible))
+        return payload, diag
+
+
+class HostEngine(PlanEngine):
+    """E independent ``plan_window`` round trips — oracle and baseline."""
+
+    name = "host"
+
+    def plan_fleet(self, values, counts, budgets, cfg, *, window_id=0,
+                   use_kernel=None, interpret=False) -> dict:
+        e = values.shape[0]
+        payloads, r2 = [], np.zeros(e)
+        for s in range(e):
+            batch = WindowBatch.from_numpy(values[s], counts[s], window_id)
+            payload, _ = _plan_window_host(batch, float(budgets[s]), cfg)
+            payloads.append(payload)
+            if payload.model is not None:
+                ev = np.asarray(payload.model["explained_var"]
+                                if isinstance(payload.model, dict)
+                                else payload.model.explained_var)
+                var = np.maximum(payload.stats_digest["var"], 1e-12)
+                r2[s] = float(np.mean(np.clip(ev / var, 0.0, 1.0)))
+        return {"payloads": payloads, "r2": r2}
+
+    def plan_one(self, batch, budget, cfg, key=None):
+        return _plan_window_host(batch, budget, cfg, key)
+
+
+HOST_ENGINE = HostEngine()
+ENGINES.register("host", HOST_ENGINE, aliases=("host_loop",))
+
+
+def host_loop_plan(values: np.ndarray, counts: np.ndarray,
+                   budgets: np.ndarray, cfg: PlannerConfig):
+    """The path the batched engine replaces, as stacked (E, k) arrays.
+
+    Kept as the throughput baseline (benchmarks/fleet_bench.py) and the
+    parity oracle (tests).  Returns (n_real, n_imputed, predictor).
+    """
+    out = HOST_ENGINE.plan_fleet(values, counts, budgets, cfg)
+    payloads = out["payloads"]
+    return (np.stack([p.n_real for p in payloads]),
+            np.stack([p.n_imputed for p in payloads]),
+            np.stack([p.predictor for p in payloads]))

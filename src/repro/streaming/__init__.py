@@ -1,9 +1,8 @@
-from repro.streaming.runtime import (EdgeNode, CloudNode, Transport,
-                                     StreamingExperiment, run_experiment)
+from repro.streaming.runtime import EdgeNode, CloudNode, Transport
 from repro.streaming.events import (AsyncTransport, DeliveryEvent, EventQueue,
                                     IngestOutcome, ReorderCloudNode,
                                     freshness_percentiles)
 
-__all__ = ["EdgeNode", "CloudNode", "Transport", "StreamingExperiment",
-           "run_experiment", "AsyncTransport", "DeliveryEvent", "EventQueue",
+__all__ = ["EdgeNode", "CloudNode", "Transport",
+           "AsyncTransport", "DeliveryEvent", "EventQueue",
            "IngestOutcome", "ReorderCloudNode", "freshness_percentiles"]

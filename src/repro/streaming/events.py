@@ -21,7 +21,7 @@ arrive on a virtual clock:
     gap-serving path (the cloud keeps serving the freshest earlier window).
     Duplicate deliveries (retransmits) are idempotent.
 
-Timing model (shared by StreamingExperiment / FleetExperiment):
+Timing model (shared by SingleEdgeRuntime / FleetRuntime):
 
     t_sent(wid)  = wid * window_period_ms          # edge closes the window
     t_due(wid)   = t_sent(wid) + window_period_ms  # query is answered here

@@ -7,11 +7,10 @@ latency; CloudNode reconstructs windows and answers aggregate queries.
 
 The experiment loop itself lives in :mod:`repro.api.experiment`
 (``SingleEdgeRuntime``; event-driven on a virtual clock via
-repro.streaming.events — see docs/transport.md).  The
-:class:`StreamingExperiment` class kept here is a deprecation shim for the
-pre-Scenario-API entry point; new code should build a
+repro.streaming.events — see docs/transport.md).  Build a
 :class:`repro.api.ScenarioConfig` and call
-``repro.api.Experiment.from_scenario``.
+``repro.api.Experiment.from_scenario`` to run one (``run(windows=...)``
+accepts in-memory window lists for matrix-driven studies).
 
 Fault tolerance:
   * device straggler/failure — a stream that misses the window deadline
@@ -24,7 +23,6 @@ from __future__ import annotations
 
 import dataclasses
 import time
-import warnings
 from typing import Callable, Optional
 
 import numpy as np
@@ -142,71 +140,3 @@ class CloudNode:
         return out
 
 
-@dataclasses.dataclass
-class StreamingExperiment:
-    """Deprecated shim — use ``repro.api.Experiment.from_scenario``.
-
-    Delegates to :class:`repro.api.experiment.SingleEdgeRuntime` (the same
-    loop, moved); behavior and results are bit-for-bit unchanged, including
-    the transport/cloud upgrades (``self.transport`` becomes the
-    AsyncTransport, ``self.cloud`` the ReorderCloudNode, and a plain
-    CloudNode passed in still receives the run counters afterwards).
-    """
-
-    edge: EdgeNode
-    cloud: CloudNode
-    transport: Transport
-    window_period_ms: float = 1000.0
-    staleness_deadline_ms: Optional[float] = None
-
-    def __post_init__(self):
-        warnings.warn(
-            "StreamingExperiment is deprecated; build a "
-            "repro.api.ScenarioConfig and use "
-            "repro.api.Experiment.from_scenario instead",
-            DeprecationWarning, stacklevel=3)
-        from repro.api.experiment import SingleEdgeRuntime
-        self._engine = SingleEdgeRuntime(
-            edge=self.edge, cloud=self.cloud, transport=self.transport,
-            window_period_ms=self.window_period_ms,
-            staleness_deadline_ms=self.staleness_deadline_ms)
-        self.transport = self._engine.transport
-        self.cloud = self._engine.cloud
-
-    def run(self, windows: list[WindowBatch]) -> dict:
-        return self._engine.run(windows)
-
-
-def run_experiment(values: np.ndarray, window: int, budget_fraction: float,
-                   method: str, cfg: Optional[PlannerConfig] = None,
-                   drop_prob: float = 0.0, straggler_drop=None,
-                   query_names=("AVG", "VAR", "MIN", "MAX"),
-                   latency_ms: float = 0.0, jitter_ms: float = 0.0,
-                   window_period_ms: float = 1000.0,
-                   staleness_deadline_ms: Optional[float] = None) -> dict:
-    """One (dataset, method, budget) experiment over all tumbling windows.
-
-    Deprecated string-config path: prefer ``repro.api.ScenarioConfig`` +
-    ``Experiment.from_scenario`` (same engine underneath; this helper is
-    kept for in-memory value matrices and returns the legacy dict).
-    """
-    from repro.api.experiment import SingleEdgeRuntime
-    from repro.data.streams import windows_from_matrix
-    from repro.streaming.events import AsyncTransport
-
-    warnings.warn(
-        "run_experiment is deprecated; build a repro.api.ScenarioConfig "
-        "and use repro.api.Experiment.from_scenario instead",
-        DeprecationWarning, stacklevel=2)
-    cfg = cfg or PlannerConfig()
-    windows = windows_from_matrix(values, window)
-    exp = SingleEdgeRuntime(
-        edge=EdgeNode(cfg=cfg, budget_fraction=budget_fraction, method=method,
-                      straggler_drop=straggler_drop),
-        cloud=CloudNode(query_names=query_names),
-        transport=AsyncTransport(drop_prob=drop_prob, seed=cfg.seed,
-                                 latency_ms=latency_ms, jitter_ms=jitter_ms),
-        window_period_ms=window_period_ms,
-        staleness_deadline_ms=staleness_deadline_ms,
-    )
-    return exp.run(windows)

@@ -61,6 +61,37 @@ def rng():
     return np.random.default_rng(0)
 
 
+def run_matrix(values, window, budget_fraction, method, cfg=None,
+               drop_prob=0.0, straggler_drop=None,
+               query_names=("AVG", "VAR", "MIN", "MAX"),
+               latency_ms=0.0, jitter_ms=0.0, window_period_ms=1000.0,
+               staleness_deadline_ms=None):
+    """One in-memory (k, T) matrix through the single-edge runtime.
+
+    Test-local stand-in for the removed ``run_experiment`` shim: builds a
+    ``SingleEdgeRuntime`` from the public primitives and returns the legacy
+    result dict.  Scenario-driven code should use
+    ``Experiment.from_scenario`` instead; this exists for tests that feed
+    explicit value matrices.
+    """
+    from repro.api.experiment import SingleEdgeRuntime
+    from repro.core.types import PlannerConfig
+    from repro.data.streams import windows_from_matrix
+    from repro.streaming import AsyncTransport, CloudNode, EdgeNode
+
+    cfg = cfg or PlannerConfig()
+    exp = SingleEdgeRuntime(
+        edge=EdgeNode(cfg=cfg, budget_fraction=budget_fraction, method=method,
+                      straggler_drop=straggler_drop),
+        cloud=CloudNode(query_names=query_names),
+        transport=AsyncTransport(drop_prob=drop_prob, seed=cfg.seed,
+                                 latency_ms=latency_ms, jitter_ms=jitter_ms),
+        window_period_ms=window_period_ms,
+        staleness_deadline_ms=staleness_deadline_ms,
+    )
+    return exp.run(windows_from_matrix(values, window))
+
+
 def subprocess_env(n_devices: int) -> dict:
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"

@@ -1,14 +1,16 @@
 """Scenario API: registries, ScenarioConfig round trips, the unified
-Experiment runtime, deprecation shims and the link-cost-aware controller.
+Experiment runtime and the link-cost-aware controller.
 
-Covers the ISSUE-3 acceptance matrix:
+Covers the ISSUE-3 acceptance matrix (re-pinned after the ISSUE-5 shim
+removal — the legacy ``StreamingExperiment``/``FleetExperiment``/
+``run_experiment`` wrappers are gone, so parity is asserted directly
+between ``Experiment.from_scenario`` and the engines it builds):
   * ScenarioConfig JSON round-trip equality (single-edge and fleet, with
     array-valued planner fields),
   * registry unknown-name errors list the registered alternatives,
   * ``Experiment.from_scenario`` (E=1, zero latency, infinite deadline)
-    reproduces the legacy ``StreamingExperiment`` results bit-for-bit —
-    and the fleet path reproduces ``FleetExperiment``,
-  * the legacy shims emit DeprecationWarning and behave unchanged,
+    reproduces a hand-built ``SingleEdgeRuntime`` bit-for-bit — and the
+    fleet path a hand-built ``FleetRuntime``,
   * cost-aware water-filling shifts budget off expensive uplinks and is
     bit-for-bit parity when off.
 """
@@ -18,17 +20,18 @@ import warnings
 import numpy as np
 import pytest
 
+from conftest import run_matrix
 from repro.api import (BASELINES, ControllerSpec, DataSpec, EPSILON_POLICIES,
                        Experiment, MODELS, QUERIES, Registry, RunReport,
                        SOLVERS, ScenarioConfig, TopologySpec, TransportSpec,
                        UnknownComponentError)
+from repro.api.experiment import FleetRuntime, SingleEdgeRuntime
 from repro.core.planner import plan_with_baseline
 from repro.core.types import PlannerConfig
 from repro.data import smartcity_like, fleet_like, fleet_windows
 from repro.data.streams import windows_from_matrix
-from repro.fleet import BudgetController, FleetExperiment, make_topology
-from repro.streaming import (CloudNode, EdgeNode, StreamingExperiment,
-                             Transport, run_experiment)
+from repro.fleet import BudgetController, make_topology
+from repro.streaming import CloudNode, EdgeNode, Transport
 
 
 # ------------------------------------------------------------- registries
@@ -162,16 +165,16 @@ def test_scenario_json_round_trip_fleet():
 
 # ----------------------------------------- unified runtime: E=1 equivalence
 
-def test_from_scenario_e1_matches_legacy_streaming_bitwise():
-    """E=1, zero latency, infinite deadline == legacy StreamingExperiment."""
+def test_from_scenario_e1_matches_hand_built_runtime_bitwise():
+    """E=1, zero latency, infinite deadline == a hand-built
+    SingleEdgeRuntime over the same primitives."""
     vals, _ = smartcity_like(768, seed=1)
-    with pytest.warns(DeprecationWarning):
-        legacy = StreamingExperiment(
-            edge=EdgeNode(cfg=PlannerConfig(seed=0), budget_fraction=0.3,
-                          method="model"),
-            cloud=CloudNode(query_names=("AVG", "VAR")),
-            transport=Transport(drop_prob=0.0, seed=0),
-        ).run(windows_from_matrix(vals, 256))
+    legacy = SingleEdgeRuntime(
+        edge=EdgeNode(cfg=PlannerConfig(seed=0), budget_fraction=0.3,
+                      method="model"),
+        cloud=CloudNode(query_names=("AVG", "VAR")),
+        transport=Transport(drop_prob=0.0, seed=0),
+    ).run(windows_from_matrix(vals, 256))
 
     scenario = ScenarioConfig(
         data=DataSpec(dataset="smartcity", n_points=768, window=256, seed=1),
@@ -204,17 +207,16 @@ def test_from_scenario_one_site_topology_degenerates_to_single_edge():
         r.wan_bytes * scenario.topology.build(1).sites[0].link.cost_per_byte)
 
 
-def test_from_scenario_fleet_matches_legacy_fleet_bitwise():
+def test_from_scenario_fleet_matches_hand_built_runtime_bitwise():
     E, R, K, W = 4, 2, 4, 64
     vals, _ = fleet_like(E, R, K, n_points=2 * W, seed=5)
-    with pytest.warns(DeprecationWarning):
-        legacy = FleetExperiment(
-            topology=make_topology(R, E // R, K, seed=5),
-            controller=BudgetController(total_budget=0.3 * E * K * W,
-                                        n_sites=E),
-            cfg=PlannerConfig(solver="closed_form"),
-            query_names=("AVG",),
-        ).run(fleet_windows(vals, W))
+    legacy = FleetRuntime(
+        topology=make_topology(R, E // R, K, seed=5),
+        controller=BudgetController(total_budget=0.3 * E * K * W,
+                                    n_sites=E),
+        cfg=PlannerConfig(solver="closed_form"),
+        query_names=("AVG",),
+    ).run(fleet_windows(vals, W))
 
     scenario = ScenarioConfig(
         data=DataSpec(dataset="fleet", n_points=2 * W, window=W, seed=5,
@@ -231,14 +233,14 @@ def test_from_scenario_fleet_matches_legacy_fleet_bitwise():
     assert report.region_nrmse == legacy["region_nrmse"]
 
 
-# ------------------------------------------------------- deprecation shims
+# --------------------------------------------- direct-runtime construction
 
-def test_run_experiment_warns_and_matches_scenario_api():
+def test_matrix_runtime_matches_scenario_api():
+    """Feeding a raw value matrix through SingleEdgeRuntime (the old
+    run_experiment path, now test-local) matches the Scenario API."""
     vals, _ = smartcity_like(512, seed=4)
-    with pytest.warns(DeprecationWarning, match="run_experiment"):
-        legacy = run_experiment(vals, 256, 0.3, "model",
-                                cfg=PlannerConfig(seed=0),
-                                query_names=("AVG",))
+    legacy = run_matrix(vals, 256, 0.3, "model", cfg=PlannerConfig(seed=0),
+                        query_names=("AVG",))
     report = Experiment.from_scenario(ScenarioConfig(
         data=DataSpec(dataset="smartcity", n_points=512, window=256, seed=4),
         budget_fraction=0.3, planner=PlannerConfig(seed=0),
@@ -248,35 +250,46 @@ def test_run_experiment_warns_and_matches_scenario_api():
     assert report.wan_bytes == legacy["wan_bytes"]
 
 
-def test_streaming_shim_warns_and_preserves_counter_mirroring():
+def test_single_edge_runtime_preserves_counter_mirroring():
     vals, _ = smartcity_like(512, seed=2)
     cloud = CloudNode(query_names=("AVG",))
-    with pytest.warns(DeprecationWarning, match="StreamingExperiment"):
-        exp = StreamingExperiment(
-            edge=EdgeNode(cfg=PlannerConfig(seed=0), budget_fraction=0.3,
-                          method="model"),
-            cloud=cloud,
-            transport=Transport(drop_prob=0.5, seed=7),
-        )
+    exp = SingleEdgeRuntime(
+        edge=EdgeNode(cfg=PlannerConfig(seed=0), budget_fraction=0.3,
+                      method="model"),
+        cloud=cloud,
+        transport=Transport(drop_prob=0.5, seed=7),
+    )
     r = exp.run(windows_from_matrix(vals, 256))
-    # shim still exposes the upgraded transport and mirrors cloud counters
+    # runtime exposes the upgraded transport and mirrors cloud counters
     assert r["gaps"] == exp.transport.payloads_dropped == cloud.gaps
     assert cloud.windows_seen == exp.cloud.windows_seen
 
 
-def test_fleet_shim_warns_and_exposes_engine_state():
+def test_fleet_runtime_exposes_engine_state():
     E, R, K, W = 4, 2, 4, 64
     vals, _ = fleet_like(E, R, K, n_points=W, seed=0)
-    with pytest.warns(DeprecationWarning, match="FleetExperiment"):
-        exp = FleetExperiment(
-            topology=make_topology(R, E // R, K, seed=0),
-            controller=BudgetController(total_budget=0.3 * E * K * W,
-                                        n_sites=E),
-            cfg=PlannerConfig(solver="closed_form"), query_names=("AVG",))
+    exp = FleetRuntime(
+        topology=make_topology(R, E // R, K, seed=0),
+        controller=BudgetController(total_budget=0.3 * E * K * W,
+                                    n_sites=E),
+        cfg=PlannerConfig(solver="closed_form"), query_names=("AVG",))
     r = exp.run(fleet_windows(vals, W))
+    assert exp.engine.name == "batched"      # fleet default via the registry
     assert len(exp.transports) == E and len(exp.clouds) == E
     assert exp.plan_windows == 1
     assert r["wan_bytes"] == sum(t.bytes_sent for t in exp.transports)
+
+
+def test_deprecation_shims_are_gone():
+    """ROADMAP item: the legacy wrappers were removed once nothing outside
+    the parity tests imported them."""
+    import repro.fleet
+    import repro.streaming
+    import repro.streaming.runtime as streaming_runtime
+    assert not hasattr(repro.streaming, "StreamingExperiment")
+    assert not hasattr(repro.streaming, "run_experiment")
+    assert not hasattr(streaming_runtime, "StreamingExperiment")
+    assert not hasattr(repro.fleet, "FleetExperiment")
 
 
 def test_experiment_path_does_not_warn():

@@ -20,9 +20,11 @@ from repro.core.planner import plan_window
 from repro.core.types import PlannerConfig, WindowBatch
 from repro.data import fleet_like, fleet_windows, smartcity_like, turbine_like
 from repro.data.streams import windows_from_matrix
-from repro.fleet import BudgetController, FleetExperiment, make_topology
+from conftest import run_matrix
+from repro.api.experiment import FleetRuntime, SingleEdgeRuntime
+from repro.fleet import BudgetController, make_topology
 from repro.streaming import (AsyncTransport, CloudNode, EdgeNode,
-                             ReorderCloudNode, StreamingExperiment, Transport)
+                             ReorderCloudNode, Transport)
 
 
 def _payload_at(seed, wid, sent_at_ms, k=4, window=64):
@@ -66,7 +68,7 @@ def test_streaming_zero_latency_matches_lockstep_bitwise(drop_prob):
     vals, _ = smartcity_like(768, seed=1)
     ref_nrmse, ref_bytes, ref_gaps = _lockstep_streaming_reference(
         vals, 256, 0.3, "model", drop_prob, seed=0)
-    exp = StreamingExperiment(
+    exp = SingleEdgeRuntime(
         edge=EdgeNode(cfg=PlannerConfig(seed=0), budget_fraction=0.3,
                       method="model"),
         cloud=CloudNode(query_names=("AVG", "VAR")),
@@ -82,9 +84,9 @@ def test_streaming_zero_latency_matches_lockstep_bitwise(drop_prob):
 
 
 def _lockstep_fleet_reference(topo, ctrl, cfg, wins):
-    """The pre-async FleetExperiment.run loop, verbatim, driven through the
+    """The pre-async fleet loop, verbatim, driven through the
     unchanged plain Transport/CloudNode primitives."""
-    exp = FleetExperiment(topology=topo, controller=ctrl, cfg=cfg,
+    exp = FleetRuntime(topology=topo, controller=ctrl, cfg=cfg,
                           query_names=("AVG",))
     from repro.core.reconstruct import reconstruct_window
     sites = topo.sites
@@ -138,7 +140,7 @@ def test_fleet_zero_latency_matches_lockstep_bitwise():
 
     ref_fleet, ref_site, ref_bytes = _lockstep_fleet_reference(
         topo(), ctrl(), cfg, wins)
-    exp = FleetExperiment(topology=topo(), controller=ctrl(), cfg=cfg,
+    exp = FleetRuntime(topology=topo(), controller=ctrl(), cfg=cfg,
                           query_names=("AVG",))
     r = exp.run(wins)
     assert r["fleet_nrmse"]["AVG"] == ref_fleet
@@ -152,9 +154,8 @@ def test_fleet_zero_latency_matches_lockstep_bitwise():
 
 def test_late_within_deadline_revises_retroactively():
     vals, _ = smartcity_like(1024, seed=2)
-    from repro.streaming import run_experiment
-    r0 = run_experiment(vals, 256, 0.3, "model", query_names=("AVG",))
-    r_late = run_experiment(vals, 256, 0.3, "model", query_names=("AVG",),
+    r0 = run_matrix(vals, 256, 0.3, "model", query_names=("AVG",))
+    r_late = run_matrix(vals, 256, 0.3, "model", query_names=("AVG",),
                             latency_ms=1500.0)       # 1.5 x period, inf deadline
     assert r_late["revisions"] >= 1
     assert r_late["revised_windows"].any()
@@ -205,8 +206,7 @@ def test_streaming_past_deadline_end_to_end():
     the first horizon is late-dropped and the at-query table equals the
     final table (nothing is ever revised)."""
     vals, _ = smartcity_like(1024, seed=3)
-    from repro.streaming import run_experiment
-    r = run_experiment(vals, 256, 0.3, "model", query_names=("AVG",),
+    r = run_matrix(vals, 256, 0.3, "model", query_names=("AVG",),
                        latency_ms=1200.0, staleness_deadline_ms=100.0)
     T = 1024 // 256
     assert r["late_drops"] == T
@@ -217,11 +217,11 @@ def test_streaming_past_deadline_end_to_end():
 
 
 def test_upgraded_cloud_mirrors_counters_to_caller_object():
-    """StreamingExperiment upgrades a plain CloudNode internally; the
+    """SingleEdgeRuntime upgrades a plain CloudNode internally; the
     caller's object still sees the fault counters after the run."""
     vals, _ = turbine_like(512, seed=7, k=4)
     cloud = CloudNode(query_names=("AVG",))
-    exp = StreamingExperiment(
+    exp = SingleEdgeRuntime(
         edge=EdgeNode(cfg=PlannerConfig(seed=0), budget_fraction=0.3,
                       method="model"),
         cloud=cloud,
@@ -279,10 +279,9 @@ def test_jitter_rng_does_not_perturb_drop_sequence():
 
 def test_streaming_run_deterministic_under_jitter():
     vals, _ = smartcity_like(1024, seed=4)
-    from repro.streaming import run_experiment
 
     def once():
-        return run_experiment(vals, 256, 0.3, "model", query_names=("AVG",),
+        return run_matrix(vals, 256, 0.3, "model", query_names=("AVG",),
                               latency_ms=800.0, jitter_ms=600.0,
                               cfg=PlannerConfig(seed=9))
 
@@ -308,7 +307,7 @@ def test_fleet_heterogeneous_latency_revises_and_reports_freshness():
         topo = make_topology(R, E // R, k, seed=6,
                              latency_scale=latency_scale)
         ctrl = BudgetController(total_budget=0.3 * E * k * W, n_sites=E)
-        exp = FleetExperiment(topology=topo, controller=ctrl, cfg=cfg,
+        exp = FleetRuntime(topology=topo, controller=ctrl, cfg=cfg,
                               query_names=("AVG",), window_period_ms=period)
         return exp.run(wins)
 

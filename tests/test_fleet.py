@@ -8,8 +8,9 @@ import pytest
 from repro.core import stats as S
 from repro.core.types import PlannerConfig
 from repro.data import fleet_like, fleet_windows
-from repro.fleet import (BudgetController, FleetExperiment, fleet_plan,
-                         host_loop_plan, make_topology, water_fill)
+from repro.api.experiment import FleetRuntime
+from repro.fleet import (BudgetController, fleet_plan, host_loop_plan,
+                         make_topology, water_fill)
 from repro.kernels.stream_stats.ops import fleet_window_moments_xxt
 from repro.kernels.stream_stats.ref import stream_stats_ref
 
@@ -193,7 +194,7 @@ def test_fleet_experiment_e64_end_to_end():
     vals, _ = fleet_like(E, R, k, n_points=128, seed=0)
     topo = make_topology(R, E // R, k, seed=0)
     ctrl = BudgetController(total_budget=0.25 * E * k * W, n_sites=E)
-    exp = FleetExperiment(topology=topo, controller=ctrl,
+    exp = FleetRuntime(topology=topo, controller=ctrl,
                           cfg=PlannerConfig(solver="closed_form"))
     r = exp.run(fleet_windows(vals, W))
     assert r["plan_windows"] == 2
@@ -211,7 +212,7 @@ def test_fleet_experiment_with_faults():
     vals, _ = fleet_like(E, R, k, n_points=256, seed=1)
     topo = make_topology(R, E // R, k, seed=1, drop_prob=0.5)
     ctrl = BudgetController(total_budget=0.3 * E * k * W, n_sites=E)
-    exp = FleetExperiment(topology=topo, controller=ctrl,
+    exp = FleetRuntime(topology=topo, controller=ctrl,
                           cfg=PlannerConfig(solver="closed_form"),
                           straggler_drop=lambda wid, s, i: (s == 2 and i == 1))
     r = exp.run(fleet_windows(vals, W))

@@ -3,12 +3,12 @@ import numpy as np
 
 from repro.core.types import PlannerConfig
 from repro.data import smartcity_like, turbine_like
-from repro.streaming import run_experiment
+from conftest import run_matrix
 
 
 def test_experiment_end_to_end():
     vals, _ = smartcity_like(768, seed=1)
-    r = run_experiment(vals, 256, 0.3, "model")
+    r = run_matrix(vals, 256, 0.3, "model")
     assert r["wan_bytes"] < r["full_bytes"]
     assert np.isfinite(np.nanmean(r["nrmse"]["AVG"]))
     assert r["gaps"] == 0
@@ -16,7 +16,7 @@ def test_experiment_end_to_end():
 
 def test_payload_drop_served_stale():
     vals, _ = smartcity_like(1024, seed=2)
-    r = run_experiment(vals, 256, 0.3, "model", drop_prob=0.5)
+    r = run_matrix(vals, 256, 0.3, "model", drop_prob=0.5)
     assert r["gaps"] > 0
     # estimates still produced (stale reconstructions)
     assert np.isfinite(np.nanmean(r["nrmse"]["AVG"]))
@@ -30,7 +30,7 @@ def test_straggler_covered_by_imputation():
     def straggler(wid, i):
         return i == 1          # stream 1 never arrives
 
-    r = run_experiment(vals, 256, 0.4, "model", straggler_drop=straggler,
+    r = run_matrix(vals, 256, 0.4, "model", straggler_drop=straggler,
                        query_names=("AVG",))
     # other streams unaffected; straggler stream may degrade but stays finite
     errs = r["nrmse"]["AVG"]
@@ -41,8 +41,8 @@ def test_straggler_covered_by_imputation():
 def test_wan_reduction_vs_baseline():
     """The paper's headline: comparable error with less WAN traffic."""
     vals, _ = turbine_like(2048, seed=4, k=6)
-    r_model = run_experiment(vals, 256, 0.25, "model", query_names=("AVG",))
-    r_base = run_experiment(vals, 256, 0.25, "approx_iot",
+    r_model = run_matrix(vals, 256, 0.25, "model", query_names=("AVG",))
+    r_base = run_matrix(vals, 256, 0.25, "approx_iot",
                             query_names=("AVG",))
     assert r_model["wan_bytes"] <= r_base["wan_bytes"] * 1.05
     assert np.nanmean(r_model["nrmse"]["AVG"]) < \

@@ -2,12 +2,13 @@
 through planner imputation, and CloudNode gap accounting."""
 import numpy as np
 
+from conftest import run_matrix
+from repro.api.experiment import SingleEdgeRuntime
 from repro.core.planner import plan_window
 from repro.core.types import PlannerConfig, WindowBatch
 from repro.data import turbine_like
 from repro.data.streams import windows_from_matrix
-from repro.streaming import CloudNode, EdgeNode, StreamingExperiment, Transport
-from repro.streaming.runtime import run_experiment
+from repro.streaming import CloudNode, EdgeNode, Transport
 
 
 def _one_payload(seed=0, k=5, window=128):
@@ -78,8 +79,8 @@ def test_straggler_full_run_gaps_stay_zero():
     window ships (with n_real=0 for that stream) and the sequence stays
     contiguous; NRMSE stays finite for the healthy streams."""
     vals, _ = turbine_like(512, seed=5, k=5)
-    r = run_experiment(vals, 128, 0.3, "model",
-                       straggler_drop=lambda wid, i: i == 1)
+    r = run_matrix(vals, 128, 0.3, "model",
+                   straggler_drop=lambda wid, i: i == 1)
     assert r["gaps"] == 0
     healthy = np.asarray(r["nrmse"]["AVG"])[[0, 2, 3, 4]]
     assert np.isfinite(healthy).all()
@@ -87,7 +88,7 @@ def test_straggler_full_run_gaps_stay_zero():
 
 def test_drop_prob_end_to_end_gaps_counted():
     vals, _ = turbine_like(1024, seed=6, k=4)
-    exp = StreamingExperiment(
+    exp = SingleEdgeRuntime(
         edge=EdgeNode(cfg=PlannerConfig(seed=0), budget_fraction=0.3,
                       method="model"),
         cloud=CloudNode(query_names=("AVG",)),

@@ -12,7 +12,7 @@ import pytest
 
 from repro.core.types import PlannerConfig
 from repro.data import turbine_like
-from repro.streaming import run_experiment
+from conftest import run_matrix
 
 
 @pytest.fixture(scope="module")
@@ -24,7 +24,7 @@ def turbine():
 def _sweep(vals, method, fracs, **kw):
     out = {}
     for f in fracs:
-        r = run_experiment(vals, 256, f, method,
+        r = run_matrix(vals, 256, f, method,
                            cfg=PlannerConfig(seed=1), **kw)
         out[f] = (np.nanmean(r["nrmse"]["AVG"]), r["wan_bytes"],
                   np.nanmean(r["nrmse"]["VAR"]))
