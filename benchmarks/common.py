@@ -10,13 +10,17 @@ registry-coverage check keys off these files).
 """
 from __future__ import annotations
 
+import json
 import time
+from pathlib import Path
 
 import numpy as np
 
 from repro.api import (ControllerSpec, DataSpec, Experiment, RunReport,
                        ScenarioConfig, TopologySpec, TransportSpec)
 from repro.core.types import PlannerConfig
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
 
 
 def timed(fn, *args, **kw):
@@ -68,6 +72,69 @@ def fmt(v):
     if isinstance(v, float):
         return f"{v:.4g}"
     return str(v)
+
+
+# --------------------------------------------------------------------------
+# tracked perf artifacts (BENCH_*.json at the repo root)
+# --------------------------------------------------------------------------
+# One stable, diffable schema so the perf trajectory is reviewable across
+# PRs.  ``rows`` is a flat list of per-configuration measurements; the
+# required keys below are the contract CI validates (scripts/ci.sh runs
+# ``throughput_bench.py --smoke`` which calls validate_bench_json).
+
+BENCH_SCHEMA_VERSION = 1
+
+BENCH_TOP_FIELDS = ("schema_version", "benchmark", "device", "rows")
+BENCH_ROW_FIELDS = ("scenario", "engine", "n_sites", "n_windows",
+                    "windows_per_sec", "streams_per_sec", "wan_bytes",
+                    "nrmse_avg")
+
+
+def validate_bench_json(payload: dict) -> None:
+    """Raise ValueError if ``payload`` violates the bench artifact schema."""
+    for f in BENCH_TOP_FIELDS:
+        if f not in payload:
+            raise ValueError(f"bench artifact missing top-level field {f!r}")
+    if payload["schema_version"] != BENCH_SCHEMA_VERSION:
+        raise ValueError(
+            f"bench artifact schema_version {payload['schema_version']!r} "
+            f"!= {BENCH_SCHEMA_VERSION}")
+    if not isinstance(payload["rows"], list) or not payload["rows"]:
+        raise ValueError("bench artifact needs a non-empty 'rows' list")
+    for i, row in enumerate(payload["rows"]):
+        for f in BENCH_ROW_FIELDS:
+            if f not in row:
+                raise ValueError(f"bench row {i} missing field {f!r}")
+        for f in ("n_sites", "n_windows", "windows_per_sec",
+                  "streams_per_sec", "wan_bytes", "nrmse_avg"):
+            if not isinstance(row[f], (int, float)) or not np.isfinite(row[f]):
+                raise ValueError(
+                    f"bench row {i} field {f!r} must be finite numeric, "
+                    f"got {row[f]!r}")
+
+
+def write_bench_json(path, rows: list[dict],
+                     benchmark: str = "throughput") -> dict:
+    """Validate and write one BENCH_*.json perf artifact (sorted, indented
+    — stable text for clean diffs).  Returns the payload written."""
+    import jax
+    payload = {
+        "schema_version": BENCH_SCHEMA_VERSION,
+        "benchmark": benchmark,
+        "device": jax.devices()[0].platform,
+        "rows": rows,
+    }
+    validate_bench_json(payload)
+    Path(path).write_text(json.dumps(payload, indent=2, sort_keys=True)
+                          + "\n")
+    return payload
+
+
+def read_bench_json(path) -> dict:
+    """Load + schema-validate an existing bench artifact."""
+    payload = json.loads(Path(path).read_text())
+    validate_bench_json(payload)
+    return payload
 
 
 # --------------------------------------------------------------------------

@@ -19,7 +19,7 @@ MODULES = [
     "fig3_heuristic", "fig4_turbine", "fig5_smartcity", "fig6_latency",
     "fig7_bias", "fig8_correlation", "fig9_iid", "fig10_models",
     "fig11_costs", "fig12_multi_predictor", "kernel_bench",
-    "fleet_bench", "roofline_report", "grad_exchange",
+    "fleet_bench", "roofline_report", "grad_exchange", "throughput_bench",
 ]
 
 

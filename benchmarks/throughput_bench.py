@@ -1,0 +1,141 @@
+"""On-device streaming throughput: scan runtime vs event loop.
+
+Measures end-to-end windows/sec of the ``repro.runtime`` scan engine at
+fleet sizes E in {16, 64, 256} over 1000 windows, against the event-driven
+``FleetRuntime`` on the identical scenario (zero-latency links, rebalance
+controller, batched closed-form planning).  Both paths run the same jitted
+fleet planner; the delta is the runtime harness — the scan engine keeps the
+whole loop (controller EWMAs, per-site budgets, sampling, query tables) on
+device under one ``lax.scan`` with a donated carry, while the event loop
+crosses the host boundary every window and walks sites in Python.
+
+Results land in ``BENCH_throughput.json`` at the repo root (schema in
+benchmarks/common.py: one row per (scenario, engine) with windows/sec,
+streams/sec, WAN bytes and mean AVG-NRMSE) — the tracked perf trajectory.
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/throughput_bench.py            # refresh
+    PYTHONPATH=src python benchmarks/throughput_bench.py --smoke    # CI gate
+
+``--smoke`` never rewrites the artifact: it validates the committed JSON
+against the schema and runs a miniature E=4 scan to prove the path executes.
+"""
+from __future__ import annotations
+
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+if __package__ in (None, ""):                       # `python benchmarks/...`
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from benchmarks.common import (REPO_ROOT, fmt, read_bench_json, timed,
+                               write_bench_json)
+from repro.api import (ControllerSpec, DataSpec, Experiment, ScenarioConfig,
+                       TopologySpec)
+from repro.core.types import PlannerConfig
+
+BENCH_PATH = REPO_ROOT / "BENCH_throughput.json"
+
+K = 4                    # streams per site
+WINDOW = 128             # tuples per stream per window
+POOL = 8                 # distinct generated windows; the scan cycles them
+FLEET_SIZES = (16, 64, 256)
+SCAN_WINDOWS = 1000
+# the event loop is host-bound: a handful of windows gives a stable
+# per-window cost without minutes of wall time at E=256
+EVENT_WINDOWS = {16: 16, 64: 8, 256: 4}
+
+
+def _scenario(E: int, runtime: str) -> ScenarioConfig:
+    return ScenarioConfig(
+        name=f"throughput/E{E}",
+        data=DataSpec(dataset="fleet", n_points=POOL * WINDOW, window=WINDOW,
+                      seed=0, options={"k": K}),
+        planner=PlannerConfig(solver="closed_form", dependence="pearson",
+                              seed=0),
+        topology=TopologySpec(n_regions=4, sites_per_region=E // 4, seed=0,
+                              latency_scale=0.0),
+        controller=ControllerSpec(mode="rebalance"),
+        queries=("AVG", "VAR"),
+        runtime=runtime)
+
+
+def _measure_scan(E: int, n_windows: int) -> dict:
+    exp = Experiment.from_scenario(_scenario(E, "scan"))
+    exp.runtime.collect = "estimates"    # device-only tables; no host replay
+    windows = exp.make_windows()
+    exp.runtime.run(windows, n_windows=n_windows)        # compile + warm
+    r = exp.runtime.run(windows, n_windows=n_windows)    # steady-state
+    return {"scenario": f"throughput/E{E}", "engine": "scan",
+            "n_sites": E, "n_windows": n_windows,
+            "windows_per_sec": float(r["windows_per_sec"]),
+            "streams_per_sec": float(r["windows_per_sec"]) * E * K,
+            "wan_bytes": int(r["wan_bytes"]),
+            "nrmse_avg": float(r["fleet_nrmse"]["AVG"])}
+
+
+def _measure_event(E: int, n_windows: int) -> dict:
+    sc = _scenario(E, "event")
+    windows = Experiment.from_scenario(sc).make_windows()[:n_windows]
+    Experiment.from_scenario(sc).run(windows[:2])        # warm the planner
+    exp = Experiment.from_scenario(sc)                   # fresh state
+    t0 = time.perf_counter()
+    rep = exp.run(windows)
+    wall = time.perf_counter() - t0
+    wps = n_windows / max(wall, 1e-9)
+    return {"scenario": f"throughput/E{E}", "engine": "event",
+            "n_sites": E, "n_windows": n_windows,
+            "windows_per_sec": wps, "streams_per_sec": wps * E * K,
+            "wan_bytes": int(rep.wan_bytes),
+            "nrmse_avg": float(rep.nrmse["AVG"])}
+
+
+def run() -> list[tuple[str, float, str]]:
+    """Full bench: measure, refresh BENCH_throughput.json, return CSV rows."""
+    csv_rows, bench_rows, speedups = [], [], {}
+    for E in FLEET_SIZES:
+        scan, t_scan = timed(_measure_scan, E, SCAN_WINDOWS)
+        event, t_event = timed(_measure_event, E, EVENT_WINDOWS[E])
+        speedups[E] = scan["windows_per_sec"] / event["windows_per_sec"]
+        bench_rows += [scan, event]
+        csv_rows.append((f"throughput/E{E}/scan", t_scan,
+                         f"{fmt(scan['windows_per_sec'])} win/s "
+                         f"({fmt(speedups[E])}x event)"))
+        csv_rows.append((f"throughput/E{E}/event", t_event,
+                         f"{fmt(event['windows_per_sec'])} win/s"))
+    write_bench_json(BENCH_PATH, bench_rows)
+    best = max(speedups.values())
+    assert best >= 10.0, (
+        f"scan runtime must reach >=10x the event loop at some fleet size; "
+        f"got {sorted(speedups.items())}")
+    return csv_rows
+
+
+def run_smoke() -> list[tuple[str, float, str]]:
+    """CI gate: schema-validate the committed artifact + a tiny live scan."""
+    payload = read_bench_json(BENCH_PATH)
+    engines = {r["engine"] for r in payload["rows"]}
+    assert engines == {"scan", "event"}, engines
+    mini, us = timed(_measure_scan, 4, 32)
+    assert np.isfinite(mini["nrmse_avg"]), mini
+    assert mini["wan_bytes"] > 0, mini
+    return [("throughput/smoke", us,
+             f"artifact ok ({len(payload['rows'])} rows), "
+             f"E=4 scan {fmt(mini['windows_per_sec'])} win/s")]
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    rows = run_smoke() if "--smoke" in argv else run()
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -109,6 +109,12 @@ XLA_FLAGS="--xla_force_host_platform_device_count=8" \
 echo "== scenario-API smoke (benchmarks/run.py --smoke, incl. batched/sharded engines) =="
 python -m benchmarks.run --smoke
 
+echo "== throughput smoke (scan runtime + tracked BENCH_throughput.json) =="
+# schema-validates the committed perf artifact and runs a miniature E=4
+# scan so the on-device runtime path stays green without paying for the
+# full E=256 x 1000-window bench
+python benchmarks/throughput_bench.py --smoke
+
 echo "== fleet smoke (small E, interpret-mode kernels) =="
 python - <<'PY'
 import numpy as np

@@ -35,6 +35,7 @@ _LAZY = {
     "RunReport": "repro.api.experiment",
     "SingleEdgeRuntime": "repro.api.experiment",
     "FleetRuntime": "repro.api.experiment",
+    "ScanRuntime": "repro.runtime.scan",
 }
 
 __all__ = ["Registry", "UnknownComponentError", "ALL_REGISTRIES",

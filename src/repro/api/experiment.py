@@ -182,20 +182,26 @@ class FleetRuntime:
     query_names: tuple = ("AVG", "VAR")
     window_period_ms: float = 1000.0   # virtual tumbling-window cadence
     staleness_deadline_ms: float = float("inf")
+    sampling: str = "host"             # "host" | "device" (scan-parity RNG)
 
     def __post_init__(self):
         from repro.planning import ENGINES
         from repro.streaming.events import AsyncTransport, ReorderCloudNode
+        if self.sampling not in ("host", "device"):
+            raise ValueError(f"sampling must be 'host' or 'device', got "
+                             f"{self.sampling!r}")
         sites = self.topology.sites
         self.engine = ENGINES.get(self.planning or self.cfg.engine
                                   or "batched")
         self.engine.check(self.cfg)      # fail at construction, not mid-run
-        self.transports = [AsyncTransport(drop_prob=s.link.drop_prob,
-                                          seed=self.cfg.seed + s.site_id,
-                                          cost_per_byte=s.link.cost_per_byte,
-                                          latency_ms=s.link.latency_ms,
-                                          jitter_ms=s.link.jitter_ms)
-                           for s in sites]
+        self.transports = [AsyncTransport(
+            drop_prob=s.link.drop_prob,
+            seed=self.cfg.seed + s.site_id,
+            cost_per_byte=s.link.cost_per_byte,
+            latency_ms=s.link.latency_ms,
+            jitter_ms=s.link.jitter_ms,
+            bandwidth_bytes_per_ms=s.link.bandwidth_bytes_per_ms)
+            for s in sites]
         self.clouds = [ReorderCloudNode(query_names=self.query_names,
                                         window_period_ms=self.window_period_ms,
                                         deadline_ms=self.staleness_deadline_ms)
@@ -218,12 +224,19 @@ class FleetRuntime:
         return out
 
     def _payload(self, plan: dict, s: int, wid: int, values: np.ndarray,
-                 counts: np.ndarray) -> EdgePayload:
+                 counts: np.ndarray,
+                 samples: Optional[np.ndarray] = None) -> EdgePayload:
         if "payloads" in plan:           # the host engine drew them already
             return plan["payloads"][s]
         from repro.api.registry import MODELS
         from repro.planning import assemble_payload
-        real = _draw_real_np(self._rng, values, counts, plan["n_real"][s])
+        if samples is not None:          # device sampling (scan-parity RNG)
+            real = [samples[i, :int(min(int(plan["n_real"][s][i]),
+                                        int(counts[i])))]
+                    for i in range(len(counts))]
+        else:
+            real = _draw_real_np(self._rng, values, counts,
+                                 plan["n_real"][s])
         return assemble_payload(MODELS.get(self.cfg.model), plan, s, wid,
                                 real)
 
@@ -240,10 +253,8 @@ class FleetRuntime:
         (``freshness_ms``, ``site_arrival_lag_ms``) instead of being a dead
         accounting field.
         """
-        from repro.streaming.events import freshness_percentiles
         E, k, n = fleet_windows[0].shape
         T = len(fleet_windows)
-        reg_idx = self.topology.region_of()
         qnames = self.query_names
         period = self.window_period_ms
         est = {q: np.full((T, E, k), np.nan) for q in qnames}    # revised
@@ -276,10 +287,22 @@ class FleetRuntime:
             budget_history.append(budgets)
             plan = self._plan(wid, w, counts, budgets)
 
+            fleet_samples = None
+            if self.sampling == "device" and "payloads" not in plan:
+                # one jitted dispatch for the whole fleet, drawing from the
+                # exact RNG streams the scan runtime consumes
+                from repro.runtime.step import draw_fleet_samples
+                fleet_samples = draw_fleet_samples(self.cfg.seed, wid, w,
+                                                   plan["n_real"])
+            split_on = self.controller.query_split is not None
             obs_err = np.zeros(E)
+            obs_err_tail = np.zeros(E) if split_on else None
             lag_obs = np.full(E, np.nan)
             for s in range(E):
-                payload = self._payload(plan, s, wid, w[s], counts[s])
+                payload = self._payload(
+                    plan, s, wid, w[s], counts[s],
+                    samples=(None if fleet_samples is None
+                             else fleet_samples[s]))
                 payload = dataclasses.replace(payload, sent_at_ms=now)
                 self.transports[s].send(payload, now_ms=now)
                 lags = []
@@ -307,9 +330,19 @@ class FleetRuntime:
                                      for r in edge_rec])
                 obs_err[s] = np.nanmean(np.abs(e_mean - t_mean)
                                         / np.maximum(np.abs(t_mean), 1e-6))
+                if split_on:
+                    # tail-query proxy (VAR/MAX) for the split tranche
+                    errs = []
+                    for qfn in (Q.QUERIES["VAR"], Q.QUERIES["MAX"]):
+                        t_q = np.asarray([qfn(w[s, i]) for i in range(k)])
+                        e_q = np.asarray([qfn(r) for r in edge_rec])
+                        errs.append(np.abs(e_q - t_q)
+                                    / np.maximum(np.abs(t_q), 1e-6))
+                    obs_err_tail[s] = np.nanmean(np.concatenate(errs))
             self.controller.update(obs_err, plan["r2"],
                                    objective=plan.get("objective"),
-                                   arrival_lag=lag_obs)
+                                   arrival_lag=lag_obs,
+                                   obs_err_tail=obs_err_tail)
 
         # drain in-flight payloads: late revisions and gap accounting
         for s in range(E):
@@ -318,59 +351,24 @@ class FleetRuntime:
                                                       now_ms=ev.at_ms))
             self.clouds[s].finalize(T)
 
-        # ------------------------------------------------- aggregate errors
-        nrmse_site = {}                         # {q: (E, k)}
-        nrmse_site_q = {}
-        for q in qnames:
-            e_arr = est[q].transpose(1, 2, 0)   # (E, k, T)
-            eq_arr = est_q[q].transpose(1, 2, 0)
-            t_arr = tru[q].transpose(1, 2, 0)
-            nrmse_site[q] = np.asarray(
-                [Q.nrmse_table(e_arr[s], t_arr[s]) for s in range(E)])
-            nrmse_site_q[q] = np.asarray(
-                [Q.nrmse_table(eq_arr[s], t_arr[s]) for s in range(E)])
-
-        region_nrmse = {name: {} for name in self.topology.region_names}
-        for r, name in enumerate(self.topology.region_names):
-            sel = reg_idx == r
-            for q in qnames:
-                region_nrmse[name][q] = float(np.nanmean(nrmse_site[q][sel]))
-
-        bytes_by_region = {name: 0 for name in self.topology.region_names}
-        cost_by_region = {name: 0.0 for name in self.topology.region_names}
-        for s, site in enumerate(self.topology.sites):
-            bytes_by_region[site.region] += self.transports[s].bytes_sent
-            cost_by_region[site.region] += self.transports[s].bytes_cost
-        total_tuples = T * E * k * n
-
-        freshness_by_region = {
-            name: freshness_percentiles(ages[:, reg_idx == r])
-            for r, name in enumerate(self.topology.region_names)}
-
-        return {
-            "fleet_nrmse": {q: float(np.nanmean(nrmse_site[q]))
-                            for q in qnames},
-            "fleet_nrmse_at_query": {q: float(np.nanmean(nrmse_site_q[q]))
-                                     for q in qnames},
-            "region_nrmse": region_nrmse,
-            "site_nrmse": nrmse_site,
-            "wan_bytes": int(sum(t.bytes_sent for t in self.transports)),
-            "wan_bytes_by_region": bytes_by_region,
-            "wan_cost": float(sum(t.bytes_cost for t in self.transports)),
-            "wan_cost_by_region": cost_by_region,
-            "full_bytes": total_tuples * 4,
-            "gaps": int(sum(c.gaps for c in self.clouds)),
-            "revisions": int(sum(c.revisions for c in self.clouds)),
-            "late_drops": int(sum(c.late_drops for c in self.clouds)),
-            "duplicates": int(sum(c.duplicates for c in self.clouds)),
-            "freshness_ms": freshness_percentiles(ages),
-            "freshness_by_region": freshness_by_region,
-            "window_age_ms": ages,
-            "site_arrival_lag_ms": self.controller.arrival_lag_ms,
-            "plan_seconds": self.plan_seconds,
-            "plan_windows": self.plan_windows,
-            "budget_history": np.asarray(budget_history),
-        }
+        # aggregate errors/bytes/freshness through the shared roll-up the
+        # scan runtime also reports through (repro.runtime.report)
+        from repro.runtime.report import aggregate_fleet
+        return aggregate_fleet(
+            topology=self.topology, qnames=qnames,
+            est=est, est_q=est_q, tru=tru, ages=ages,
+            bytes_per_site=np.asarray([t.bytes_sent
+                                       for t in self.transports], np.int64),
+            cost_per_site=np.asarray([t.bytes_cost
+                                      for t in self.transports]),
+            gaps=sum(c.gaps for c in self.clouds),
+            revisions=sum(c.revisions for c in self.clouds),
+            late_drops=sum(c.late_drops for c in self.clouds),
+            duplicates=sum(c.duplicates for c in self.clouds),
+            arrival_lag_ms=self.controller.arrival_lag_ms,
+            plan_seconds=self.plan_seconds, plan_windows=self.plan_windows,
+            budget_history=np.asarray(budget_history),
+            total_tuples=T * E * k * n)
 
 
 # ==========================================================================
@@ -511,6 +509,19 @@ class Experiment:
         from repro.streaming.events import AsyncTransport
         from repro.streaming.runtime import CloudNode, EdgeNode
         tspec = scenario.transport
+        if scenario.runtime in ("scan", "scan_steps"):
+            from repro.runtime.scan import ScanRuntime
+            if straggler_drop is not None:
+                raise ValueError("runtime='scan' plans full windows only; "
+                                 "straggler_drop needs runtime='event'")
+            if planning is not None:
+                scenario = dataclasses.replace(
+                    scenario, planner=dataclasses.replace(scenario.planner,
+                                                          engine=planning))
+            runtime = ScanRuntime.from_scenario(scenario,
+                                                use_kernel=use_kernel,
+                                                interpret=interpret)
+            return cls(scenario=scenario, runtime=runtime)
         if scenario.is_fleet:
             topo = scenario.topology.build(cls._fleet_k(scenario))
             controller = cls._build_controller(scenario, topo)
@@ -530,10 +541,12 @@ class Experiment:
         # describes the uplink directly.
         drop, cost, lat, jit = (tspec.drop_prob, 1.0, tspec.latency_ms,
                                 tspec.jitter_ms)
+        bandwidth = tspec.bandwidth_bytes_per_ms
         if scenario.topology is not None:
             link = scenario.topology.build(1).sites[0].link
             drop, cost, lat, jit = (link.drop_prob, link.cost_per_byte,
                                     link.latency_ms, link.jitter_ms)
+            bandwidth = link.bandwidth_bytes_per_ms
         runtime = SingleEdgeRuntime(
             edge=EdgeNode(cfg=scenario.planner,
                           budget_fraction=scenario.budget_fraction,
@@ -542,7 +555,8 @@ class Experiment:
             cloud=CloudNode(query_names=tuple(scenario.queries)),
             transport=AsyncTransport(drop_prob=drop, seed=scenario.planner.seed,
                                      cost_per_byte=cost, latency_ms=lat,
-                                     jitter_ms=jit),
+                                     jitter_ms=jit,
+                                     bandwidth_bytes_per_ms=bandwidth),
             window_period_ms=tspec.window_period_ms,
             staleness_deadline_ms=tspec.staleness_deadline_ms)
         return cls(scenario=scenario, runtime=runtime)
@@ -566,7 +580,9 @@ class Experiment:
             ewma=spec.ewma,
             link_cost=link_cost if spec.link_cost_aware else None,
             cost_aware=spec.link_cost_aware,
-            demand_signal=spec.demand_signal)
+            demand_signal=spec.demand_signal,
+            query_split=spec.query_split,
+            tail_demand_signal=spec.tail_demand_signal)
 
     def make_windows(self):
         """Materialize the scenario's window sequence (deterministic)."""
@@ -593,4 +609,8 @@ class Experiment:
         if isinstance(self.runtime, FleetRuntime):
             return _report_fleet(self.scenario, r,
                                  self.runtime.topology.n_sites)
+        if getattr(self.runtime, "is_scan", False):
+            if self.runtime.n_sites > 1:
+                return _report_fleet(self.scenario, r, self.runtime.n_sites)
+            return _report_single(self.scenario, r)
         return _report_single(self.scenario, r)

@@ -115,6 +115,7 @@ class Registry:
 #   DEMAND_SIGNALS    repro.fleet.controller (obs_err | pred_err | max_err)
 #   ENGINES           repro.planning.engine  (host/host_loop | batched |
 #                                             sharded)
+#   RUNTIMES          repro.runtime          (event | scan | scan_steps)
 # --------------------------------------------------------------------------
 
 SOLVERS = Registry("solver")
@@ -128,6 +129,7 @@ DATASETS = Registry("dataset")
 IID_MODES = Registry("iid mode")
 DEMAND_SIGNALS = Registry("controller demand signal")
 ENGINES = Registry("plan engine")
+RUNTIMES = Registry("runtime")
 
 ALL_REGISTRIES: dict[str, Registry] = {
     "solvers": SOLVERS,
@@ -141,6 +143,7 @@ ALL_REGISTRIES: dict[str, Registry] = {
     "iid_modes": IID_MODES,
     "demand_signals": DEMAND_SIGNALS,
     "engines": ENGINES,
+    "runtimes": RUNTIMES,
 }
 
 
@@ -156,4 +159,5 @@ def populate() -> dict[str, Registry]:
     import repro.data.streams       # noqa: F401
     import repro.fleet.controller   # noqa: F401  (demand signals)
     import repro.planning           # noqa: F401  (plan engines)
+    import repro.runtime            # noqa: F401  (runtime choices)
     return ALL_REGISTRIES

@@ -97,6 +97,7 @@ class TopologySpec:
     hetero_links: bool = True
     latency_scale: float = 1.0
     jitter_ms: float = 0.0
+    bandwidth_bytes_per_ms: Optional[float] = None   # None = instantaneous
 
     @property
     def n_sites(self) -> int:
@@ -108,7 +109,8 @@ class TopologySpec:
                              seed=self.seed, drop_prob=self.drop_prob,
                              hetero_links=self.hetero_links,
                              latency_scale=self.latency_scale,
-                             jitter_ms=self.jitter_ms)
+                             jitter_ms=self.jitter_ms,
+                             bandwidth_bytes_per_ms=self.bandwidth_bytes_per_ms)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -118,6 +120,10 @@ class TransportSpec:
     ``drop_prob``/``latency_ms``/``jitter_ms`` configure the single-edge
     uplink; fleet links come from the topology instead.  ``None`` deadline
     means infinite (late payloads always revise).
+    ``bandwidth_bytes_per_ms`` adds per-payload serialization delay
+    (``wan_bytes / bandwidth``) on top of the propagation latency; ``None``
+    (the default) keeps transmission instantaneous — bit-for-bit the
+    pre-bandwidth behavior.
     """
 
     drop_prob: float = 0.0
@@ -125,6 +131,7 @@ class TransportSpec:
     jitter_ms: float = 0.0
     window_period_ms: float = 1000.0
     staleness_deadline_ms: Optional[float] = None
+    bandwidth_bytes_per_ms: Optional[float] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -138,6 +145,13 @@ class ControllerSpec:
     observations combine into the tracked demand ("obs_err" | "pred_err" |
     "max_err"), validated against the demand-signal registry here rather
     than deep in the runtime.
+
+    ``query_split`` turns on the per-query budget split: a fraction w of
+    the fleet budget is water-filled against a *tail* demand signal
+    (``tail_demand_signal``, default the pessimistic "max_err" that VAR/MAX
+    queries care about) while the remaining 1-w follows the primary
+    ``demand_signal`` (the AVG-driven default).  ``None`` (default) is
+    bit-for-bit the single-tranche controller.
     """
 
     mode: str = "rebalance"            # "rebalance" | "static"
@@ -146,12 +160,19 @@ class ControllerSpec:
     ewma: float = 0.5
     link_cost_aware: bool = False
     demand_signal: str = "obs_err"
+    query_split: Optional[float] = None     # tail tranche fraction in (0, 1)
+    tail_demand_signal: str = "max_err"
 
     def __post_init__(self):
         if self.mode not in ("rebalance", "static"):
             raise ValueError(f"controller mode must be 'rebalance' or "
                              f"'static', got {self.mode!r}")
         _reg.DEMAND_SIGNALS.get(self.demand_signal)
+        _reg.DEMAND_SIGNALS.get(self.tail_demand_signal)
+        if (self.query_split is not None
+                and not 0.0 < self.query_split < 1.0):
+            raise ValueError(f"query_split must lie in (0, 1), got "
+                             f"{self.query_split!r}")
 
 
 def _valid_method(method: str) -> None:
@@ -176,6 +197,7 @@ class ScenarioConfig:
     controller: Optional[ControllerSpec] = None
     transport: TransportSpec = dataclasses.field(default_factory=TransportSpec)
     queries: tuple = ("AVG", "VAR", "MIN", "MAX")
+    runtime: str = "event"             # RUNTIMES: event | scan | scan_steps
     name: str = ""
 
     def __post_init__(self):
@@ -222,6 +244,10 @@ class ScenarioConfig:
         if engine is not None:
             _reg.ENGINES.get(engine).check(planner)
 
+        # the runtime choice validates the whole scenario against what it
+        # can execute (the scan runtime refuses WAN timing it cannot model)
+        _reg.RUNTIMES.get(self.runtime).check(self)
+
     # ------------------------------------------------------------ derived
     @property
     def is_fleet(self) -> bool:
@@ -240,6 +266,7 @@ class ScenarioConfig:
                            else dataclasses.asdict(self.controller)),
             "transport": dataclasses.asdict(self.transport),
             "queries": list(self.queries),
+            "runtime": self.runtime,
             "name": self.name,
         }
         return d
@@ -264,6 +291,7 @@ class ScenarioConfig:
                         else ControllerSpec(**d["controller"])),
             transport=TransportSpec(**d.get("transport", {})),
             queries=tuple(d.get("queries", ("AVG", "VAR", "MIN", "MAX"))),
+            runtime=d.get("runtime", "event"),
             name=d.get("name", ""),
         )
 

@@ -80,6 +80,29 @@ def pearson_corr(values: Array, counts: Array) -> Array:
     return corr
 
 
+# XLA:CPU lowers sorts to a serial per-row loop, so at fleet scale the rank
+# transform (and the sampler's shuffle) dominates the whole window step.
+# Below this length we rank by counting pairwise comparisons instead: an
+# O(N^2) form that vectorizes across the full (..., N, N) batch and is
+# bitwise the stable double-argsort (ties resolved by position).  Above it
+# the quadratic memory stops paying for itself and we fall back to sorting.
+COUNTING_RANK_MAX_N = 512
+
+
+def ordinal_ranks(keys: Array) -> Array:
+    """Stable-sort ranks along the last axis, sort-free.
+
+    Bitwise ``jnp.argsort(jnp.argsort(keys, axis=-1), axis=-1)``: element
+    i's rank counts the j with ``keys[j] < keys[i]`` plus the earlier j
+    tied with it (stable tie-break by position).
+    """
+    n = keys.shape[-1]
+    lt = (keys[..., :, None] > keys[..., None, :]).sum(-1)
+    tri = jnp.arange(n)[:, None] > jnp.arange(n)[None, :]       # j < i
+    ties = ((keys[..., :, None] == keys[..., None, :]) & tri).sum(-1)
+    return lt + ties
+
+
 def rank_transform(values: Array, counts: Array) -> Array:
     """Per-stream ranks of the valid prefix (invalid slots pushed to the end).
 
@@ -90,8 +113,11 @@ def rank_transform(values: Array, counts: Array) -> Array:
     big = jnp.finfo(values.dtype).max
     m = _mask(values, counts)
     masked = jnp.where(m > 0, values, big)
-    order = jnp.argsort(masked, axis=-1)
-    ranks = jnp.argsort(order, axis=-1).astype(values.dtype)
+    if n_max <= COUNTING_RANK_MAX_N:
+        ranks = ordinal_ranks(masked).astype(values.dtype)
+    else:
+        order = jnp.argsort(masked, axis=-1)
+        ranks = jnp.argsort(order, axis=-1).astype(values.dtype)
     denom = jnp.maximum(counts.astype(values.dtype) - 1.0, 1.0)[:, None]
     return jnp.where(m > 0, ranks / denom, 0.0)
 

@@ -111,10 +111,18 @@ class BudgetController:
     link_cost: Optional[np.ndarray] = None       # (E,) relative $/byte/uplink
     cost_aware: bool = False       # weight demand by link cost (see budgets)
     demand_signal: str = "obs_err"  # DEMAND_SIGNALS registry name
+    query_split: Optional[float] = None    # tail tranche fraction in (0, 1)
+    tail_demand_signal: str = "max_err"    # DEMAND_SIGNALS name for the tail
 
     def __post_init__(self):
         self._signal = DEMAND_SIGNALS.get(self.demand_signal)
+        self._tail_signal = DEMAND_SIGNALS.get(self.tail_demand_signal)
+        if (self.query_split is not None
+                and not 0.0 < self.query_split < 1.0):
+            raise ValueError(f"query_split must lie in (0, 1), got "
+                             f"{self.query_split!r}")
         self._demand = np.ones(self.n_sites)
+        self._demand_tail = np.ones(self.n_sites)
         self._r2 = np.zeros(self.n_sites)
         self._lag = np.zeros(self.n_sites)
         self._lag_seen = np.zeros(self.n_sites, bool)
@@ -158,16 +166,33 @@ class BudgetController:
         else:
             lo = np.minimum(np.full(self.n_sites, self.floor_mult * eq), hi)
             demand = self._demand
+            discount = None
             if self.cost_aware and self.link_cost is not None:
                 c = np.asarray(self.link_cost, np.float64)
                 c = np.maximum(c / max(float(c.mean()), 1e-12), 1e-6)
-                demand = demand / np.sqrt(c)
-            b = water_fill(demand, self.total_budget, lo, hi)
+                discount = np.sqrt(c)
+                demand = demand / discount
+            if self.query_split is None:
+                b = water_fill(demand, self.total_budget, lo, hi)
+            else:
+                # two-tranche split: the tail tranche (fraction w) follows
+                # the tail demand signal, the rest the primary one; each
+                # tranche water-fills its scaled box so the sum respects
+                # [lo, hi] and the fleet total is conserved
+                w = self.query_split
+                tail = self._demand_tail
+                if discount is not None:
+                    tail = tail / discount
+                b = (water_fill(demand, (1 - w) * self.total_budget,
+                                (1 - w) * lo, (1 - w) * hi)
+                     + water_fill(tail, w * self.total_budget,
+                                  w * lo, w * hi))
         self._last_budgets = b
         return b
 
     def update(self, obs_err: np.ndarray, r2: np.ndarray,
-               objective=None, arrival_lag=None) -> None:
+               objective=None, arrival_lag=None,
+               obs_err_tail=None) -> None:
         """Feed one window's per-site observations.
 
         obs_err: (E,) edge-local reconstruction error (any consistent scale).
@@ -180,6 +205,9 @@ class BudgetController:
         arrival_lag: (E,) mean WAN delivery lag (ms) of payloads the cloud
             drained this window; NaN where nothing arrived (the previous
             EWMA is kept).  Tracked as ``arrival_lag_ms`` telemetry.
+        obs_err_tail: (E,) edge-local error of the tail queries (VAR/MAX),
+            feeding the tail tranche when ``query_split`` is set; ``None``
+            falls back to ``obs_err`` through the tail demand signal.
         """
         if arrival_lag is not None:
             lag = np.asarray(arrival_lag, np.float64)
@@ -198,11 +226,18 @@ class BudgetController:
         err = self._signal(np.asarray(obs_err, np.float64), pred_err)
         err = np.nan_to_num(err, nan=1.0)
         demand = np.sqrt(np.maximum(err, 1e-9) * b)     # sqrt(A_s) estimate
+        tail_obs = np.asarray(obs_err if obs_err_tail is None
+                              else obs_err_tail, np.float64)
+        tail_err = np.nan_to_num(self._tail_signal(tail_obs, pred_err),
+                                 nan=1.0)
+        demand_tail = np.sqrt(np.maximum(tail_err, 1e-9) * b)
         a = self.ewma
         r2c = np.clip(np.nan_to_num(np.asarray(r2, np.float64)), 0.0, 1.0)
         if not self._seen:
             self._demand, self._r2 = demand, r2c
+            self._demand_tail = demand_tail
             self._seen = True
         else:
             self._demand = (1 - a) * self._demand + a * demand
+            self._demand_tail = (1 - a) * self._demand_tail + a * demand_tail
             self._r2 = (1 - a) * self._r2 + a * r2c

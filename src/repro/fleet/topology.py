@@ -12,6 +12,7 @@ only ``n_sites``/``k`` and the per-link scalars.
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import numpy as np
 
@@ -24,6 +25,10 @@ class LinkSpec:
     latency_ms: float = 40.0       # one-way propagation latency
     jitter_ms: float = 0.0         # per-payload U(0, jitter) delay on top
     drop_prob: float = 0.0         # per-payload loss probability
+    bandwidth_bytes_per_ms: Optional[float] = None
+    # serialization rate: a payload of B bytes adds B / bandwidth ms to its
+    # delivery time.  None (default) = instantaneous transmission — the
+    # pre-bandwidth behavior, parity-pinned.
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,11 +84,15 @@ class FleetTopology:
 def make_topology(n_regions: int, sites_per_region: int, k: int,
                   seed: int = 0, drop_prob: float = 0.0,
                   hetero_links: bool = True, latency_scale: float = 1.0,
-                  jitter_ms: float = 0.0) -> FleetTopology:
+                  jitter_ms: float = 0.0,
+                  bandwidth_bytes_per_ms: Optional[float] = None
+                  ) -> FleetTopology:
     """Synthetic geo topology: per-region WAN character (distant regions pay
     more per byte and see higher latency), per-site jitter on top.
     ``latency_scale`` scales every link latency (0 => instantaneous WAN);
-    ``jitter_ms`` adds per-payload delivery jitter (async transport)."""
+    ``jitter_ms`` adds per-payload delivery jitter (async transport);
+    ``bandwidth_bytes_per_ms`` sets every link's serialization rate
+    (None = instantaneous transmission)."""
     rng = np.random.default_rng(seed)
     regions = []
     sid = 0
@@ -96,7 +105,8 @@ def make_topology(n_regions: int, sites_per_region: int, k: int,
             link = LinkSpec(cost_per_byte=base_cost * jitter,
                             latency_ms=base_lat * jitter * latency_scale,
                             jitter_ms=jitter_ms,
-                            drop_prob=drop_prob)
+                            drop_prob=drop_prob,
+                            bandwidth_bytes_per_ms=bandwidth_bytes_per_ms)
             sites.append(SiteSpec(site_id=sid, region=f"region{r}", k=k,
                                   link=link))
             sid += 1

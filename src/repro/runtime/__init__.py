@@ -1,0 +1,104 @@
+"""repro.runtime — the on-device streaming runtime (docs/runtime.md).
+
+The event loop in ``repro.api.experiment`` re-enters JAX once per window;
+this package keeps the whole per-window cycle — controller budgets,
+Algorithm-1 planning, SRS sampling, imputation, queries — inside one
+``lax.scan`` with a donated carry (:mod:`repro.runtime.scan`).
+
+Scenarios select it through the RUNTIMES registry defined here:
+
+  * ``"event"``      — the host event loop (default; full WAN semantics).
+  * ``"scan"``       — :class:`~repro.runtime.scan.ScanRuntime`; requires
+    the zero-latency transport envelope it models (checked at
+    ScenarioConfig construction, not mid-run).
+  * ``"scan_steps"`` — the same compiled step driven one window at a
+    time; matches a scan run's discrete trajectory exactly and its float
+    tables to f32 association (the incremental, checkpointable cadence).
+"""
+from __future__ import annotations
+
+from repro.api.registry import ENGINES, MODELS, RUNTIMES
+from repro.runtime.controller import CtrlParams, controller_budgets, \
+    controller_update, water_fill
+from repro.runtime.report import aggregate_fleet
+from repro.runtime.scan import ScanRuntime
+from repro.runtime.state import (ControllerState, RuntimeState, StreamTotals,
+                                 init_state)
+from repro.runtime.step import (SCAN_QUERIES, draw_fleet_samples,
+                                make_window_step, sample_fleet)
+
+__all__ = [
+    "CtrlParams", "ControllerState", "RuntimeState", "StreamTotals",
+    "ScanRuntime", "SCAN_QUERIES", "aggregate_fleet", "controller_budgets",
+    "controller_update", "draw_fleet_samples", "init_state",
+    "make_window_step", "sample_fleet", "water_fill",
+]
+
+
+class _RuntimeChoice:
+    """One RUNTIMES entry: a name plus a scenario-compatibility check."""
+
+    def __init__(self, name: str, scan: bool):
+        self.name = name
+        self.scan = scan
+
+    def check(self, scenario) -> None:
+        if self.scan:
+            check_scan_scenario(scenario)
+
+
+def check_scan_scenario(scenario) -> None:
+    """Reject scenario features the scan runtime cannot honor.
+
+    The scan models a zero-latency, loss-free WAN (its parity guarantee is
+    against the event loop in exactly that envelope), plans through the
+    batched/sharded engines, and answers the on-device query set.
+    """
+    t = scenario.transport
+    if t.latency_ms or t.jitter_ms or t.drop_prob:
+        raise ValueError(
+            "runtime='scan' models a zero-latency WAN; transport "
+            "latency_ms/jitter_ms/drop_prob must be 0 (use runtime='event' "
+            "for WAN timing studies)")
+    if getattr(t, "bandwidth_bytes_per_ms", None) is not None:
+        raise ValueError("runtime='scan' does not model serialization "
+                         "delay; transport.bandwidth_bytes_per_ms must be "
+                         "None")
+    if t.staleness_deadline_ms is not None:
+        raise ValueError("runtime='scan' never produces late payloads; "
+                         "staleness_deadline_ms must be None")
+    topo = scenario.topology
+    if topo is not None:
+        if topo.latency_scale != 0.0 or topo.jitter_ms or topo.drop_prob:
+            raise ValueError(
+                "runtime='scan' needs a zero-latency topology: set "
+                "latency_scale=0, jitter_ms=0, drop_prob=0")
+        if getattr(topo, "bandwidth_bytes_per_ms", None) is not None:
+            raise ValueError("runtime='scan': topology bandwidth modeling "
+                             "needs runtime='event'")
+    if scenario.method != "model" and scenario.method not in MODELS:
+        raise ValueError(
+            f"runtime='scan' plans through the model families; baseline "
+            f"method {scenario.method!r} needs runtime='event'")
+    from repro.runtime.step import SCAN_QUERIES
+    for q in scenario.queries:
+        if q not in SCAN_QUERIES:
+            raise ValueError(
+                f"query {q!r} has no on-device mirror; runtime='scan' "
+                f"supports {SCAN_QUERIES}")
+    from repro.planning.batched import BatchedEngine
+    engine = ENGINES.get(scenario.planner.engine or "batched")
+    if not isinstance(engine, BatchedEngine):
+        raise ValueError(
+            f"runtime='scan' needs the 'batched' or 'sharded' plan engine, "
+            f"not {engine.name!r}")
+    engine.check(scenario.planner)
+    spec = scenario.controller
+    if spec is not None and getattr(spec, "query_split", None) is not None:
+        raise ValueError("runtime='scan' does not implement the per-query "
+                         "controller split; use runtime='event'")
+
+
+RUNTIMES.register("event", _RuntimeChoice("event", scan=False))
+RUNTIMES.register("scan", _RuntimeChoice("scan", scan=True))
+RUNTIMES.register("scan_steps", _RuntimeChoice("scan_steps", scan=True))

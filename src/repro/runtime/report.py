@@ -1,0 +1,85 @@
+"""Shared fleet result aggregation.
+
+Both runtimes — the event loop (``repro.api.experiment.FleetRuntime``) and
+the scan engine (:mod:`repro.runtime.scan`) — end a run holding the same
+raw material: per-window estimate/truth tables, per-site byte counters and
+freshness ages.  :func:`aggregate_fleet` is the one place that turns that
+into the fleet result dict (site/region NRMSE roll-ups, byte and cost
+accounting, freshness percentiles), so the scan runtime's bit-for-bit
+parity with the event loop covers the aggregation arithmetic by
+construction rather than by duplication.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import queries as Q
+
+
+def aggregate_fleet(*, topology, qnames, est, est_q, tru, ages,
+                    bytes_per_site, cost_per_site, gaps, revisions,
+                    late_drops, duplicates, arrival_lag_ms, plan_seconds,
+                    plan_windows, budget_history, total_tuples) -> dict:
+    """Roll per-window tables into the fleet result dict.
+
+    est/est_q/tru: {query: (T, E, k)} float arrays (NaN where unanswered);
+    ages: (T, E) window age at query time (ms); bytes/cost_per_site: (E,)
+    totals over the run; budget_history: (T, E) executed budgets.
+    """
+    from repro.streaming.events import freshness_percentiles
+    E = topology.n_sites
+    reg_idx = topology.region_of()
+    bytes_per_site = np.asarray(bytes_per_site)
+    cost_per_site = np.asarray(cost_per_site, np.float64)
+
+    nrmse_site = {}                         # {q: (E, k)}
+    nrmse_site_q = {}
+    for q in qnames:
+        e_arr = est[q].transpose(1, 2, 0)   # (E, k, T)
+        eq_arr = est_q[q].transpose(1, 2, 0)
+        t_arr = tru[q].transpose(1, 2, 0)
+        nrmse_site[q] = np.asarray(
+            [Q.nrmse_table(e_arr[s], t_arr[s]) for s in range(E)])
+        nrmse_site_q[q] = np.asarray(
+            [Q.nrmse_table(eq_arr[s], t_arr[s]) for s in range(E)])
+
+    region_nrmse = {name: {} for name in topology.region_names}
+    for r, name in enumerate(topology.region_names):
+        sel = reg_idx == r
+        for q in qnames:
+            region_nrmse[name][q] = float(np.nanmean(nrmse_site[q][sel]))
+
+    bytes_by_region = {name: 0 for name in topology.region_names}
+    cost_by_region = {name: 0.0 for name in topology.region_names}
+    for s, site in enumerate(topology.sites):
+        bytes_by_region[site.region] += int(bytes_per_site[s])
+        cost_by_region[site.region] += float(cost_per_site[s])
+
+    freshness_by_region = {
+        name: freshness_percentiles(ages[:, reg_idx == r])
+        for r, name in enumerate(topology.region_names)}
+
+    return {
+        "fleet_nrmse": {q: float(np.nanmean(nrmse_site[q]))
+                        for q in qnames},
+        "fleet_nrmse_at_query": {q: float(np.nanmean(nrmse_site_q[q]))
+                                 for q in qnames},
+        "region_nrmse": region_nrmse,
+        "site_nrmse": nrmse_site,
+        "wan_bytes": int(bytes_per_site.sum()),
+        "wan_bytes_by_region": bytes_by_region,
+        "wan_cost": float(cost_per_site.sum()),
+        "wan_cost_by_region": cost_by_region,
+        "full_bytes": int(total_tuples) * 4,
+        "gaps": int(gaps),
+        "revisions": int(revisions),
+        "late_drops": int(late_drops),
+        "duplicates": int(duplicates),
+        "freshness_ms": freshness_percentiles(ages),
+        "freshness_by_region": freshness_by_region,
+        "window_age_ms": ages,
+        "site_arrival_lag_ms": arrival_lag_ms,
+        "plan_seconds": float(plan_seconds),
+        "plan_windows": int(plan_windows),
+        "budget_history": np.asarray(budget_history),
+    }

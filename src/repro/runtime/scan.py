@@ -1,0 +1,344 @@
+"""ScanRuntime — the on-device streaming engine.
+
+Where the event loop (``repro.api.experiment``) re-enters JAX once per
+window, this runtime stacks the window sequence into one device pool and
+runs the whole ingest → plan → sample → impute → serve cycle as a single
+``lax.scan`` over window ids with a donated :class:`RuntimeState` carry —
+E=256+ sites over thousands of windows execute as one XLA while-loop with
+no per-window host round-trips.
+
+Two execution modes share the compiled step:
+
+  * ``mode="scan"`` — one ``lax.scan`` over all T windows (production).
+  * ``mode="steps"`` — T length-1 scans of the *same* jitted function:
+    the incremental (checkpointable) cadence.  XLA unrolls the
+    trip-count-1 while loop, which re-fuses the body's reductions, so a
+    steps run matches a scan run on the discrete trajectory (budgets,
+    samples, WAN bytes) and tracks its float tables to f32 association
+    (pinned in tests/test_scan_runtime.py).
+
+Two result fidelities:
+
+  * ``collect="payloads"`` — the scan additionally stacks each window's
+    samples and plan arrays; the host then *replays* them through the
+    event path's own ``assemble_payload`` / ``reconstruct_window`` /
+    ``QUERIES`` code.  Sampling is integer-PRNG exact and the replay IS
+    the event path's code, so given the same plans the event loop
+    reproduces this report bit-for-bit (pinned by plan injection in
+    tests/test_scan_runtime.py).  The compiled in-scan planner itself can
+    differ from the standalone host executable by f32 association — XLA
+    fuses reductions differently inside a while-loop body — which may
+    flip an occasional allocation boundary; end-to-end scan-vs-event
+    agreement is therefore pinned within tolerance, not bitwise.  Memory
+    is O(T·E·k·N) — the parity/report mode for moderate T.
+  * ``collect="estimates"`` — queries are answered on device in f32 and
+    only (T, E, k) tables come back.  Approximate (device float order),
+    O(T·E·k) memory — the throughput mode benchmarks use.
+
+Construction mirrors ``Experiment.from_scenario``; scenarios opt in with
+``runtime="scan"`` (or ``"scan_steps"``), validated by the RUNTIMES
+registry entry in :mod:`repro.runtime`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.registry import ENGINES, MODELS
+from repro.core import queries as Q
+from repro.runtime.controller import CtrlParams
+from repro.runtime.state import init_state
+from repro.runtime.step import (PAYLOAD_PLAN_FIELDS, SCAN_QUERIES,
+                                make_window_step)
+
+
+@dataclasses.dataclass
+class ScanRuntime:
+    """Scan-based fleet (or E=1) runtime; zero-latency WAN semantics."""
+
+    cfg: "PlannerConfig"
+    ctrl: CtrlParams
+    topology: Optional["FleetTopology"] = None   # None => single edge
+    query_names: tuple = ("AVG", "VAR")
+    mode: str = "scan"                 # "scan" | "steps"
+    collect: str = "payloads"          # "payloads" | "estimates"
+    method: str = "model"              # single-edge: "model" | model name
+    budget_fraction: float = 0.25      # single-edge per-window budget frac
+    use_kernel: Optional[bool] = None
+    interpret: bool = False
+    is_scan = True                     # duck-typed runtime dispatch
+
+    def __post_init__(self):
+        if self.mode not in ("scan", "steps"):
+            raise ValueError(f"mode must be 'scan' or 'steps', got "
+                             f"{self.mode!r}")
+        if self.collect not in ("payloads", "estimates"):
+            raise ValueError(f"collect must be 'payloads' or 'estimates', "
+                             f"got {self.collect!r}")
+        for q in self.query_names:
+            if q not in SCAN_QUERIES:
+                raise ValueError(
+                    f"query {q!r} has no on-device mirror; the scan runtime "
+                    f"supports {SCAN_QUERIES}")
+        cfg = self.cfg
+        if self.method != "model":
+            if self.method not in MODELS:
+                raise ValueError(
+                    f"method {self.method!r}: the scan runtime plans through "
+                    f"the model families ('model' or {MODELS.names()}); "
+                    f"baselines need runtime='event'")
+            cfg = dataclasses.replace(cfg, model=self.method)
+        self.cfg_eff = cfg
+        from repro.planning.batched import BatchedEngine
+        self.engine = ENGINES.get(cfg.engine or "batched")
+        if not isinstance(self.engine, BatchedEngine):
+            raise ValueError(
+                f"engine {self.engine.name!r} cannot run inside lax.scan; "
+                f"the scan runtime needs the 'batched' or 'sharded' engine")
+        self.engine.check(cfg)
+        self.spec = MODELS.get(cfg.model)
+        self.n_sites = 1 if self.topology is None else self.topology.n_sites
+        if self.topology is not None:
+            self._cost = np.asarray([s.link.cost_per_byte
+                                     for s in self.topology.sites])
+        else:
+            self._cost = np.ones(1)
+        self.plan_seconds = 0.0
+        self._fns = {}                 # static_exec key -> jitted scan fn
+
+    @classmethod
+    def from_scenario(cls, scenario, *, use_kernel=None, interpret=False,
+                      collect: str = "payloads") -> "ScanRuntime":
+        """Build from a ScenarioConfig with ``runtime="scan"|"scan_steps"``
+        (the same geometry/budget wiring as ``Experiment.from_scenario``)."""
+        from repro.api.scenario import ControllerSpec
+        spec = scenario.controller or ControllerSpec()
+        mode = "steps" if scenario.runtime == "scan_steps" else "scan"
+        if scenario.is_fleet:
+            k = int(scenario.data.options.get("k", 6))
+            topo = scenario.topology.build(k)
+            E = topo.n_sites
+            total = (scenario.budget_fraction * E * topo.k
+                     * scenario.data.window)
+            discount = None
+            if spec.link_cost_aware:
+                discount = CtrlParams.make_cost_discount(
+                    [s.link.cost_per_byte for s in topo.sites])
+            ctrl = CtrlParams(total_budget=total, n_sites=E, mode=spec.mode,
+                              floor_mult=spec.floor_mult,
+                              ceil_mult=spec.ceil_mult, ewma=spec.ewma,
+                              demand_signal=spec.demand_signal,
+                              cost_discount=discount)
+            return cls(cfg=scenario.planner, ctrl=ctrl, topology=topo,
+                       query_names=tuple(scenario.queries), mode=mode,
+                       collect=collect, use_kernel=use_kernel,
+                       interpret=interpret)
+        # single edge: the controller is inert (one site, static budget)
+        ctrl = CtrlParams(total_budget=1.0, n_sites=1, mode="static")
+        topo = (scenario.topology.build(1)
+                if scenario.topology is not None else None)
+        rt = cls(cfg=scenario.planner, ctrl=ctrl, topology=None,
+                 query_names=tuple(scenario.queries), mode=mode,
+                 collect=collect, method=scenario.method,
+                 budget_fraction=scenario.budget_fraction,
+                 use_kernel=use_kernel, interpret=interpret)
+        if topo is not None:
+            rt._cost = np.asarray([topo.sites[0].link.cost_per_byte])
+        return rt
+
+    # ------------------------------------------------------------- compile
+    def _plan_fn(self, values, counts, budgets):
+        return self.engine._run(values, counts, budgets, self.cfg_eff,
+                                use_kernel=self.use_kernel,
+                                interpret=self.interpret)
+
+    def _scan_fn(self, static_exec: Optional[tuple]):
+        """Jitted (state, wids, pool) -> (state, ys); donated carry."""
+        if static_exec not in self._fns:
+            exec_arr = (None if static_exec is None
+                        else np.asarray(static_exec, np.float32))
+
+            def fn(state, wids, pool):
+                step = make_window_step(
+                    pool, seed=self.cfg_eff.seed, plan_fn=self._plan_fn,
+                    qnames=self.query_names, multi=self.spec.multi,
+                    mean=self.spec.mean, ctrl=self.ctrl,
+                    static_exec_budgets=exec_arr, collect=self.collect)
+                return jax.lax.scan(step, state, wids)
+
+            self._fns[static_exec] = jax.jit(fn, donate_argnums=0)
+        return self._fns[static_exec]
+
+    def _static_exec(self, k: int, n: int) -> Optional[tuple]:
+        """Executed budgets when they are window-invariant, computed on the
+        host in f64 exactly as the event loop computes them (so the f32
+        device floor can never flip a boundary case)."""
+        if self.topology is None:
+            budget = max(int(self.budget_fraction * k * n), 2)
+            return (float(budget),)
+        if self.ctrl.mode == "static":
+            eq = self.ctrl.equal_share
+            b = np.minimum(np.full(self.n_sites, eq),
+                           np.full(self.n_sites, self.ctrl.ceil_mult * eq))
+            return tuple(np.maximum(np.floor(b), 2.0).tolist())
+        return None                    # rebalance: budgets live on device
+
+    # ----------------------------------------------------------------- run
+    def run(self, windows, n_windows: Optional[int] = None) -> dict:
+        """windows: list of (E, k, N) arrays (fleet) or WindowBatch (E=1).
+
+        ``n_windows`` extends the run past the materialized pool by cycling
+        it (window ``wid`` reads pool slot ``wid % P``) — the sustained-
+        throughput configuration benchmarks use.
+        """
+        single = self.topology is None
+        if single:
+            k = int(windows[0].k)
+            n = int(np.max(np.asarray(windows[0].counts)))
+            for w in windows:
+                if not np.all(np.asarray(w.counts) == n):
+                    raise ValueError("the scan runtime requires full "
+                                     "windows (uniform counts)")
+            pool_np = np.stack([np.asarray(w.values, np.float32)
+                                for w in windows])[:, None]
+        else:
+            pool_np = np.stack([np.asarray(w, np.float32) for w in windows])
+            _, _, k, n = pool_np.shape
+        P = pool_np.shape[0]
+        T = int(n_windows) if n_windows is not None else P
+
+        static_exec = self._static_exec(k, n)
+        eq = (static_exec[0] if single else self.ctrl.equal_share)
+        state = init_state(self.n_sites, k, float(eq))
+        fn = self._scan_fn(static_exec)
+        pool = jnp.asarray(pool_np)
+        wids = jnp.arange(T, dtype=jnp.int32)
+
+        t0 = time.perf_counter()
+        if self.mode == "scan":
+            state, ys = fn(state, wids, pool)
+        else:
+            chunks = []
+            for w in range(T):
+                state, y = fn(state, wids[w:w + 1], pool)
+                chunks.append(y)
+            ys = jax.tree.map(lambda *xs: jnp.concatenate(xs), *chunks)
+        ys = jax.block_until_ready(ys)
+        scan_seconds = time.perf_counter() - t0
+        self.plan_seconds += scan_seconds
+        ys = jax.tree.map(np.asarray, ys)
+        state = jax.tree.map(np.asarray, state)
+
+        if self.collect == "payloads":
+            est, tru, bytes_site, cost_site = self._replay(ys, pool_np, T,
+                                                           windows)
+        else:
+            est = {q: np.asarray(ys["est"][q], np.float64)
+                   for q in self.query_names}
+            tru = {q: np.asarray(ys["tru"][q], np.float64)
+                   for q in self.query_names}
+            bytes_site = ys["bytes"].astype(np.int64).sum(axis=0)
+            cost_site = bytes_site * self._cost
+            if single:
+                est = {q: v[:, 0] for q, v in est.items()}
+                tru = {q: v[:, 0] for q, v in tru.items()}
+
+        extras = {
+            "scan_seconds": scan_seconds,
+            "windows_per_sec": T / max(scan_seconds, 1e-9),
+            "mode": self.mode,
+            "collect": self.collect,
+            "stream_totals": {"count": state.totals.count,
+                              "s1": state.totals.s1, "s2": state.totals.s2},
+            "controller_demand": state.controller.demand,
+            "plan_raw": {f: ys[f] for f in
+                         ("budgets", "obs_err", "r2", "objective")},
+        }
+        if single:
+            return self._result_single(est, tru, bytes_site, cost_site, T,
+                                       k, n, scan_seconds, extras)
+        return self._result_fleet(est, tru, bytes_site, cost_site, ys,
+                                  state, T, k, n, scan_seconds, extras)
+
+    # ------------------------------------------------------------- results
+    def _replay(self, ys, pool_np, T, windows):
+        """Host replay of the collected payloads through the event path's
+        own assemble/reconstruct/query code — the bitwise report mode."""
+        from repro.core.reconstruct import reconstruct_window
+        from repro.planning.engine import assemble_payload
+        E, k = self.n_sites, pool_np.shape[2]
+        P = pool_np.shape[0]
+        qnames = self.query_names
+        est = {q: np.full((T, E, k), np.nan) for q in qnames}
+        tru = {q: np.full((T, E, k), np.nan) for q in qnames}
+        bytes_site = np.zeros(E, np.int64)
+        cost_site = np.zeros(E, np.float64)
+        samples = ys["samples"]
+        for t in range(T):
+            plan_t = {f: ys[f][t] for f in PAYLOAD_PLAN_FIELDS}
+            vals = pool_np[t % P]
+            for s in range(E):
+                real = [samples[t, s, i, :int(plan_t["n_real"][s, i])]
+                        for i in range(k)]
+                payload = assemble_payload(self.spec, plan_t, s, t, real)
+                nb = payload.wan_bytes()
+                bytes_site[s] += nb
+                cost_site[s] += nb * self._cost[s]
+                rec = reconstruct_window(payload)
+                if self.topology is None:
+                    # event oracle computes truth from the original window
+                    # values (possibly f64), not the f32 device pool
+                    w = windows[t % P]
+                    true_rows = [np.asarray(w.values[i, :int(w.counts[i])])
+                                 for i in range(k)]
+                else:
+                    true_rows = [vals[s, i] for i in range(k)]
+                for q in qnames:
+                    fn = Q.QUERIES[q]
+                    est[q][t, s] = [fn(r) for r in rec]
+                    tru[q][t, s] = [fn(r) for r in true_rows]
+        if self.topology is None:
+            est = {q: v[:, 0] for q, v in est.items()}
+            tru = {q: v[:, 0] for q, v in tru.items()}
+        return est, tru, bytes_site, cost_site
+
+    def _result_single(self, est, tru, bytes_site, cost_site, T, k, n,
+                       scan_seconds, extras):
+        from repro.streaming.events import freshness_percentiles
+        ages = np.zeros(T)             # zero-latency: served the moment due
+        nrmse = {q: Q.nrmse_table(est[q].T, tru[q].T)
+                 for q in self.query_names}
+        return {
+            "nrmse": nrmse,
+            "nrmse_at_query": dict(nrmse),
+            "wan_bytes": int(bytes_site.sum()),
+            "wan_cost": float(cost_site.sum()),
+            "full_bytes": T * k * n * 4,
+            "plan_seconds": scan_seconds,
+            "gaps": 0, "revisions": 0, "late_drops": 0, "duplicates": 0,
+            "window_age_ms": ages,
+            "revised_windows": np.zeros(T, bool),
+            "freshness_ms": freshness_percentiles(ages),
+            **extras,
+        }
+
+    def _result_fleet(self, est, tru, bytes_site, cost_site, ys, state, T,
+                      k, n, scan_seconds, extras):
+        from repro.runtime.report import aggregate_fleet
+        ages = np.zeros((T, self.n_sites))
+        raw = aggregate_fleet(
+            topology=self.topology, qnames=self.query_names,
+            est=est, est_q=est, tru=tru, ages=ages,
+            bytes_per_site=bytes_site, cost_per_site=cost_site,
+            gaps=0, revisions=0, late_drops=0, duplicates=0,
+            arrival_lag_ms=np.asarray(state.controller.lag, np.float64),
+            plan_seconds=scan_seconds, plan_windows=T,
+            budget_history=ys["budgets"],
+            total_tuples=T * self.n_sites * k * n)
+        raw.update(extras)
+        return raw

@@ -1,0 +1,77 @@
+"""Carry pytrees for the scan streaming runtime.
+
+One :class:`RuntimeState` travels through ``lax.scan`` across windows; it
+is the *entire* mutable state of the streaming system, so a window step is
+a pure function ``(state, window_id) -> (state, outputs)`` and the whole
+run compiles to one XLA while-loop with donated carry buffers:
+
+  * ``controller`` — the on-device mirror of the fleet budget controller's
+    EWMAs (:mod:`repro.fleet.controller`): demand, correlation strength,
+    arrival-lag telemetry, the previous raw budgets and the seen flags.
+  * ``totals`` — running per-site/per-stream moment sums (count, sum,
+    sum-of-squares) over everything ingested, the ``stream_stats``
+    long-horizon digest surfaced as end-of-run diagnostics.
+  * ``window_id`` — the RNG cursor: sampler keys are derived per window as
+    ``PRNGKey(seed ^ wid)`` (+ ``fold_in(site)`` for fleets), exactly the
+    streams the event-loop path consumes, so parity needs no key state
+    beyond the window counter itself.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ControllerState:
+    """Device mirror of ``BudgetController``'s mutable fields (f32)."""
+
+    demand: Array        # (E,) EWMA sqrt(err * budget)
+    r2: Array            # (E,) EWMA explained-variance fraction
+    lag: Array           # (E,) EWMA WAN arrival lag (ms); 0 at zero latency
+    lag_seen: Array      # (E,) bool — per-site lag EWMA seeded
+    seen: Array          # () bool — any observation yet
+    last_budgets: Array  # (E,) raw (un-floored) budgets of the last window
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class StreamTotals:
+    """Running per-stream moment sums across every ingested window."""
+
+    count: Array         # (E, k) f32 tuples seen
+    s1: Array            # (E, k) f32 running sum
+    s2: Array            # (E, k) f32 running sum of squares
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class RuntimeState:
+    """Everything the streaming engine carries window to window."""
+
+    window_id: Array     # () i32 — next window to ingest (RNG cursor)
+    controller: ControllerState
+    totals: StreamTotals
+
+
+def init_state(n_sites: int, k: int, equal_share: float) -> RuntimeState:
+    """Fresh state matching ``BudgetController.__post_init__`` semantics."""
+    e = n_sites
+    return RuntimeState(
+        window_id=jnp.asarray(0, jnp.int32),
+        controller=ControllerState(
+            demand=jnp.ones((e,), jnp.float32),
+            r2=jnp.zeros((e,), jnp.float32),
+            lag=jnp.zeros((e,), jnp.float32),
+            lag_seen=jnp.zeros((e,), bool),
+            seen=jnp.asarray(False),
+            last_budgets=jnp.full((e,), equal_share, jnp.float32)),
+        totals=StreamTotals(
+            count=jnp.zeros((e, k), jnp.float32),
+            s1=jnp.zeros((e, k), jnp.float32),
+            s2=jnp.zeros((e, k), jnp.float32)))

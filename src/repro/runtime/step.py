@@ -1,0 +1,307 @@
+"""The jitted window step: ingest -> plan -> sample -> impute -> serve.
+
+One call of the function :func:`make_window_step` builds is everything the
+event loop does per window — controller budgets, the batched/sharded
+Algorithm-1 plan (``repro.planning``), SRS sampling, cloud-side imputation
+and the aggregate queries — as a pure f32 computation suitable for
+``lax.scan``.  No host round-trips: the only host work left in a run is
+stacking the window pool once and reading the output tables at the end.
+
+RNG parity (bit-for-bit with the event-loop paths):
+
+  * E = 1 — the per-window key is ``PRNGKey(seed ^ wid)``, the exact key
+    ``PlanEngine.plan_one`` hands ``samplers.draw_samples``; per-stream
+    subkeys walk the same sequential ``jax.random.split`` chain and stream
+    ``i`` draws ``perm = permutation(sub, N)[:n_i]`` — the identical index
+    sequence, so single-edge scan runs agree with the host planner bitwise.
+  * E > 1 — one batched Fisher-Yates shuffle per window keyed on
+    ``fold_in(PRNGKey(seed ^ wid), 0x5A)`` (O(N) per row; sort-based
+    shuffles serialize on XLA:CPU).  The fleet runtime's
+    ``sampling="device"`` mode draws through the same function
+    (:func:`draw_fleet_samples`, one jitted call per window), so the event
+    loop and the scan consume identical sample sets by construction
+    (pinned in tests/test_scan_runtime.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.planning.batched import FleetPlan
+from repro.runtime.controller import (CtrlParams, controller_budgets,
+                                      controller_update)
+from repro.runtime.state import RuntimeState, StreamTotals
+
+# per-stream model upload footprint, matching EdgePayload.wan_bytes():
+# 4 B for the shipped mean (mean imputation), 40 B for the two-predictor
+# dict model, CompactModel.param_bytes() == 28 B otherwise
+_PER_MODEL_BYTES = {"mean": 4, "multi": 40, "single": 28}
+
+
+# --------------------------------------------------------------------------
+# sampling — the device replica of samplers.draw_samples
+# --------------------------------------------------------------------------
+
+def _stream_keys(base_key, k: int):
+    """The sequential split chain draw_samples walks: one subkey/stream."""
+    subs = []
+    key = base_key
+    for _ in range(k):
+        key, sub = jax.random.split(key)
+        subs.append(sub)
+    return jnp.stack(subs)
+
+
+def _site_keys(seed: int, wid, n_sites: int):
+    base = jax.random.PRNGKey(
+        jnp.bitwise_xor(jnp.asarray(seed, jnp.int32),
+                        jnp.asarray(wid, jnp.int32)))
+    if n_sites == 1:                 # plan_one uses the base key directly
+        return base[None]
+    return jax.vmap(lambda s: jax.random.fold_in(base, s))(
+        jnp.arange(n_sites, dtype=jnp.int32))
+
+
+def _fy_sample(key, values, n_real):
+    """Batched partial Fisher-Yates SRS for every (site, stream) row.
+
+    One uniform draw per position up front, then fori_loop steps of
+    (E, k)-wide gather/scatter swaps on a compact u8/u16 index permutation
+    — O(N) work per row where a sort (or the O(N^2) counting-rank form)
+    serializes the whole window step on a single-core XLA:CPU host.  FY
+    position ``i`` is final after its own iteration and the caller masks
+    everything past ``n_real``, so the loop stops at ``max(n_real)`` —
+    identical output, typically far fewer than N iterations.
+    """
+    e, k, n = values.shape
+    idx_dtype = jnp.uint8 if n <= 256 else jnp.uint16
+    u = jax.random.uniform(key, (e, k, n))
+    ei = jnp.arange(e)[:, None]
+    ki = jnp.arange(k)[None, :]
+    perm0 = jnp.broadcast_to(jnp.arange(n, dtype=idx_dtype), (e, k, n))
+
+    def body(i, perm):
+        # swap position i with uniform j in [i, n)
+        j = i + (u[..., i] * (n - i)).astype(jnp.int32)
+        j = jnp.minimum(j, n - 1)
+        pi = perm[..., i]
+        pj = jnp.take_along_axis(perm, j[..., None], axis=-1)[..., 0]
+        perm = perm.at[ei, ki, j].set(pi)
+        return perm.at[..., i].set(pj)
+
+    stop = jnp.minimum(jnp.max(n_real).astype(jnp.int32), n - 1)
+    perm = jax.lax.fori_loop(0, stop, body, perm0)
+    shuffled = jnp.take_along_axis(values, perm.astype(jnp.int32), axis=-1)
+    return jnp.where(jnp.arange(n)[None, None, :] < n_real[..., None],
+                     shuffled, 0.0)
+
+
+def sample_fleet(seed: int, wid, values, n_real):
+    """SRS without replacement for every site/stream in one pass.
+
+    values (E, k, N) f32, n_real (E, k) int -> (E, k, N) f32 where row
+    ``[s, i]`` holds stream i's ``n_real[s, i]`` sampled tuples (in draw
+    order) followed by zeros.  Requires full windows (counts == N), which
+    the scan runtime validates at build time.
+
+    E == 1 replicates the host planner's sampler exactly (the sequential
+    ``draw_samples`` split chain and ``jax.random.permutation``), keeping
+    single-edge scan runs bitwise against ``plan_one``.  Fleets use the
+    O(N)-per-row Fisher-Yates shuffle instead — both the scan and the
+    event loop's ``sampling="device"`` mode draw through this same
+    function, so scan/event parity is preserved by construction.
+    """
+    e, k, n = values.shape
+    iota = jnp.arange(n)
+    if e == 1:
+        keys = _site_keys(seed, wid, e)
+        skeys = jax.vmap(lambda b: _stream_keys(b, k))(keys)
+
+        def one(sub, row, cnt):
+            perm = jax.random.permutation(sub, n)
+            return jnp.where(iota < cnt, row[perm], 0.0)
+
+        return jax.vmap(jax.vmap(one))(skeys, values, n_real)
+    base = jax.random.PRNGKey(
+        jnp.bitwise_xor(jnp.asarray(seed, jnp.int32),
+                        jnp.asarray(wid, jnp.int32)))
+    return _fy_sample(jax.random.fold_in(base, 0x5A), values, n_real)
+
+
+@functools.lru_cache(maxsize=8)
+def _jitted_sampler(seed: int):
+    return jax.jit(functools.partial(sample_fleet, seed))
+
+
+def draw_fleet_samples(seed: int, wid: int, values: np.ndarray,
+                       n_real: np.ndarray) -> np.ndarray:
+    """Host entry point (FleetRuntime ``sampling="device"``): one jitted
+    dispatch per window, bitwise the streams the scan runtime consumes."""
+    out = _jitted_sampler(int(seed))(jnp.asarray(wid, jnp.int32),
+                                     jnp.asarray(values, jnp.float32),
+                                     jnp.asarray(n_real, jnp.int32))
+    return np.asarray(out)
+
+
+# --------------------------------------------------------------------------
+# cloud-side imputation + queries, batched over (E, k)
+# --------------------------------------------------------------------------
+
+def _impute(plan: FleetPlan, samples, n_real, *, multi: bool, mean: bool):
+    """(E, k, N) imputed values + the 1d-capped n_imputed, on device.
+
+    Mirrors ``assemble_payload`` (cap at what actually shipped) +
+    ``reconstruct_window`` (evaluate the compact model on the *front* of
+    the predictor's real sample).
+    """
+    e, k, n = samples.shape
+    iota = jnp.arange(n)[None, None, :]
+    if multi:
+        p0, p1 = plan.predictor[..., 0], plan.predictor[..., 1]
+        ns = jnp.minimum(plan.n_imputed,
+                         jnp.minimum(jnp.take_along_axis(n_real, p0, axis=1),
+                                     jnp.take_along_axis(n_real, p1, axis=1)))
+        xp = jnp.take_along_axis(samples, p0[..., None], axis=1)
+        xq = jnp.take_along_axis(samples, p1[..., None], axis=1)
+        u = (xp - plan.loc[..., 0:1]) / plan.scale[..., 0:1]
+        v = (xq - plan.loc[..., 1:2]) / plan.scale[..., 1:2]
+        c = plan.coeffs
+        imp = (c[..., 0:1] + c[..., 1:2] * u + c[..., 2:3] * v
+               + c[..., 3:4] * u * v)
+    else:
+        ns = jnp.minimum(plan.n_imputed,
+                         jnp.take_along_axis(n_real, plan.predictor, axis=1))
+        if mean:
+            imp = jnp.broadcast_to(plan.mean[..., None], samples.shape)
+        else:
+            xp = jnp.take_along_axis(samples, plan.predictor[..., None],
+                                     axis=1)
+            u = (xp - plan.loc[..., None]) / plan.scale[..., None]
+            c = plan.coeffs
+            imp = (c[..., 0:1] + c[..., 1:2] * u + c[..., 2:3] * u**2
+                   + c[..., 3:4] * u**3)
+    mask = iota < ns[..., None]
+    return jnp.where(mask, imp, 0.0), ns, mask
+
+
+def _masked_queries(parts, qnames):
+    """Aggregate queries over masked sample sets, numpy-NaN semantics.
+
+    parts: list of (values (E, k, N), mask (E, k, N) bool) making up each
+    stream's reconstruction (real ++ imputed).  AVG/VAR use the stable
+    two-pass form; VAR is ddof=1; empty -> NaN, single sample VAR -> NaN.
+    """
+    tot = sum(m.sum(-1) for _, m in parts).astype(jnp.float32)
+    s1 = sum(jnp.where(m, x, 0.0).sum(-1) for x, m in parts)
+    avg = jnp.where(tot > 0, s1 / jnp.maximum(tot, 1.0), jnp.nan)
+    out = {}
+    for q in qnames:
+        if q == "AVG":
+            out[q] = avg
+        elif q == "VAR":
+            ss = sum((jnp.where(m, x - avg[..., None], 0.0) ** 2).sum(-1)
+                     for x, m in parts)
+            out[q] = jnp.where(tot > 1, ss / jnp.maximum(tot - 1.0, 1.0),
+                               jnp.nan)
+        elif q == "MIN":
+            m_ = [jnp.where(m, x, jnp.inf).min(-1) for x, m in parts]
+            best = functools.reduce(jnp.minimum, m_)
+            out[q] = jnp.where(tot > 0, best, jnp.nan)
+        elif q == "MAX":
+            m_ = [jnp.where(m, x, -jnp.inf).max(-1) for x, m in parts]
+            best = functools.reduce(jnp.maximum, m_)
+            out[q] = jnp.where(tot > 0, best, jnp.nan)
+        else:                        # validated away at build time
+            raise ValueError(f"query {q!r} has no on-device mirror")
+    return out
+
+
+SCAN_QUERIES = ("AVG", "VAR", "MIN", "MAX")
+
+# the FleetPlan fields the payload-replay path ships back to the host —
+# everything assemble_payload reads (plus n_real for slicing the samples)
+PAYLOAD_PLAN_FIELDS = ("n_real", "n_imputed", "predictor", "coeffs", "loc",
+                       "scale", "explained_var", "mean", "var")
+
+
+# --------------------------------------------------------------------------
+# the step factory
+# --------------------------------------------------------------------------
+
+def make_window_step(pool, *, seed: int, plan_fn, qnames, multi: bool,
+                     mean: bool, ctrl: CtrlParams,
+                     static_exec_budgets: Optional[np.ndarray] = None,
+                     collect: str = "estimates"):
+    """Build ``step(state, wid) -> (state, outputs)`` for ``lax.scan``.
+
+    pool: (P, E, k, N) f32 device array; window ``wid`` reads slot
+    ``wid % P`` (P == T for materialized runs; a small cycled pool for
+    long synthetic throughput runs).
+    plan_fn: (values, counts, budgets) -> FleetPlan (batched or sharded).
+    static_exec_budgets: host-computed executed budgets for static-mode
+    parity with the f64 host controller (floor + >=2 clamp already done).
+    """
+    p_, e, k, n = pool.shape
+    counts = jnp.full((e, k), n, jnp.int32)
+    full_mask = jnp.ones((e, k, n), bool)
+    per_model = _PER_MODEL_BYTES["mean" if mean else
+                                 ("multi" if multi else "single")]
+    header = 8 + 2 * k
+    if static_exec_budgets is not None:
+        static_exec = jnp.asarray(static_exec_budgets, jnp.float32)
+
+    def step(state: RuntimeState, wid):
+        values = jax.lax.dynamic_index_in_dim(pool, jnp.mod(wid, p_),
+                                              keepdims=False)
+        raw_b = controller_budgets(state.controller, ctrl)
+        if static_exec_budgets is not None:
+            budgets = static_exec
+        else:
+            budgets = jnp.maximum(jnp.floor(raw_b), 2.0)
+
+        plan = plan_fn(values, counts, budgets)
+        samples = sample_fleet(seed, wid, values, plan.n_real)
+        imputed, ns, mask_i = _impute(plan, samples, plan.n_real,
+                                      multi=multi, mean=mean)
+        mask_r = jnp.arange(n)[None, None, :] < plan.n_real[..., None]
+
+        est = _masked_queries([(samples, mask_r), (imputed, mask_i)], qnames)
+        tru = _masked_queries([(values, full_mask)], qnames)
+
+        # WAN accounting — EdgePayload.wan_bytes() per site
+        nbytes = (4 * plan.n_real.sum(-1) + header
+                  + per_model * (ns > 0).sum(-1)).astype(jnp.int32)
+
+        # edge-local error proxy -> controller (FleetRuntime.run semantics)
+        e_avg = est.get("AVG")
+        if e_avg is None:
+            e_avg = _masked_queries([(samples, mask_r), (imputed, mask_i)],
+                                    ("AVG",))["AVG"]
+        t_avg = tru.get("AVG")
+        if t_avg is None:
+            t_avg = _masked_queries([(values, full_mask)], ("AVG",))["AVG"]
+        rel = jnp.abs(e_avg - t_avg) / jnp.maximum(jnp.abs(t_avg), 1e-6)
+        obs_err = jnp.nanmean(rel, axis=1)
+
+        ctrl2 = controller_update(state.controller, ctrl, raw_b, obs_err,
+                                  plan.r2, plan.objective)
+        totals = StreamTotals(count=state.totals.count + n,
+                              s1=state.totals.s1 + values.sum(-1),
+                              s2=state.totals.s2 + (values * values).sum(-1))
+        new_state = RuntimeState(window_id=wid + 1, controller=ctrl2,
+                                 totals=totals)
+
+        out = {"est": est, "tru": tru, "bytes": nbytes, "budgets": budgets,
+               "obs_err": obs_err, "r2": plan.r2,
+               "objective": plan.objective}
+        if collect == "payloads":
+            out["samples"] = samples
+            for f in PAYLOAD_PLAN_FIELDS:
+                out[f] = getattr(plan, f)
+        return new_state, out
+
+    return step

@@ -83,9 +83,14 @@ class AsyncTransport(Transport):
     Inherits all of ``Transport``'s accounting (bytes, cost, drops, latency
     totals).  ``jitter_ms`` adds U(0, jitter_ms) per payload from a separate
     RNG stream, so enabling jitter never perturbs the drop sequence.
+    ``bandwidth_bytes_per_ms`` models serialization delay: a payload of B
+    bytes takes ``B / bandwidth`` ms to get onto the wire before propagation
+    latency starts.  ``None`` (the default) keeps transmission instantaneous
+    — delivery times are bit-for-bit the pre-bandwidth schedule.
     """
 
     jitter_ms: float = 0.0
+    bandwidth_bytes_per_ms: Optional[float] = None
 
     def __post_init__(self):
         super().__post_init__()
@@ -110,6 +115,8 @@ class AsyncTransport(Transport):
         if sent is None:                       # dropped: no delivery event
             return None
         delay = self.latency_ms
+        if self.bandwidth_bytes_per_ms is not None:
+            delay += sent.wan_bytes() / self.bandwidth_bytes_per_ms
         if self.jitter_ms > 0.0:
             delay += float(self._jitter_rng.uniform(0.0, self.jitter_ms))
         self._queue.push(now_ms + delay, self._seq, sent)
