@@ -99,6 +99,16 @@ print(f"registry coverage OK: {total} registered component names all "
       f"appear in tests/ or benchmarks/")
 PY
 
+echo "== golden sweep (lint + smoke subset; full sweep runs via the slow-marked test) =="
+# every scenario file must load and name only registered components (the
+# lint *is* a ScenarioConfig.from_dict of each file), then the smoke-tagged
+# scenarios re-run against their committed goldens and the perf floors are
+# checked against the tracked BENCH_throughput.json.  The full 15-scenario
+# sweep is tests/test_sweep.py::test_full_sweep_passes_on_committed_goldens
+# (@pytest.mark.slow), already covered by the tier-1 run above.
+python -m repro.sweep --lint
+python -m repro.sweep --check --filter smoke
+
 echo "== planning-engine multi-device smoke (8 forced host devices) =="
 # the sharded engine's site-axis split is a single-device no-op on bare CPU
 # runners; forcing 8 host devices makes the shard_map path and the

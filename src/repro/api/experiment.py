@@ -137,6 +137,7 @@ class SingleEdgeRuntime:
             "revisions": self.cloud.revisions,
             "late_drops": self.cloud.late_drops,
             "duplicates": self.cloud.duplicates,
+            "retransmits": getattr(self.transport, "retransmits", 0),
             "window_age_ms": ages,
             "revised_windows": revised,
             "freshness_ms": freshness_percentiles(ages),
@@ -183,6 +184,8 @@ class FleetRuntime:
     window_period_ms: float = 1000.0   # virtual tumbling-window cadence
     staleness_deadline_ms: float = float("inf")
     sampling: str = "host"             # "host" | "device" (scan-parity RNG)
+    retransmit_timeout_ms: Optional[float] = None
+    max_retries: int = 0
 
     def __post_init__(self):
         from repro.planning import ENGINES
@@ -200,7 +203,9 @@ class FleetRuntime:
             cost_per_byte=s.link.cost_per_byte,
             latency_ms=s.link.latency_ms,
             jitter_ms=s.link.jitter_ms,
-            bandwidth_bytes_per_ms=s.link.bandwidth_bytes_per_ms)
+            bandwidth_bytes_per_ms=s.link.bandwidth_bytes_per_ms,
+            retransmit_timeout_ms=self.retransmit_timeout_ms,
+            max_retries=self.max_retries)
             for s in sites]
         self.clouds = [ReorderCloudNode(query_names=self.query_names,
                                         window_period_ms=self.window_period_ms,
@@ -365,6 +370,7 @@ class FleetRuntime:
             revisions=sum(c.revisions for c in self.clouds),
             late_drops=sum(c.late_drops for c in self.clouds),
             duplicates=sum(c.duplicates for c in self.clouds),
+            retransmits=sum(t.retransmits for t in self.transports),
             arrival_lag_ms=self.controller.arrival_lag_ms,
             plan_seconds=self.plan_seconds, plan_windows=self.plan_windows,
             budget_history=np.asarray(budget_history),
@@ -401,6 +407,7 @@ class RunReport:
     revisions: int
     late_drops: int
     duplicates: int
+    retransmits: int
     freshness_ms: dict             # {"p50_ms": .., "p99_ms": ..}
     freshness_by_region: dict
     plan_seconds: float
@@ -430,6 +437,7 @@ class RunReport:
             "revisions": self.revisions,
             "late_drops": self.late_drops,
             "duplicates": self.duplicates,
+            "retransmits": self.retransmits,
             "freshness_ms": dict(self.freshness_ms),
             "plan_seconds": self.plan_seconds,
         }
@@ -456,6 +464,7 @@ def _report_single(scenario, r: dict) -> RunReport:
         wan_cost_by_region={"local": float(r.get("wan_cost", 0.0))},
         gaps=int(r["gaps"]), revisions=int(r["revisions"]),
         late_drops=int(r["late_drops"]), duplicates=int(r["duplicates"]),
+        retransmits=int(r.get("retransmits", 0)),
         freshness_ms=dict(r["freshness_ms"]),
         freshness_by_region={"local": dict(r["freshness_ms"])},
         plan_seconds=float(r["plan_seconds"]),
@@ -477,6 +486,7 @@ def _report_fleet(scenario, r: dict, n_sites: int) -> RunReport:
         wan_cost_by_region=dict(r["wan_cost_by_region"]),
         gaps=int(r["gaps"]), revisions=int(r["revisions"]),
         late_drops=int(r["late_drops"]), duplicates=int(r["duplicates"]),
+        retransmits=int(r.get("retransmits", 0)),
         freshness_ms=dict(r["freshness_ms"]),
         freshness_by_region={reg: dict(f)
                              for reg, f in r["freshness_by_region"].items()},
@@ -533,7 +543,9 @@ class Experiment:
                 window_period_ms=tspec.window_period_ms,
                 staleness_deadline_ms=(float("inf")
                                        if tspec.staleness_deadline_ms is None
-                                       else tspec.staleness_deadline_ms))
+                                       else tspec.staleness_deadline_ms),
+                retransmit_timeout_ms=tspec.retransmit_timeout_ms,
+                max_retries=tspec.max_retries)
             return cls(scenario=scenario, runtime=runtime)
 
         # single edge — the E=1 degenerate fleet.  A one-site topology
@@ -556,7 +568,10 @@ class Experiment:
             transport=AsyncTransport(drop_prob=drop, seed=scenario.planner.seed,
                                      cost_per_byte=cost, latency_ms=lat,
                                      jitter_ms=jit,
-                                     bandwidth_bytes_per_ms=bandwidth),
+                                     bandwidth_bytes_per_ms=bandwidth,
+                                     retransmit_timeout_ms=(
+                                         tspec.retransmit_timeout_ms),
+                                     max_retries=tspec.max_retries),
             window_period_ms=tspec.window_period_ms,
             staleness_deadline_ms=tspec.staleness_deadline_ms)
         return cls(scenario=scenario, runtime=runtime)

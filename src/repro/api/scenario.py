@@ -124,6 +124,14 @@ class TransportSpec:
     (``wan_bytes / bandwidth``) on top of the propagation latency; ``None``
     (the default) keeps transmission instantaneous — bit-for-bit the
     pre-bandwidth behavior.
+
+    ``retransmit_timeout_ms`` arms retransmit-on-timeout on the uplink: a
+    window whose payload has not been delivered (instant-ACK model) within
+    the timeout is re-sent, up to ``max_retries`` extra attempts.  Each
+    retry re-rolls the drop/jitter dice; premature retries produce
+    duplicate deliveries which the cloud's reorder buffer already absorbs
+    idempotently.  ``None`` (the default, with ``max_retries == 0``) is
+    bit-for-bit the fire-and-forget link.
     """
 
     drop_prob: float = 0.0
@@ -132,6 +140,22 @@ class TransportSpec:
     window_period_ms: float = 1000.0
     staleness_deadline_ms: Optional[float] = None
     bandwidth_bytes_per_ms: Optional[float] = None
+    retransmit_timeout_ms: Optional[float] = None
+    max_retries: int = 0
+
+    def __post_init__(self):
+        if self.retransmit_timeout_ms is not None:
+            if not self.retransmit_timeout_ms > 0.0:
+                raise ValueError(f"retransmit_timeout_ms must be > 0, got "
+                                 f"{self.retransmit_timeout_ms!r}")
+            if self.max_retries < 1:
+                raise ValueError("retransmit_timeout_ms is set but "
+                                 "max_retries < 1; arm at least one retry "
+                                 "or drop the timeout")
+        elif self.max_retries != 0:
+            raise ValueError(f"max_retries={self.max_retries!r} without "
+                             f"retransmit_timeout_ms; set a timeout to arm "
+                             f"retransmits")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -64,6 +64,11 @@ def check_scan_scenario(scenario) -> None:
         raise ValueError("runtime='scan' does not model serialization "
                          "delay; transport.bandwidth_bytes_per_ms must be "
                          "None")
+    if getattr(t, "retransmit_timeout_ms", None) is not None:
+        raise ValueError("runtime='scan' never drops payloads, so there is "
+                         "nothing to retransmit; "
+                         "transport.retransmit_timeout_ms must be None "
+                         "(use runtime='event')")
     if t.staleness_deadline_ms is not None:
         raise ValueError("runtime='scan' never produces late payloads; "
                          "staleness_deadline_ms must be None")

@@ -19,7 +19,8 @@ from repro.core import queries as Q
 def aggregate_fleet(*, topology, qnames, est, est_q, tru, ages,
                     bytes_per_site, cost_per_site, gaps, revisions,
                     late_drops, duplicates, arrival_lag_ms, plan_seconds,
-                    plan_windows, budget_history, total_tuples) -> dict:
+                    plan_windows, budget_history, total_tuples,
+                    retransmits=0) -> dict:
     """Roll per-window tables into the fleet result dict.
 
     est/est_q/tru: {query: (T, E, k)} float arrays (NaN where unanswered);
@@ -75,6 +76,7 @@ def aggregate_fleet(*, topology, qnames, est, est_q, tru, ages,
         "revisions": int(revisions),
         "late_drops": int(late_drops),
         "duplicates": int(duplicates),
+        "retransmits": int(retransmits),
         "freshness_ms": freshness_percentiles(ages),
         "freshness_by_region": freshness_by_region,
         "window_age_ms": ages,

@@ -189,12 +189,22 @@ class ScanRuntime:
         return None                    # rebalance: budgets live on device
 
     # ----------------------------------------------------------------- run
-    def run(self, windows, n_windows: Optional[int] = None) -> dict:
+    def run(self, windows, n_windows: Optional[int] = None, *,
+            state=None, first_window: Optional[int] = None) -> dict:
         """windows: list of (E, k, N) arrays (fleet) or WindowBatch (E=1).
 
         ``n_windows`` extends the run past the materialized pool by cycling
         it (window ``wid`` reads pool slot ``wid % P``) — the sustained-
         throughput configuration benchmarks use.
+
+        ``state``/``first_window`` resume a run from a checkpointed
+        :class:`~repro.runtime.state.RuntimeState` carry: window ids start
+        at ``first_window`` (default ``state.window_id`` — the cursor a
+        checkpoint froze) so RNG keys, pool slots and controller EWMAs
+        continue exactly where the saved run stopped; the result dict's
+        ``final_state`` holds the end-of-run carry for the next checkpoint.
+        Resuming is bit-for-bit: a full run equals any split of it
+        (tests/test_ckpt.py).
         """
         single = self.topology is None
         if single:
@@ -214,10 +224,16 @@ class ScanRuntime:
 
         static_exec = self._static_exec(k, n)
         eq = (static_exec[0] if single else self.ctrl.equal_share)
-        state = init_state(self.n_sites, k, float(eq))
+        if state is None:
+            state = init_state(self.n_sites, k, float(eq))
+            w0 = int(first_window) if first_window is not None else 0
+        else:
+            w0 = (int(first_window) if first_window is not None
+                  else int(np.asarray(state.window_id)))
+            state = jax.tree.map(jnp.asarray, state)
         fn = self._scan_fn(static_exec)
         pool = jnp.asarray(pool_np)
-        wids = jnp.arange(T, dtype=jnp.int32)
+        wids = jnp.arange(w0, w0 + T, dtype=jnp.int32)
 
         t0 = time.perf_counter()
         if self.mode == "scan":
@@ -236,7 +252,7 @@ class ScanRuntime:
 
         if self.collect == "payloads":
             est, tru, bytes_site, cost_site = self._replay(ys, pool_np, T,
-                                                           windows)
+                                                           windows, w0=w0)
         else:
             est = {q: np.asarray(ys["est"][q], np.float64)
                    for q in self.query_names}
@@ -249,6 +265,7 @@ class ScanRuntime:
                 tru = {q: v[:, 0] for q, v in tru.items()}
 
         extras = {
+            "final_state": state,
             "scan_seconds": scan_seconds,
             "windows_per_sec": T / max(scan_seconds, 1e-9),
             "mode": self.mode,
@@ -266,9 +283,13 @@ class ScanRuntime:
                                   state, T, k, n, scan_seconds, extras)
 
     # ------------------------------------------------------------- results
-    def _replay(self, ys, pool_np, T, windows):
+    def _replay(self, ys, pool_np, T, windows, w0: int = 0):
         """Host replay of the collected payloads through the event path's
-        own assemble/reconstruct/query code — the bitwise report mode."""
+        own assemble/reconstruct/query code — the bitwise report mode.
+
+        ``w0`` is the first window id of a resumed run: output row ``t``
+        holds window ``w0 + t``, which read pool slot ``(w0 + t) % P``.
+        """
         from repro.core.reconstruct import reconstruct_window
         from repro.planning.engine import assemble_payload
         E, k = self.n_sites, pool_np.shape[2]
@@ -281,11 +302,12 @@ class ScanRuntime:
         samples = ys["samples"]
         for t in range(T):
             plan_t = {f: ys[f][t] for f in PAYLOAD_PLAN_FIELDS}
-            vals = pool_np[t % P]
+            vals = pool_np[(w0 + t) % P]
             for s in range(E):
                 real = [samples[t, s, i, :int(plan_t["n_real"][s, i])]
                         for i in range(k)]
-                payload = assemble_payload(self.spec, plan_t, s, t, real)
+                payload = assemble_payload(self.spec, plan_t, s, w0 + t,
+                                           real)
                 nb = payload.wan_bytes()
                 bytes_site[s] += nb
                 cost_site[s] += nb * self._cost[s]
@@ -293,7 +315,7 @@ class ScanRuntime:
                 if self.topology is None:
                     # event oracle computes truth from the original window
                     # values (possibly f64), not the f32 device pool
-                    w = windows[t % P]
+                    w = windows[(w0 + t) % P]
                     true_rows = [np.asarray(w.values[i, :int(w.counts[i])])
                                  for i in range(k)]
                 else:
@@ -321,6 +343,7 @@ class ScanRuntime:
             "full_bytes": T * k * n * 4,
             "plan_seconds": scan_seconds,
             "gaps": 0, "revisions": 0, "late_drops": 0, "duplicates": 0,
+            "retransmits": 0,
             "window_age_ms": ages,
             "revised_windows": np.zeros(T, bool),
             "freshness_ms": freshness_percentiles(ages),

@@ -87,10 +87,24 @@ class AsyncTransport(Transport):
     bytes takes ``B / bandwidth`` ms to get onto the wire before propagation
     latency starts.  ``None`` (the default) keeps transmission instantaneous
     — delivery times are bit-for-bit the pre-bandwidth schedule.
+
+    ``retransmit_timeout_ms`` + ``max_retries`` arm retransmit-on-timeout:
+    attempt ``a`` (0-based) of a window fires at ``now + a * timeout``, and
+    a retry fires only if no earlier copy of the window has been *delivered*
+    by its timer (instant-ACK model — the edge learns of a delivery the
+    moment it lands, so a copy still in flight past the timer triggers a
+    premature retry and a duplicate delivery, which the cloud's reorder
+    buffer absorbs idempotently).  Every attempt re-rolls the shared drop
+    RNG and, when transmitted, draws its own jitter; bytes/cost count per
+    transmitted copy.  With the default (``None``/0) the send path is
+    bit-for-bit the fire-and-forget link.
     """
 
     jitter_ms: float = 0.0
     bandwidth_bytes_per_ms: Optional[float] = None
+    retransmit_timeout_ms: Optional[float] = None
+    max_retries: int = 0
+    retransmits: int = 0               # retry attempts fired (not deliveries)
 
     def __post_init__(self):
         super().__post_init__()
@@ -111,17 +125,31 @@ class AsyncTransport(Transport):
 
     def send(self, payload: EdgePayload,
              now_ms: float = 0.0) -> Optional[EdgePayload]:
-        sent = Transport.send(self, payload)
-        if sent is None:                       # dropped: no delivery event
-            return None
-        delay = self.latency_ms
-        if self.bandwidth_bytes_per_ms is not None:
-            delay += sent.wan_bytes() / self.bandwidth_bytes_per_ms
-        if self.jitter_ms > 0.0:
-            delay += float(self._jitter_rng.uniform(0.0, self.jitter_ms))
-        self._queue.push(now_ms + delay, self._seq, sent)
-        self._seq += 1
-        return sent
+        attempts = 1
+        if self.retransmit_timeout_ms is not None and self.max_retries > 0:
+            attempts += self.max_retries
+        first = None
+        earliest = math.inf                    # earliest delivery so far
+        for a in range(attempts):
+            t_a = now_ms + a * (self.retransmit_timeout_ms or 0.0)
+            if a > 0:
+                if earliest <= t_a:            # instant-ACK beat the timer
+                    break
+                self.retransmits += 1
+            sent = Transport.send(self, payload)
+            if sent is None:                   # dropped: no delivery event
+                continue
+            delay = self.latency_ms
+            if self.bandwidth_bytes_per_ms is not None:
+                delay += sent.wan_bytes() / self.bandwidth_bytes_per_ms
+            if self.jitter_ms > 0.0:
+                delay += float(self._jitter_rng.uniform(0.0, self.jitter_ms))
+            self._queue.push(t_a + delay, self._seq, sent)
+            self._seq += 1
+            earliest = min(earliest, t_a + delay)
+            if first is None:
+                first = sent
+        return first
 
     def drain(self, until_ms: float) -> list[DeliveryEvent]:
         """All deliveries due by ``until_ms``, in (time, send-order)."""

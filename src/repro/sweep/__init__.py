@@ -1,0 +1,28 @@
+"""Golden-report sweep harness (``python -m repro.sweep``).
+
+Runs every committed scenario in ``tests/goldens/scenarios/`` through
+:class:`repro.api.Experiment`, serializes each
+:class:`~repro.api.experiment.RunReport` into a stable tolerance-classed
+JSON (``repro.sweep.report``), diffs it against the committed golden in
+``tests/goldens/reports/`` (``repro.sweep.diff``), and gates the tracked
+``BENCH_throughput.json`` perf artifact against committed floors —
+one command that answers "did this PR change any number?".
+
+See docs/sweep.md for the golden format, the tolerance classes, the
+update workflow and the perf-floor policy.
+"""
+from repro.sweep.diff import (Drift, TOLERANCE_CLASSES, diff_reports,
+                              format_drift_table)
+from repro.sweep.report import REPORT_SCHEMA_VERSION, serialize_report
+from repro.sweep.runner import (SweepScenario, check_perf, check_scenarios,
+                                load_scenario_file, load_scenarios,
+                                run_scenario, run_sweep, update_floors,
+                                update_goldens)
+
+__all__ = [
+    "Drift", "TOLERANCE_CLASSES", "diff_reports", "format_drift_table",
+    "REPORT_SCHEMA_VERSION", "serialize_report",
+    "SweepScenario", "check_perf", "check_scenarios", "load_scenario_file",
+    "load_scenarios", "run_scenario", "run_sweep", "update_floors",
+    "update_goldens",
+]

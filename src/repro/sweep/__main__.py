@@ -1,0 +1,76 @@
+"""``python -m repro.sweep`` — the one command that answers
+"did this PR change any number?".
+
+    python -m repro.sweep --check                 # full golden + perf gate
+    python -m repro.sweep --check --filter smoke  # CI fast path (tag match)
+    python -m repro.sweep --update                # regenerate goldens
+    python -m repro.sweep --update --floors       # ...and re-derive floors
+    python -m repro.sweep --lint                  # scenario files only
+    python -m repro.sweep --list                  # enumerate scenarios
+
+Exit codes: 0 clean, 1 drift (table printed), 2 usage (bad filter).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from repro.sweep import runner
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.sweep",
+        description="Golden-report sweep: run committed scenarios and diff "
+                    "every number against committed goldens + perf floors.")
+    mode = p.add_mutually_exclusive_group()
+    mode.add_argument("--check", action="store_const", dest="mode",
+                      const="check",
+                      help="run scenarios, diff vs goldens, gate perf "
+                           "floors (default)")
+    mode.add_argument("--update", action="store_const", dest="mode",
+                      const="update",
+                      help="rewrite goldens from current behaviour (with "
+                           "no --filter also refreshes perf floors)")
+    mode.add_argument("--lint", action="store_const", dest="mode",
+                      const="lint",
+                      help="load every scenario file (registry-validates "
+                           "all named components) and exit")
+    mode.add_argument("--list", action="store_const", dest="mode",
+                      const="list", help="enumerate committed scenarios")
+    p.set_defaults(mode="check")
+    p.add_argument("--filter", metavar="PAT", default=None,
+                   help="only scenarios whose name contains PAT or whose "
+                        "tags include PAT (e.g. 'smoke', 'fleet', 'scan')")
+    p.add_argument("--no-perf", action="store_true",
+                   help="skip the BENCH_throughput.json perf-floor gate")
+    p.add_argument("--floors", action="store_true",
+                   help="with --update: re-derive perf floors even when a "
+                        "--filter is set")
+    p.add_argument("--scenario-dir", type=Path, default=runner.SCENARIO_DIR,
+                   help=argparse.SUPPRESS)
+    p.add_argument("--golden-dir", type=Path, default=runner.GOLDEN_DIR,
+                   help=argparse.SUPPRESS)
+    p.add_argument("--bench", type=Path, default=runner.BENCH_PATH,
+                   help=argparse.SUPPRESS)
+    p.add_argument("--floors-path", type=Path, default=runner.FLOORS_PATH,
+                   help=argparse.SUPPRESS)
+    return p
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    code = runner.run_sweep(
+        mode=args.mode, pattern=args.filter,
+        scenario_dir=args.scenario_dir, golden_dir=args.golden_dir,
+        bench_path=args.bench, floors_path=args.floors_path,
+        perf=not args.no_perf)
+    if args.mode == "update" and args.floors and args.filter is not None \
+            and not args.no_perf:
+        runner.update_floors(args.bench, args.floors_path)
+    return code
+
+
+if __name__ == "__main__":
+    sys.exit(main())

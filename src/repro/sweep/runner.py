@@ -1,0 +1,239 @@
+"""The sweep runner: committed scenarios -> reports -> golden diffs.
+
+Layout (all committed):
+
+    tests/goldens/scenarios/<name>.json   one sweep scenario each:
+        {"name": ..., "tolerance": "exact"|"ulp"|"f32",
+         "tags": ["smoke", ...], "scenario": {<ScenarioConfig.to_dict()>}}
+    tests/goldens/reports/<name>.json     the golden serialized RunReport
+    tests/goldens/perf_floors.json        windows/sec floors for the
+                                          tracked BENCH_throughput.json
+
+Loading a scenario file *is* its validation: the embedded dict goes
+through ``ScenarioConfig.from_dict``, so a scenario naming an
+unregistered solver/model/dataset/query fails with the registry's
+alternatives listed — the CI lint stage (``python -m repro.sweep
+--lint``) is exactly a load of every file.
+
+The perf gate never runs the benchmark: it reads the *committed*
+``BENCH_throughput.json`` against the committed floors, so a PR that
+refreshes the artifact with slower numbers fails the sweep the same way
+an accuracy drift does.  Floor policy (docs/sweep.md): floors are
+``safety_factor``x the scan rows measured at floor-update time —
+machine-load headroom without letting a real regression (the scan
+runtime dropping toward event-loop speed) through.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import Optional
+
+from repro.sweep.diff import (Drift, TOLERANCE_CLASSES, diff_reports,
+                              format_drift_table)
+from repro.sweep.report import serialize_report
+
+REPO_ROOT = Path(__file__).resolve().parents[3]
+SCENARIO_DIR = REPO_ROOT / "tests" / "goldens" / "scenarios"
+GOLDEN_DIR = REPO_ROOT / "tests" / "goldens" / "reports"
+BENCH_PATH = REPO_ROOT / "BENCH_throughput.json"
+FLOORS_PATH = REPO_ROOT / "tests" / "goldens" / "perf_floors.json"
+
+FLOORS_SCHEMA_VERSION = 1
+DEFAULT_SAFETY_FACTOR = 0.4
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepScenario:
+    """One committed scenario file, config already registry-validated."""
+
+    name: str
+    tolerance: str
+    tags: tuple
+    config: "ScenarioConfig"
+    path: Path
+
+    def matches(self, pattern: Optional[str]) -> bool:
+        if not pattern:
+            return True
+        return pattern in self.name or pattern in self.tags
+
+
+def load_scenario_file(path: Path) -> SweepScenario:
+    from repro.api import ScenarioConfig
+    d = json.loads(Path(path).read_text())
+    for field in ("name", "tolerance", "scenario"):
+        if field not in d:
+            raise ValueError(f"{path}: scenario file missing {field!r}")
+    if d["name"] != Path(path).stem:
+        raise ValueError(f"{path}: name {d['name']!r} != filename stem")
+    if d["tolerance"] not in TOLERANCE_CLASSES:
+        raise ValueError(f"{path}: unknown tolerance {d['tolerance']!r}; "
+                         f"known: {sorted(TOLERANCE_CLASSES)}")
+    cfg = ScenarioConfig.from_dict(d["scenario"])   # registry validation
+    return SweepScenario(name=d["name"], tolerance=d["tolerance"],
+                         tags=tuple(d.get("tags", ())), config=cfg,
+                         path=Path(path))
+
+
+def load_scenarios(directory: Path = SCENARIO_DIR) -> list[SweepScenario]:
+    """Every scenario file, sorted by name; raises on the first bad one."""
+    files = sorted(Path(directory).glob("*.json"))
+    if not files:
+        raise FileNotFoundError(f"no scenario files in {directory}")
+    return [load_scenario_file(f) for f in files]
+
+
+def run_scenario(s: SweepScenario) -> dict:
+    """Execute one scenario and serialize its RunReport."""
+    from repro.api import Experiment
+    report = Experiment.from_scenario(s.config).run()
+    return serialize_report(report, name=s.name, tolerance=s.tolerance)
+
+
+def golden_path(s: SweepScenario, golden_dir: Path = GOLDEN_DIR) -> Path:
+    return Path(golden_dir) / f"{s.name}.json"
+
+
+def write_golden(payload: dict, path: Path) -> None:
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(payload, indent=1, sort_keys=True) + "\n")
+
+
+def check_scenarios(scenarios: list[SweepScenario],
+                    golden_dir: Path = GOLDEN_DIR,
+                    log=print) -> list[Drift]:
+    """Run every scenario and diff against its committed golden."""
+    drifts = []
+    for s in scenarios:
+        gp = golden_path(s, golden_dir)
+        if not gp.exists():
+            drifts.append(Drift(s.name, "golden", "<missing file>",
+                                str(gp), "presence"))
+            log(f"  {s.name:<34} MISSING GOLDEN")
+            continue
+        golden = json.loads(gp.read_text())
+        current = run_scenario(s)
+        d = diff_reports(golden, current)
+        drifts += d
+        log(f"  {s.name:<34} {'ok' if not d else f'{len(d)} drift(s)'}"
+            f"  [{s.tolerance}]")
+    return drifts
+
+
+def update_goldens(scenarios: list[SweepScenario],
+                   golden_dir: Path = GOLDEN_DIR, log=print) -> None:
+    for s in scenarios:
+        payload = run_scenario(s)
+        write_golden(payload, golden_path(s, golden_dir))
+        log(f"  {s.name:<34} updated  [{s.tolerance}]")
+
+
+# --------------------------------------------------------------- perf gate
+
+def _read_bench(path: Path) -> dict:
+    """Schema-validated bench artifact via benchmarks.common, which lives
+    at the repo root (not under src/) — resolvable from any cwd."""
+    try:
+        from benchmarks.common import read_bench_json
+    except ImportError:
+        import sys
+        sys.path.insert(0, str(REPO_ROOT))
+        from benchmarks.common import read_bench_json
+    return read_bench_json(path)
+
+
+def check_perf(bench_path: Path = BENCH_PATH,
+               floors_path: Path = FLOORS_PATH, log=print) -> list[Drift]:
+    """Committed perf artifact vs committed floors; no benchmark run."""
+    floors = json.loads(Path(floors_path).read_text())
+    if floors.get("schema_version") != FLOORS_SCHEMA_VERSION:
+        raise ValueError(f"{floors_path}: schema_version "
+                         f"{floors.get('schema_version')!r} != "
+                         f"{FLOORS_SCHEMA_VERSION}")
+    payload = _read_bench(bench_path)
+    rows = {(r["scenario"], r["engine"]): r for r in payload["rows"]}
+    drifts = []
+    for fl in floors["floors"]:
+        key = (fl["scenario"], fl["engine"])
+        label = f"{fl['scenario']}/{fl['engine']}"
+        row = rows.get(key)
+        if row is None:
+            drifts.append(Drift("perf", f"{label}:row", "present",
+                                "<missing>", "presence"))
+            log(f"  perf {label:<29} MISSING ROW")
+            continue
+        wps, floor = float(row["windows_per_sec"]), float(
+            fl["windows_per_sec_min"])
+        ok = wps >= floor
+        if not ok:
+            drifts.append(Drift("perf", f"{label}:windows_per_sec",
+                                f">={floor:.1f}", f"{wps:.1f}", "floor"))
+        log(f"  perf {label:<29} {wps:8.1f} win/s vs floor {floor:8.1f}"
+            f"  {'ok' if ok else 'REGRESSED'}")
+    return drifts
+
+
+def update_floors(bench_path: Path = BENCH_PATH,
+                  floors_path: Path = FLOORS_PATH,
+                  safety_factor: float = DEFAULT_SAFETY_FACTOR,
+                  log=print) -> dict:
+    """Re-derive floors from the committed artifact's scan rows."""
+    payload = _read_bench(bench_path)
+    floors = [{"scenario": r["scenario"], "engine": r["engine"],
+               "windows_per_sec_min": round(
+                   safety_factor * float(r["windows_per_sec"]), 2)}
+              for r in payload["rows"] if r["engine"] == "scan"]
+    out = {"schema_version": FLOORS_SCHEMA_VERSION,
+           "benchmark": payload["benchmark"],
+           "safety_factor": safety_factor,
+           "floors": sorted(floors, key=lambda f: (f["scenario"],
+                                                   f["engine"]))}
+    Path(floors_path).parent.mkdir(parents=True, exist_ok=True)
+    Path(floors_path).write_text(json.dumps(out, indent=1, sort_keys=True)
+                                 + "\n")
+    log(f"  perf floors: {len(floors)} scan row(s) at "
+        f"{safety_factor}x -> {floors_path}")
+    return out
+
+
+# -------------------------------------------------------------- one entry
+
+def run_sweep(*, mode: str = "check", pattern: Optional[str] = None,
+              scenario_dir: Path = SCENARIO_DIR,
+              golden_dir: Path = GOLDEN_DIR,
+              bench_path: Path = BENCH_PATH,
+              floors_path: Path = FLOORS_PATH,
+              perf: bool = True, log=print) -> int:
+    """The CLI body; returns the process exit code (0 ok, 1 drift)."""
+    scenarios = load_scenarios(scenario_dir)    # loading == lint
+    selected = [s for s in scenarios if s.matches(pattern)]
+    if mode == "lint":
+        log(f"sweep lint OK: {len(scenarios)} scenario file(s) load and "
+            f"name only registered components")
+        return 0
+    if mode == "list":
+        for s in scenarios:
+            mark = "*" if s.matches(pattern) else " "
+            log(f" {mark} {s.name:<34} [{s.tolerance}] "
+                f"tags={','.join(s.tags) or '-'}")
+        return 0
+    if not selected:
+        log(f"no scenario matches filter {pattern!r}")
+        return 2
+    if mode == "update":
+        update_goldens(selected, golden_dir, log=log)
+        if pattern is None and perf:
+            update_floors(bench_path, floors_path, log=log)
+        return 0
+
+    drifts = check_scenarios(selected, golden_dir, log=log)
+    if perf:
+        drifts += check_perf(bench_path, floors_path, log=log)
+    if drifts:
+        log(format_drift_table(drifts))
+        return 1
+    log(f"sweep OK: {len(selected)} scenario(s)"
+        + (" + perf floors" if perf else "") + ", no number changed")
+    return 0

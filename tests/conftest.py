@@ -65,7 +65,8 @@ def run_matrix(values, window, budget_fraction, method, cfg=None,
                drop_prob=0.0, straggler_drop=None,
                query_names=("AVG", "VAR", "MIN", "MAX"),
                latency_ms=0.0, jitter_ms=0.0, window_period_ms=1000.0,
-               staleness_deadline_ms=None):
+               staleness_deadline_ms=None, retransmit_timeout_ms=None,
+               max_retries=0):
     """One in-memory (k, T) matrix through the single-edge runtime.
 
     Test-local stand-in for the removed ``run_experiment`` shim: builds a
@@ -85,7 +86,9 @@ def run_matrix(values, window, budget_fraction, method, cfg=None,
                       straggler_drop=straggler_drop),
         cloud=CloudNode(query_names=query_names),
         transport=AsyncTransport(drop_prob=drop_prob, seed=cfg.seed,
-                                 latency_ms=latency_ms, jitter_ms=jitter_ms),
+                                 latency_ms=latency_ms, jitter_ms=jitter_ms,
+                                 retransmit_timeout_ms=retransmit_timeout_ms,
+                                 max_retries=max_retries),
         window_period_ms=window_period_ms,
         staleness_deadline_ms=staleness_deadline_ms,
     )

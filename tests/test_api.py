@@ -19,12 +19,14 @@ import warnings
 
 import numpy as np
 import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
 
 from conftest import run_matrix
-from repro.api import (BASELINES, ControllerSpec, DataSpec, EPSILON_POLICIES,
-                       Experiment, MODELS, QUERIES, Registry, RunReport,
-                       SOLVERS, ScenarioConfig, TopologySpec, TransportSpec,
-                       UnknownComponentError)
+from repro.api import (BASELINES, ControllerSpec, DataSpec, DEPENDENCE,
+                       EPSILON_POLICIES, Experiment, MODELS, QUERIES,
+                       Registry, RunReport, SOLVERS, ScenarioConfig,
+                       TopologySpec, TransportSpec, UnknownComponentError)
 from repro.api.experiment import FleetRuntime, SingleEdgeRuntime
 from repro.core.planner import plan_with_baseline
 from repro.core.types import PlannerConfig
@@ -161,6 +163,96 @@ def test_scenario_json_round_trip_fleet():
     cfg2 = ScenarioConfig.from_json(cfg.to_json())
     assert cfg2 == cfg
     assert cfg2.is_fleet and cfg2.controller.link_cost_aware
+
+
+# -------------------------------------------- property-based serialization
+#
+# Arbitrary *registry-valid* scenarios must survive the JSON round trip with
+# dataclass equality and key a dict hash-stably (the sweep harness keys its
+# golden cache on exactly this).  Strategies stick to plain combinators so
+# the conftest fallback stub (no hypothesis installed -> runtime skip) can
+# decorate them; CI installs the real package and runs them for real.
+
+_RETRANSMIT = st.sampled_from([(None, 0), (50.0, 1), (250.0, 3)])
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    dataset=st.sampled_from(["smartcity", "turbine", "mvn", "home"]),
+    n_points=st.integers(64, 4096),
+    window=st.integers(16, 512),
+    seed=st.integers(0, 2**31 - 1),
+    method=st.sampled_from(["model", "linear", "cubic", "mean", "multi",
+                            "srs", "approx_iot", "s_voila", "neyman_cost"]),
+    budget_fraction=st.floats(0.05, 0.9, allow_nan=False),
+    solver=st.sampled_from(("closed_form", "ipm", "slsqp")),
+    model=st.sampled_from(("linear", "cubic", "mean", "multi")),
+    policy=st.sampled_from(("k_se", "alpha", "exact_mse")),
+    dependence=st.sampled_from(("pearson", "spearman")),
+    iid_mode=st.sampled_from(("none", "iid", "m_dependence", "thinning")),
+    queries=st.lists(st.sampled_from(("AVG", "VAR", "MIN", "MAX", "MEDIAN")),
+                     min_size=1, max_size=4),
+    latency=st.floats(0.0, 2000.0, allow_nan=False),
+    jitter=st.floats(0.0, 500.0, allow_nan=False),
+    drop=st.floats(0.0, 0.9, allow_nan=False),
+    retransmit=_RETRANSMIT,
+)
+def test_property_scenario_round_trips(dataset, n_points, window, seed,
+                                       method, budget_fraction, solver,
+                                       model, policy, dependence, iid_mode,
+                                       queries, latency, jitter, drop,
+                                       retransmit):
+    timeout, retries = retransmit
+    cfg = ScenarioConfig(
+        data=DataSpec(dataset=dataset, n_points=n_points, window=window,
+                      seed=seed),
+        method=method, budget_fraction=budget_fraction,
+        planner=PlannerConfig(solver=solver, model=model,
+                              epsilon_policy=policy, dependence=dependence,
+                              iid_mode=iid_mode, seed=seed),
+        transport=TransportSpec(drop_prob=drop, latency_ms=latency,
+                                jitter_ms=jitter,
+                                retransmit_timeout_ms=timeout,
+                                max_retries=retries),
+        queries=tuple(queries))
+    assert ScenarioConfig.from_json(cfg.to_json()) == cfg
+    assert ScenarioConfig.from_dict(cfg.to_dict()) == cfg
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    shape=st.sampled_from([(1, 2), (2, 2), (2, 3), (3, 1)]),
+    seed=st.integers(0, 2**16),
+    mode=st.sampled_from(("rebalance", "static")),
+    signal=st.sampled_from(("obs_err", "pred_err", "max_err")),
+    ewma=st.floats(0.05, 0.95, allow_nan=False),
+    cost_aware=st.booleans(),
+    split=st.one_of(st.just(None), st.floats(0.1, 0.9, allow_nan=False)),
+    strength=st.lists(st.floats(0.0, 1.0, allow_nan=False), min_size=2,
+                      max_size=2),
+)
+def test_property_fleet_scenario_hash_stably_keys_dict(shape, seed, mode,
+                                                       signal, ewma,
+                                                       cost_aware, split,
+                                                       strength):
+    regions, per = shape
+    cfg = ScenarioConfig(
+        data=DataSpec(dataset="fleet", n_points=256, window=64, seed=seed,
+                      options={"k": 4, "region_strength":
+                               (list(strength) + [0.5, 0.5])[:regions]}),
+        planner=PlannerConfig(solver="closed_form", seed=seed),
+        topology=TopologySpec(n_regions=regions, sites_per_region=per,
+                              seed=seed),
+        controller=ControllerSpec(mode=mode, demand_signal=signal,
+                                  ewma=ewma, link_cost_aware=cost_aware,
+                                  query_split=split),
+        queries=("AVG", "VAR"))
+    clone = ScenarioConfig.from_json(cfg.to_json())
+    assert clone == cfg
+    assert hash(clone) == hash(cfg)
+    table = {cfg: "golden"}              # the sweep keys reports this way
+    assert table[clone] == "golden"
+    assert len({cfg, clone}) == 1
 
 
 # ----------------------------------------- unified runtime: E=1 equivalence

@@ -322,3 +322,90 @@ def test_fleet_heterogeneous_latency_revises_and_reports_freshness():
     assert r["fleet_nrmse"]["AVG"] == r0["fleet_nrmse"]["AVG"]
     assert r["fleet_nrmse_at_query"]["AVG"] >= r["fleet_nrmse"]["AVG"]
     assert r["wan_bytes"] == r0["wan_bytes"]
+
+
+# ------------------------------------------------- retransmit-on-timeout
+
+def test_retransmit_unarmed_is_bitwise_legacy_schedule():
+    """Armed-but-never-needed and unarmed transports produce the identical
+    delivery schedule: with no drops and latency below the timeout every
+    first copy is ACKed before the retry timer fires."""
+    def schedule(**kw):
+        t = AsyncTransport(seed=3, latency_ms=50.0, jitter_ms=40.0, **kw)
+        for wid in range(30):
+            t.send(_payload_at(seed=12, wid=wid, sent_at_ms=wid * 100.0),
+                   now_ms=wid * 100.0)
+        return ([(ev.at_ms, ev.payload.window_id)
+                 for ev in t.drain(math.inf)], t.bytes_sent, t.retransmits)
+
+    plain, armed = schedule(), schedule(retransmit_timeout_ms=200.0,
+                                        max_retries=3)
+    assert armed[0] == plain[0]
+    assert armed[1] == plain[1]
+    assert plain[2] == 0 and armed[2] == 0
+
+
+def test_retransmit_rerolls_drops_until_delivered_or_exhausted():
+    p = _payload_at(seed=13, wid=0, sent_at_ms=0.0)
+    # certain drop: every attempt fires, every attempt is lost
+    t = AsyncTransport(seed=5, drop_prob=1.0, retransmit_timeout_ms=100.0,
+                       max_retries=3)
+    assert t.send(p, now_ms=0.0) is None
+    assert t.retransmits == 3 and t.in_flight == 0
+    assert t.payloads_sent == 4 and t.payloads_dropped == 4
+    # certain delivery: the instant ACK beats every retry timer
+    t2 = AsyncTransport(seed=5, drop_prob=0.0, latency_ms=50.0,
+                        retransmit_timeout_ms=100.0, max_retries=3)
+    assert t2.send(p, now_ms=0.0) is not None
+    assert t2.retransmits == 0 and t2.in_flight == 1
+
+
+def test_retransmit_recovers_dropped_windows_end_to_end():
+    vals, _ = smartcity_like(2048, seed=8)
+    kw = dict(query_names=("AVG",), drop_prob=0.5,
+              cfg=PlannerConfig(seed=21))
+    r0 = run_matrix(vals, 256, 0.3, "model", **kw)
+    r = run_matrix(vals, 256, 0.3, "model", retransmit_timeout_ms=100.0,
+                   max_retries=4, **kw)
+    assert r0["gaps"] > 0                     # the fault is real
+    assert r["retransmits"] > 0
+    assert r["gaps"] < r0["gaps"]             # retries filled holes
+    assert r["wan_bytes"] >= r0["wan_bytes"]  # recovered copies cost bytes
+    # fewer gaps -> the revised table cannot be worse where both answered
+    assert np.isfinite(r["nrmse"]["AVG"]).sum() >= \
+        np.isfinite(r0["nrmse"]["AVG"]).sum()
+
+
+def test_premature_retransmits_are_idempotent_duplicates():
+    """Latency above the timeout: the first copy is still in flight when
+    every retry timer fires, so each window is delivered multiple times;
+    the reorder buffer absorbs the duplicates and the answers match the
+    single-copy run exactly."""
+    vals, _ = smartcity_like(1024, seed=9)
+    kw = dict(query_names=("AVG",), latency_ms=300.0,
+              cfg=PlannerConfig(seed=22))
+    r0 = run_matrix(vals, 256, 0.3, "model", **kw)
+    r = run_matrix(vals, 256, 0.3, "model", retransmit_timeout_ms=100.0,
+                   max_retries=2, **kw)
+    T = 1024 // 256
+    assert r["retransmits"] == 2 * T          # both timers beat the ACK
+    assert r["duplicates"] == 2 * T           # ... and land as duplicates
+    assert r["wan_bytes"] == 3 * r0["wan_bytes"]
+    np.testing.assert_array_equal(r["nrmse"]["AVG"], r0["nrmse"]["AVG"])
+    assert r["gaps"] == r0["gaps"] == 0
+
+
+def test_retransmit_deterministic_under_jitter():
+    vals, _ = smartcity_like(1024, seed=10)
+
+    def once():
+        return run_matrix(vals, 256, 0.3, "model", query_names=("AVG",),
+                          drop_prob=0.4, jitter_ms=400.0, latency_ms=200.0,
+                          retransmit_timeout_ms=150.0, max_retries=3,
+                          cfg=PlannerConfig(seed=23))
+
+    a, b = once(), once()
+    np.testing.assert_array_equal(a["nrmse"]["AVG"], b["nrmse"]["AVG"])
+    assert a["retransmits"] == b["retransmits"]
+    assert a["duplicates"] == b["duplicates"]
+    assert a["wan_bytes"] == b["wan_bytes"]

@@ -78,9 +78,9 @@ def _scan_run_with_plans(scenario, windows):
     stash = {}
     replay = exp.runtime._replay
 
-    def spy(ys, pool_np, T, wins):
+    def spy(ys, pool_np, T, wins, w0=0):
         stash["ys"] = ys
-        return replay(ys, pool_np, T, wins)
+        return replay(ys, pool_np, T, wins, w0=w0)
 
     exp.runtime._replay = spy
     return exp.run(windows), stash["ys"]

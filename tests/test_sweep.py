@@ -1,0 +1,232 @@
+"""Sweep harness: serializer stability, tolerance diffs, runner, perf gate."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.api import DataSpec, Experiment, ScenarioConfig
+from repro.core.types import PlannerConfig
+from repro.sweep import (REPORT_SCHEMA_VERSION, TOLERANCE_CLASSES,
+                         check_perf, diff_reports, format_drift_table,
+                         load_scenario_file, run_sweep, serialize_report,
+                         update_floors)
+from repro.sweep import runner as sweep_runner
+
+_QUIET = lambda *a, **k: None  # noqa: E731
+
+
+def _tiny_cfg(seed=2):
+    return ScenarioConfig(
+        data=DataSpec(dataset="smartcity", n_points=256, window=128,
+                      seed=seed),
+        budget_fraction=0.3, planner=PlannerConfig(seed=seed),
+        queries=("AVG", "VAR"))
+
+
+def _write_scenario(directory, name, tolerance="exact", tags=("smoke",),
+                    cfg=None):
+    directory.mkdir(parents=True, exist_ok=True)
+    payload = {"name": name, "tolerance": tolerance, "tags": list(tags),
+               "scenario": (cfg or _tiny_cfg()).to_dict()}
+    p = directory / f"{name}.json"
+    p.write_text(json.dumps(payload, indent=1, sort_keys=True) + "\n")
+    return p
+
+
+# ------------------------------------------------------------- serializer
+
+def test_serializer_is_deterministic():
+    """Two independent runs of the same scenario serialize identically —
+    the property the whole golden scheme rests on."""
+    cfg = _tiny_cfg()
+    a = serialize_report(Experiment.from_scenario(cfg).run(),
+                         name="t", tolerance="exact")
+    b = serialize_report(Experiment.from_scenario(cfg).run(),
+                         name="t", tolerance="exact")
+    assert a == b
+    assert a["schema_version"] == REPORT_SCHEMA_VERSION
+    assert all(isinstance(v, int) for v in a["counters"].values())
+    for digest in a["streams"].values():
+        assert set(digest) >= {"sha256", "shape", "kind", "nan_count"}
+    # wall-clock fields must never leak into a golden
+    flat = json.dumps(a)
+    assert "seconds" not in flat and "windows_per_sec" not in flat
+
+
+def test_array_digest_canonicalizes_dtype():
+    """f32 and f64 views of the same values hash identically (goldens are
+    platform/dtype stable); different values do not."""
+    from repro.sweep.report import _array_digest
+    x = np.array([1.0, 2.5, -3.0], dtype=np.float32)
+    assert (_array_digest(x)["sha256"]
+            == _array_digest(x.astype(np.float64))["sha256"])
+    assert (_array_digest(x)["sha256"]
+            != _array_digest(x + 1e-3)["sha256"])
+    d = _array_digest(np.array([np.nan, 1.0, 3.0]))
+    assert d["nan_count"] == 1 and d["mean"] == 2.0
+
+
+# ------------------------------------------------------------------- diff
+
+def _fake(tolerance="exact", nrmse=0.5, wan=100, sha="a" * 64, mean=1.0):
+    return {"schema_version": REPORT_SCHEMA_VERSION, "scenario": "fake",
+            "tolerance": tolerance,
+            "counters": {"wan_bytes": wan},
+            "floats": {"nrmse/AVG": nrmse},
+            "streams": {"budget_history": {
+                "shape": [4, 2], "kind": "float", "sha256": sha,
+                "nan_count": 0, "mean": mean, "min": 0.0, "max": 2.0}}}
+
+
+def test_diff_identical_is_clean():
+    assert diff_reports(_fake(), _fake()) == []
+
+
+def test_diff_counters_always_bitwise():
+    for tol in TOLERANCE_CLASSES:
+        d = diff_reports(_fake(tol), _fake(tol, wan=101))
+        assert len(d) == 1 and d[0].tolerance == "bitwise"
+        assert d[0].field == "counters:wan_bytes"
+
+
+def test_diff_float_tolerance_classes():
+    wiggle = 0.5 * (1 + 1e-10)          # inside ulp, outside exact
+    assert diff_reports(_fake("ulp"), _fake("ulp", nrmse=wiggle)) == []
+    d = diff_reports(_fake("exact"), _fake("exact", nrmse=wiggle))
+    assert [x.field for x in d] == ["floats:nrmse/AVG"]
+    big = 0.5 * 1.01                    # outside every class
+    assert diff_reports(_fake("f32"), _fake("f32", nrmse=big))
+
+
+def test_diff_stream_hash_fallback():
+    """Hash moved: exact class fails bitwise; float classes fall back to
+    the summary and only fail when the summary escapes tolerance."""
+    moved = _fake("exact", sha="b" * 64)
+    d = diff_reports(_fake("exact"), moved)
+    assert len(d) == 1 and d[0].tolerance == "bitwise"
+    assert diff_reports(_fake("ulp"), _fake("ulp", sha="b" * 64)) == []
+    d = diff_reports(_fake("ulp"), _fake("ulp", sha="b" * 64, mean=1.5))
+    assert [x.field for x in d] == ["streams:budget_history/mean"]
+
+
+def test_diff_presence_and_schema():
+    g, c = _fake(), _fake()
+    del c["floats"]["nrmse/AVG"]
+    c["counters"]["extra"] = 1
+    c["schema_version"] = 99
+    fields = {d.field for d in diff_reports(g, c)}
+    assert fields == {"schema_version", "counters:extra", "floats:nrmse/AVG"}
+
+
+def test_drift_table_is_readable():
+    d = diff_reports(_fake(), _fake(wan=105, nrmse=0.6))
+    table = format_drift_table(d)
+    assert "SWEEP DRIFT: 2 field(s) across 1 scenario(s)" in table
+    assert "counters:wan_bytes" in table and "+5" in table
+
+
+# -------------------------------------------------------- scenario loading
+
+def test_scenario_file_validation(tmp_path):
+    p = _write_scenario(tmp_path, "good")
+    s = load_scenario_file(p)
+    assert s.name == "good" and s.matches("smoke") and s.matches("goo")
+    assert not s.matches("fleet")
+
+    bad = json.loads(p.read_text())
+    bad["name"] = "other"
+    (tmp_path / "renamed.json").write_text(json.dumps(bad))
+    with pytest.raises(ValueError, match="filename stem"):
+        load_scenario_file(tmp_path / "renamed.json")
+
+    bad = json.loads(p.read_text())
+    bad["tolerance"] = "vibes"
+    p.write_text(json.dumps(bad))
+    with pytest.raises(ValueError, match="tolerance"):
+        load_scenario_file(p)
+
+
+def test_scenario_file_rejects_unregistered_components(tmp_path):
+    p = _write_scenario(tmp_path, "bad")
+    d = json.loads(p.read_text())
+    d["scenario"]["planner"]["solver"] = "gradient_descent"
+    p.write_text(json.dumps(d))
+    with pytest.raises(Exception, match="gradient_descent"):
+        load_scenario_file(p)
+
+
+# ------------------------------------------------------------------ runner
+
+def test_runner_update_check_drift_cycle(tmp_path):
+    """The full CLI life cycle against temp dirs: update -> clean check ->
+    perturbed golden -> nonzero exit with the drift in the log."""
+    scen, gold = tmp_path / "scenarios", tmp_path / "reports"
+    _write_scenario(scen, "tiny")
+    kw = dict(scenario_dir=scen, golden_dir=gold, perf=False, log=_QUIET)
+
+    assert run_sweep(mode="check", **kw) == 1          # golden missing
+    assert run_sweep(mode="update", **kw) == 0
+    assert run_sweep(mode="check", **kw) == 0
+    assert run_sweep(mode="check", pattern="nomatch", **kw) == 2
+    assert run_sweep(mode="lint", **kw) == 0
+
+    gp = gold / "tiny.json"
+    d = json.loads(gp.read_text())
+    d["counters"]["wan_bytes"] += 7
+    gp.write_text(json.dumps(d))
+    lines = []
+    assert run_sweep(mode="check", scenario_dir=scen, golden_dir=gold,
+                     perf=False, log=lines.append) == 1
+    out = "\n".join(lines)
+    assert "SWEEP DRIFT" in out and "counters:wan_bytes" in out
+
+
+# --------------------------------------------------------------- perf gate
+
+def test_perf_gate_floor_and_missing_row(tmp_path):
+    """Floors derive from the committed artifact; a floor above the
+    artifact's number or a row that vanished is a drift."""
+    floors_path = tmp_path / "floors.json"
+    update_floors(floors_path=floors_path, log=_QUIET)
+    assert check_perf(floors_path=floors_path, log=_QUIET) == []
+
+    d = json.loads(floors_path.read_text())
+    assert d["schema_version"] == sweep_runner.FLOORS_SCHEMA_VERSION
+    d["floors"][0]["windows_per_sec_min"] = 1e9
+    d["floors"].append({"scenario": "ghost", "engine": "scan",
+                        "windows_per_sec_min": 1.0})
+    floors_path.write_text(json.dumps(d))
+    drifts = check_perf(floors_path=floors_path, log=_QUIET)
+    assert {x.tolerance for x in drifts} == {"floor", "presence"}
+
+    d["schema_version"] = 99
+    floors_path.write_text(json.dumps(d))
+    with pytest.raises(ValueError, match="schema_version"):
+        check_perf(floors_path=floors_path, log=_QUIET)
+
+
+# ------------------------------------------------- the committed goldens
+
+def test_committed_scenarios_lint_and_cover_matrix():
+    """The committed suite stays ≥12 scenarios and keeps covering all
+    three planning engines and all three runtimes."""
+    scenarios = sweep_runner.load_scenarios()
+    assert len(scenarios) >= 12
+    engines = {s.config.planner.engine or "batched" for s in scenarios
+               if s.config.topology is not None}
+    assert engines >= {"host", "batched", "sharded"}
+    assert {s.config.runtime for s in scenarios} >= {"event", "scan",
+                                                     "scan_steps"}
+    assert sum("smoke" in s.tags for s in scenarios) >= 3
+    for s in scenarios:
+        assert sweep_runner.golden_path(s).exists(), s.name
+
+
+def test_committed_perf_floors_hold():
+    assert check_perf(log=_QUIET) == []
+
+
+@pytest.mark.slow
+def test_full_sweep_passes_on_committed_goldens():
+    """`python -m repro.sweep --check` is green at HEAD."""
+    assert run_sweep(mode="check", log=_QUIET) == 0
