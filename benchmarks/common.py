@@ -16,8 +16,9 @@ from pathlib import Path
 
 import numpy as np
 
-from repro.api import (ControllerSpec, DataSpec, Experiment, RunReport,
-                       ScenarioConfig, TopologySpec, TransportSpec)
+from repro.api import (AdaptiveSpec, ControllerSpec, DataSpec, Experiment,
+                       RunReport, ScenarioConfig, TopologySpec,
+                       TransportSpec)
 from repro.core.types import PlannerConfig
 
 REPO_ROOT = Path(__file__).resolve().parent.parent
@@ -213,6 +214,41 @@ SMOKE_SCENARIOS: list[ScenarioConfig] = [
                                          seed=1),
                    controller=ControllerSpec(demand_signal="max_err"),
                    queries=("AVG",)),
+    # adaptive re-planning (repro.adaptive): a "threshold"-gated event run
+    # over a mid-run correlation shift, and a "page_hinkley"-gated scan run
+    # — both detectors exercised by name for the registry-coverage check
+    # ("always"/"never" are covered by the parity tests in
+    # tests/test_adaptive.py)
+    ScenarioConfig(name="smoke/adaptive_threshold_event",
+                   data=DataSpec(dataset="fleet", n_points=512, window=64,
+                                 seed=2,
+                                 options={"k": 4,
+                                          "strength_schedule":
+                                              [[0, [0.9, 0.2]],
+                                               [4, [0.2, 0.9]]]}),
+                   planner=PlannerConfig(solver="closed_form", seed=2),
+                   topology=TopologySpec(n_regions=2, sites_per_region=3,
+                                         seed=2, latency_scale=0.0),
+                   controller=ControllerSpec(),
+                   queries=("AVG", "VAR"),
+                   adaptive=AdaptiveSpec(detector="threshold",
+                                         halflife=16.0, threshold=0.3)),
+    ScenarioConfig(name="smoke/adaptive_ph_scan",
+                   data=DataSpec(dataset="fleet", n_points=512, window=64,
+                                 seed=3,
+                                 options={"k": 4,
+                                          "strength_schedule":
+                                              [[0, [0.9, 0.2]],
+                                               [4, [0.2, 0.9]]]}),
+                   planner=PlannerConfig(solver="closed_form", seed=3),
+                   topology=TopologySpec(n_regions=2, sites_per_region=3,
+                                         seed=3, latency_scale=0.0),
+                   controller=ControllerSpec(),
+                   queries=("AVG", "VAR"), runtime="scan",
+                   adaptive=AdaptiveSpec(detector="page_hinkley",
+                                         halflife=12.0, ph_delta=0.02,
+                                         ph_lambda=0.3,
+                                         min_replan_interval=2)),
 ]
 
 

@@ -34,8 +34,8 @@ if __package__ in (None, ""):                       # `python benchmarks/...`
 
 from benchmarks.common import (REPO_ROOT, fmt, read_bench_json, timed,
                                write_bench_json)
-from repro.api import (ControllerSpec, DataSpec, Experiment, ScenarioConfig,
-                       TopologySpec)
+from repro.api import (AdaptiveSpec, ControllerSpec, DataSpec, Experiment,
+                       ScenarioConfig, TopologySpec)
 from repro.core.types import PlannerConfig
 
 BENCH_PATH = REPO_ROOT / "BENCH_throughput.json"
@@ -48,6 +48,26 @@ SCAN_WINDOWS = 1000
 # the event loop is host-bound: a handful of windows gives a stable
 # per-window cost without minutes of wall time at E=256
 EVENT_WINDOWS = {16: 16, 64: 8, 256: 4}
+
+# adaptive re-planning payoff (repro.adaptive): a drifting E=64 fleet where
+# the per-region coupling to the shared signal is re-shuffled three times;
+# the detector-gated run must cover the drift with few planner invocations.
+# The window spans one full diurnal cycle of the fleet generator so that
+# between drifts the per-window statistics are phase-stationary — the
+# benchmark then measures staleness from *correlation* drift, not from a
+# window length that aliases the daily cycle
+ADAPTIVE_E = 64
+ADAPTIVE_WINDOW = 288
+ADAPTIVE_WINDOWS = 48
+ADAPTIVE_SCHEDULE = [[0, [0.9, 0.7, 0.3, 0.1]],
+                     [12, [0.1, 0.9, 0.7, 0.3]],
+                     [24, [0.3, 0.1, 0.9, 0.7]],
+                     [36, [0.7, 0.3, 0.1, 0.9]]]
+# payoff bars pinned by run() and re-checked against the committed artifact
+# by run_smoke(): planner runs on <=25% of windows, accuracy within 10%
+# relative of plan-every-window
+ADAPTIVE_MAX_INVOCATION_FRAC = 0.25
+ADAPTIVE_MAX_REL_NRMSE = 0.10
 
 
 def _scenario(E: int, runtime: str) -> ScenarioConfig:
@@ -94,6 +114,59 @@ def _measure_event(E: int, n_windows: int) -> dict:
             "nrmse_avg": float(rep.nrmse["AVG"])}
 
 
+def _adaptive_scenario(spec: AdaptiveSpec) -> ScenarioConfig:
+    return ScenarioConfig(
+        name=f"adaptive/E{ADAPTIVE_E}",
+        data=DataSpec(dataset="fleet",
+                      n_points=ADAPTIVE_WINDOWS * ADAPTIVE_WINDOW,
+                      window=ADAPTIVE_WINDOW, seed=7,
+                      options={"k": K,
+                               "strength_schedule": ADAPTIVE_SCHEDULE}),
+        planner=PlannerConfig(solver="closed_form", dependence="pearson",
+                              seed=7),
+        topology=TopologySpec(n_regions=4,
+                              sites_per_region=ADAPTIVE_E // 4, seed=7,
+                              latency_scale=0.0),
+        # static budgets: with per-window rebalancing every cached plan is
+        # stale by construction, which would measure the controller, not
+        # the drift detector (both rows share this, the comparison is fair)
+        controller=ControllerSpec(),
+        queries=("AVG", "VAR"),
+        runtime="scan",
+        adaptive=spec)
+
+
+def _measure_adaptive(label: str, spec: AdaptiveSpec) -> dict:
+    exp = Experiment.from_scenario(_adaptive_scenario(spec))
+    exp.runtime.collect = "estimates"
+    windows = exp.make_windows()
+    exp.runtime.run(windows, n_windows=ADAPTIVE_WINDOWS)      # compile + warm
+    r = exp.runtime.run(windows, n_windows=ADAPTIVE_WINDOWS)  # steady-state
+    return {"scenario": f"adaptive/E{ADAPTIVE_E}/{label}", "engine": "scan",
+            "n_sites": ADAPTIVE_E, "n_windows": ADAPTIVE_WINDOWS,
+            "windows_per_sec": float(r["windows_per_sec"]),
+            "streams_per_sec": float(r["windows_per_sec"]) * ADAPTIVE_E * K,
+            "wan_bytes": int(r["wan_bytes"]),
+            "nrmse_avg": float(r["fleet_nrmse"]["AVG"]),
+            "planner_invocations": int(r["planner_invocations"]),
+            "plans_reused": int(r["plans_reused"])}
+
+
+def _check_adaptive_payoff(gated: dict, always: dict) -> None:
+    """The bars the adaptive rows must clear (fresh or committed)."""
+    budget = ADAPTIVE_MAX_INVOCATION_FRAC * gated["n_windows"]
+    assert gated["planner_invocations"] <= budget, (
+        f"detector-gated run must plan on <={budget:g} of "
+        f"{gated['n_windows']} windows, planned on "
+        f"{gated['planner_invocations']}")
+    assert always["planner_invocations"] == always["n_windows"], always
+    rel = (gated["nrmse_avg"] - always["nrmse_avg"]) / always["nrmse_avg"]
+    assert rel <= ADAPTIVE_MAX_REL_NRMSE, (
+        f"gated NRMSE {gated['nrmse_avg']:.4g} exceeds plan-every-window "
+        f"{always['nrmse_avg']:.4g} by {rel:.1%} "
+        f"(> {ADAPTIVE_MAX_REL_NRMSE:.0%})")
+
+
 def run() -> list[tuple[str, float, str]]:
     """Full bench: measure, refresh BENCH_throughput.json, return CSV rows."""
     csv_rows, bench_rows, speedups = [], [], {}
@@ -107,6 +180,22 @@ def run() -> list[tuple[str, float, str]]:
                          f"({fmt(speedups[E])}x event)"))
         csv_rows.append((f"throughput/E{E}/event", t_event,
                          f"{fmt(event['windows_per_sec'])} win/s"))
+    gated, t_gated = timed(
+        _measure_adaptive, "gated",
+        AdaptiveSpec(detector="threshold", halflife=12.0, threshold=0.25,
+                     min_replan_interval=2))
+    always, t_always = timed(_measure_adaptive, "always",
+                             AdaptiveSpec(detector="always"))
+    _check_adaptive_payoff(gated, always)
+    bench_rows += [gated, always]
+    csv_rows.append((f"adaptive/E{ADAPTIVE_E}/gated", t_gated,
+                     f"{gated['planner_invocations']}/{ADAPTIVE_WINDOWS} "
+                     f"plans, nrmse {fmt(gated['nrmse_avg'])} "
+                     f"({fmt(gated['windows_per_sec'])} win/s)"))
+    csv_rows.append((f"adaptive/E{ADAPTIVE_E}/always", t_always,
+                     f"{always['planner_invocations']}/{ADAPTIVE_WINDOWS} "
+                     f"plans, nrmse {fmt(always['nrmse_avg'])} "
+                     f"({fmt(always['windows_per_sec'])} win/s)"))
     write_bench_json(BENCH_PATH, bench_rows)
     best = max(speedups.values())
     assert best >= 10.0, (
@@ -120,6 +209,9 @@ def run_smoke() -> list[tuple[str, float, str]]:
     payload = read_bench_json(BENCH_PATH)
     engines = {r["engine"] for r in payload["rows"]}
     assert engines == {"scan", "event"}, engines
+    rows = {r["scenario"]: r for r in payload["rows"]}
+    _check_adaptive_payoff(rows[f"adaptive/E{ADAPTIVE_E}/gated"],
+                           rows[f"adaptive/E{ADAPTIVE_E}/always"])
     mini, us = timed(_measure_scan, 4, 32)
     assert np.isfinite(mini["nrmse_avg"]), mini
     assert mini["wan_bytes"] > 0, mini

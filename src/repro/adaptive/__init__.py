@@ -1,0 +1,31 @@
+"""Adaptive planning: online correlation tracking + re-plan-on-drift.
+
+The paper (and every runtime before this package) re-plans every window
+from that window's statistics.  This subsystem estimates the cross-stream
+correlation *online* (exponentially-weighted, jitted, batched over all E
+sites — :mod:`repro.adaptive.stats`), watches for drift away from the
+correlation the current plan assumed (:mod:`repro.adaptive.drift`, a
+``DRIFT_DETECTORS`` registry), and re-invokes the planning engine only
+when a detector fires (:mod:`repro.adaptive.policy`).  Wired through both
+runtimes via ``ScenarioConfig.adaptive``; absent spec = legacy
+plan-every-window, bit-for-bit.
+
+See ``docs/adaptive.md`` for the estimator math, the detector registry,
+the scan-carry layout, and the refusal list.
+"""
+from repro.adaptive.drift import det_init, detector_update
+from repro.adaptive.policy import (AdaptiveCarry, AdaptivePolicy,
+                                   AdaptiveSpec, GateState, gate_counters,
+                                   gate_init, gate_update,
+                                   make_adaptive_carry)
+from repro.adaptive.stats import (EWStats, ew_corr, ew_cov, ew_decay,
+                                  ew_from_dict, ew_init, ew_mean_var,
+                                  ew_to_dict, ew_update, window_sums)
+
+__all__ = [
+    "AdaptiveCarry", "AdaptivePolicy", "AdaptiveSpec", "EWStats",
+    "GateState", "det_init", "detector_update", "ew_corr", "ew_cov",
+    "ew_decay", "ew_from_dict", "ew_init", "ew_mean_var", "ew_to_dict",
+    "ew_update", "gate_counters", "gate_init", "gate_update",
+    "make_adaptive_carry", "window_sums",
+]

@@ -1,0 +1,112 @@
+"""Drift detectors: decide, per window, whether the cached plan is stale.
+
+A detector looks at one scalar ``dev`` per window — the maximum absolute
+deviation between the correlation the current plan was built from and the
+EW streaming estimate (off-diagonal entries, over all E sites) — and
+answers "has the plan's correlation assumption drifted?".  Detectors are
+registered in :data:`repro.api.registry.DRIFT_DETECTORS` so scenarios
+select them by name and CI's registry-coverage check keeps every entry
+exercised.
+
+Every detector shares one tiny state layout so the scan carry is uniform
+across choices:
+
+    accum  () f32   detector-specific accumulator (0 for the degenerates)
+    age    () i32   consecutive windows the detector has been "elevated"
+
+``age`` is what makes detection lag measurable: it counts how long the
+detector has seen evidence before actually firing, so when a fire happens
+``lag = age' - 1`` elevated windows preceded it (0 for an instant fire).
+The re-plan policy (:mod:`repro.adaptive.policy`) aggregates these lags
+into the ``detection_lag_windows`` report field.
+
+All update rules are pure jnp on scalars — safe inside ``lax.scan`` and
+trivially cheap next to the planning work they gate.  Dispatch is static
+(by name at trace time), never a traced switch.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+from repro.api.registry import DRIFT_DETECTORS
+from repro.core.types import Array
+
+
+def det_init() -> dict:
+    """Zero detector state (shared layout for every registered detector)."""
+    return {"accum": jnp.zeros((), jnp.float32),
+            "age": jnp.zeros((), jnp.int32)}
+
+
+def _aged(fire: Array, elevated: Array, age: Array) -> Tuple[Array, Array]:
+    """Advance the elevated-age counter and derive this fire's lag.
+
+    ``age`` increments while evidence persists (elevated) and resets when
+    it clears; a fire after ``age'`` elevated windows was preceded by
+    ``age' - 1`` windows of unheeded evidence — that difference is the lag.
+    """
+    age = jnp.where(elevated, age + 1, 0).astype(jnp.int32)
+    lag = jnp.maximum(age - 1, 0) * fire.astype(jnp.int32)
+    return age, lag
+
+
+@DRIFT_DETECTORS.register("threshold")
+def _threshold(state: dict, dev: Array, spec) -> Tuple[dict, Array, Array]:
+    """Fire as soon as the deviation exceeds ``spec.threshold``.
+
+    Memoryless in the decision (the EW estimator already smooths ``dev``),
+    but still tracks elevated age so a fire suppressed by the cooldown
+    shows up as lag once it lands.
+    """
+    fire = dev > spec.threshold
+    age, lag = _aged(fire, fire, state["age"])
+    return {"accum": jnp.where(fire, state["accum"] + dev, 0.0)
+            .astype(jnp.float32), "age": age}, fire, lag
+
+
+@DRIFT_DETECTORS.register("page_hinkley")
+def _page_hinkley(state: dict, dev: Array, spec) -> Tuple[dict, Array, Array]:
+    """Page–Hinkley / CUSUM-style accumulator.
+
+    Sums the per-window excess over a drift allowance ``ph_delta`` (resets
+    at zero from below, the one-sided CUSUM recursion) and fires when the
+    accumulated evidence passes ``ph_lambda``.  Robust to single noisy
+    windows that would trip a plain threshold; pays for it with detection
+    lag, which the elevated-age counter makes visible.
+    """
+    accum = jnp.maximum(state["accum"] + dev - spec.ph_delta, 0.0)
+    accum = accum.astype(jnp.float32)
+    fire = accum > spec.ph_lambda
+    age, lag = _aged(fire, accum > 0.0, state["age"])
+    return {"accum": jnp.where(fire, 0.0, accum).astype(jnp.float32),
+            "age": age}, fire, lag
+
+
+@DRIFT_DETECTORS.register("always")
+def _always(state: dict, dev: Array, spec) -> Tuple[dict, Array, Array]:
+    """Fire every window → re-plan every window (the legacy-parity pin)."""
+    del dev, spec
+    fire = jnp.ones((), bool)
+    return {"accum": jnp.zeros((), jnp.float32),
+            "age": state["age"] * 0}, fire, jnp.zeros((), jnp.int32)
+
+
+@DRIFT_DETECTORS.register("never")
+def _never(state: dict, dev: Array, spec) -> Tuple[dict, Array, Array]:
+    """Never fire → plan once, reuse forever (the ablation floor)."""
+    del dev, spec
+    fire = jnp.zeros((), bool)
+    return {"accum": jnp.zeros((), jnp.float32),
+            "age": state["age"] * 0}, fire, jnp.zeros((), jnp.int32)
+
+
+def detector_update(name: str, state: dict, dev: Array, spec
+                    ) -> Tuple[dict, Array, Array]:
+    """Statically-dispatched detector step.
+
+    Returns ``(state', fire () bool, lag () i32)``; unknown names raise
+    ``UnknownComponentError`` listing the registered detectors.
+    """
+    return DRIFT_DETECTORS.get(name)(state, dev, spec)

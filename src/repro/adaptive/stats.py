@@ -1,0 +1,144 @@
+"""Exponentially-weighted streaming covariance/correlation for a fleet.
+
+The batched planner already derives every per-window statistic from raw
+power sums plus the cross-product matrix of zero-masked values — the
+``stream_stats`` digest one kernel pass produces for all E sites
+(:func:`repro.kernels.stream_stats.ops.fleet_window_moments_xxt`).  This
+module keeps a *long-horizon* version of exactly those sums as a scan-able
+carry: per window the same (count, S1, S2, X·Xᵀ) sums are computed and
+folded into :class:`EWStats` under a per-window decay
+
+    acc' = decay * acc + window_sums,        decay = 0.5 ** (1 / halflife)
+
+so the estimator is halflife-parameterized and ``decay -> 1`` (halflife
+``None``) degenerates to the plain running sums.  Correlation is then read
+out through the *same* :func:`repro.core.stats.corr_from_sums` the batch
+planner uses — at decay 1 the EW estimate equals the batch estimate over
+the ingested prefix by construction (same sums, same function; pinned to
+bitwise in tests/test_adaptive.py), not by a parallel re-derivation.
+
+Everything here is pure jnp (f32), jit- and ``lax.scan``-safe, and batched
+over all E sites at once.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import stats as stats_mod
+from repro.core.types import Array
+from repro.kernels.stream_stats.ops import fleet_window_moments_xxt
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class EWStats:
+    """Decayed ``stream_stats`` sums over everything ingested so far.
+
+    ``weight`` plays the role of the count in the batch estimator: it is
+    the decayed mass of tuples behind each stream's sums, so plugging
+    (s1, s2, weight, xxt) into ``corr_from_sums`` yields the EW
+    correlation with no separate normalization step.
+    """
+
+    weight: Array        # (E, k) f32 decayed tuple mass
+    s1: Array            # (E, k) f32 decayed sum
+    s2: Array            # (E, k) f32 decayed sum of squares
+    xxt: Array           # (E, k, k) f32 decayed cross products
+
+
+def ew_decay(halflife: Optional[float]) -> float:
+    """Per-window decay factor; ``None`` means no forgetting (decay 1)."""
+    if halflife is None:
+        return 1.0
+    if not halflife > 0.0:
+        raise ValueError(f"halflife must be > 0 (or None), got {halflife!r}")
+    return float(0.5 ** (1.0 / float(halflife)))
+
+
+def ew_init(n_sites: int, k: int) -> EWStats:
+    # one buffer per field: the scan runtime donates the carry, and XLA
+    # rejects donating an aliased buffer twice
+    return EWStats(weight=jnp.zeros((n_sites, k), jnp.float32),
+                   s1=jnp.zeros((n_sites, k), jnp.float32),
+                   s2=jnp.zeros((n_sites, k), jnp.float32),
+                   xxt=jnp.zeros((n_sites, k, k), jnp.float32))
+
+
+def window_sums(values: Array, counts: Array, *, use_kernel=None,
+                interpret: bool = False):
+    """One window's (count, s1, s2, xxt) through the stream_stats pass.
+
+    values (E, k, N) f32, counts (E, k) int.  Invalid tail positions are
+    zero-masked exactly as the batched planner masks them, so the EW sums
+    and the planner's per-window sums are the same quantities.
+    """
+    e, k, n_max = values.shape
+    cf = counts.astype(values.dtype)
+    mask = (jnp.arange(n_max)[None, None, :]
+            < cf[..., None]).astype(values.dtype)
+    mom, xxt = fleet_window_moments_xxt(values * mask, use_kernel=use_kernel,
+                                        interpret=interpret)
+    return cf, mom[..., 0], mom[..., 1], xxt
+
+
+def ew_update(state: EWStats, values: Array, counts: Array, decay: float, *,
+              use_kernel=None, interpret: bool = False) -> EWStats:
+    """Fold one window into the carry: ``decay * acc + window_sums``."""
+    cf, s1, s2, xxt = window_sums(values, counts, use_kernel=use_kernel,
+                                  interpret=interpret)
+    d = jnp.asarray(decay, state.weight.dtype)
+    return EWStats(weight=d * state.weight + cf,
+                   s1=d * state.s1 + s1,
+                   s2=d * state.s2 + s2,
+                   xxt=d * state.xxt + xxt)
+
+
+def _as_mom(state: EWStats) -> Array:
+    """EW sums in the (..., k, 4) moment layout stats_from_sums reads
+    (S3/S4 are not maintained — zero-filled; cov/corr only read S1)."""
+    z = jnp.zeros_like(state.s1)
+    return jnp.stack([state.s1, state.s2, z, z], axis=-1)
+
+
+def ew_cov(state: EWStats) -> Array:
+    """(E, k, k) EW pairwise covariance (unbiased, same formula as the
+    per-window batch estimator)."""
+    return stats_mod._cov_corr_from_sums(_as_mom(state), state.xxt,
+                                         state.weight)[0]
+
+
+def ew_corr(state: EWStats) -> Array:
+    """(E, k, k) EW Pearson correlation, clipped to [-1, 1].
+
+    Literally :func:`repro.core.stats.corr_from_sums` on the decayed sums —
+    the decay->1 ULP-equality with the batch estimator is by function
+    reuse, not by a re-derived formula.
+    """
+    return stats_mod.corr_from_sums(_as_mom(state), state.xxt, state.weight)
+
+
+def ew_mean_var(state: EWStats):
+    """(mean, unbiased var) per stream from the decayed sums."""
+    n = jnp.maximum(state.weight, 1.0)
+    mean = state.s1 / n
+    m2 = state.s2 / n - mean ** 2
+    var = m2 * n / jnp.maximum(n - 1.0, 1.0)
+    return mean, var
+
+
+# ------------------------------------------------------------- round trip
+
+def ew_to_dict(state: EWStats) -> dict:
+    """JSON-ready nested lists (f32 values survive the round trip)."""
+    import numpy as np
+    return {f.name: np.asarray(getattr(state, f.name)).tolist()
+            for f in dataclasses.fields(state)}
+
+
+def ew_from_dict(d: dict) -> EWStats:
+    return EWStats(**{f.name: jnp.asarray(d[f.name], jnp.float32)
+                      for f in dataclasses.fields(EWStats)})

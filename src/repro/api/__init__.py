@@ -21,7 +21,8 @@ scenario/experiment names are provided lazily (PEP 562).
 from __future__ import annotations
 
 from repro.api.registry import (ALL_REGISTRIES, BASELINES, DATASETS,
-                                DEPENDENCE, EPSILON_POLICIES, MODELS, QUERIES,
+                                DEPENDENCE, DRIFT_DETECTORS,
+                                EPSILON_POLICIES, MODELS, QUERIES,
                                 Registry, SAMPLERS, SOLVERS,
                                 UnknownComponentError)
 
@@ -31,6 +32,7 @@ _LAZY = {
     "TopologySpec": "repro.api.scenario",
     "TransportSpec": "repro.api.scenario",
     "ControllerSpec": "repro.api.scenario",
+    "AdaptiveSpec": "repro.adaptive",
     "Experiment": "repro.api.experiment",
     "RunReport": "repro.api.experiment",
     "SingleEdgeRuntime": "repro.api.experiment",
@@ -41,7 +43,7 @@ _LAZY = {
 __all__ = ["Registry", "UnknownComponentError", "ALL_REGISTRIES",
            "SOLVERS", "MODELS", "EPSILON_POLICIES", "DEPENDENCE",
            "SAMPLERS", "BASELINES", "QUERIES", "DATASETS",
-           *_LAZY]
+           "DRIFT_DETECTORS", *_LAZY]
 
 
 def __getattr__(name: str):

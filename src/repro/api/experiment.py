@@ -186,6 +186,7 @@ class FleetRuntime:
     sampling: str = "host"             # "host" | "device" (scan-parity RNG)
     retransmit_timeout_ms: Optional[float] = None
     max_retries: int = 0
+    adaptive: Optional["AdaptiveSpec"] = None   # None = plan every window
 
     def __post_init__(self):
         from repro.planning import ENGINES
@@ -194,9 +195,20 @@ class FleetRuntime:
             raise ValueError(f"sampling must be 'host' or 'device', got "
                              f"{self.sampling!r}")
         sites = self.topology.sites
-        self.engine = ENGINES.get(self.planning or self.cfg.engine
-                                  or "batched")
+        engine_name = self.planning or self.cfg.engine or "batched"
+        self.engine = ENGINES.get(engine_name)
         self.engine.check(self.cfg)      # fail at construction, not mid-run
+        self._adaptive_policy = None
+        if self.adaptive is not None:
+            if engine_name in ("host", "host_loop"):
+                raise ValueError(
+                    "adaptive re-planning cannot reuse host-engine plans "
+                    "(plan_window draws samples inside the plan); use the "
+                    "batched or sharded engine")
+            from repro.adaptive import AdaptivePolicy
+            self._adaptive_policy = AdaptivePolicy(
+                self.adaptive, use_kernel=self.use_kernel,
+                interpret=self.interpret)
         self.transports = [AsyncTransport(
             drop_prob=s.link.drop_prob,
             seed=self.cfg.seed + s.site_id,
@@ -290,7 +302,15 @@ class FleetRuntime:
                             counts[s, i] = 0
             budgets = np.maximum(np.floor(self.controller.budgets()), 2.0)
             budget_history.append(budgets)
-            plan = self._plan(wid, w, counts, budgets)
+            if self._adaptive_policy is not None:
+                # the gate decides whether this window pays for planning;
+                # the planner callback runs only on a re-plan, so _plan's
+                # invocation count (plan_windows) stays honest
+                plan, _ = self._adaptive_policy.step(
+                    w, counts,
+                    lambda: self._plan(wid, w, counts, budgets))
+            else:
+                plan = self._plan(wid, w, counts, budgets)
 
             fleet_samples = None
             if self.sampling == "device" and "payloads" not in plan:
@@ -374,7 +394,9 @@ class FleetRuntime:
             arrival_lag_ms=self.controller.arrival_lag_ms,
             plan_seconds=self.plan_seconds, plan_windows=self.plan_windows,
             budget_history=np.asarray(budget_history),
-            total_tuples=T * E * k * n)
+            total_tuples=T * E * k * n,
+            adaptive=(None if self._adaptive_policy is None
+                      else self._adaptive_policy.counters()))
 
 
 # ==========================================================================
@@ -412,6 +434,10 @@ class RunReport:
     freshness_by_region: dict
     plan_seconds: float
     raw: dict
+    # adaptive re-planning (repro.adaptive); None = plan-every-window run
+    planner_invocations: Optional[int] = None
+    plans_reused: Optional[int] = None
+    detection_lag_windows: Optional[float] = None
 
     @property
     def wan_fraction(self) -> float:
@@ -420,7 +446,7 @@ class RunReport:
 
     def to_dict(self) -> dict:
         """JSON-friendly summary (drops the raw arrays)."""
-        return {
+        d = {
             "scenario": (None if self.scenario is None
                          else self.scenario.to_dict()),
             "n_sites": self.n_sites,
@@ -441,6 +467,11 @@ class RunReport:
             "freshness_ms": dict(self.freshness_ms),
             "plan_seconds": self.plan_seconds,
         }
+        if self.planner_invocations is not None:
+            d["planner_invocations"] = self.planner_invocations
+            d["plans_reused"] = self.plans_reused
+            d["detection_lag_windows"] = self.detection_lag_windows
+        return d
 
     def summary(self) -> str:
         errs = " ".join(f"{q}={v:.4f}" for q, v in self.nrmse.items())
@@ -491,7 +522,13 @@ def _report_fleet(scenario, r: dict, n_sites: int) -> RunReport:
         freshness_by_region={reg: dict(f)
                              for reg, f in r["freshness_by_region"].items()},
         plan_seconds=float(r["plan_seconds"]),
-        raw=r)
+        raw=r,
+        planner_invocations=(int(r["planner_invocations"])
+                             if "planner_invocations" in r else None),
+        plans_reused=(int(r["plans_reused"])
+                      if "plans_reused" in r else None),
+        detection_lag_windows=(float(r["detection_lag_windows"])
+                               if "detection_lag_windows" in r else None))
 
 
 # ==========================================================================
@@ -545,7 +582,8 @@ class Experiment:
                                        if tspec.staleness_deadline_ms is None
                                        else tspec.staleness_deadline_ms),
                 retransmit_timeout_ms=tspec.retransmit_timeout_ms,
-                max_retries=tspec.max_retries)
+                max_retries=tspec.max_retries,
+                adaptive=scenario.adaptive)
             return cls(scenario=scenario, runtime=runtime)
 
         # single edge — the E=1 degenerate fleet.  A one-site topology
@@ -610,7 +648,7 @@ class Experiment:
             vals, _ = gen(n_sites=topo_spec.n_sites,
                           n_regions=topo_spec.n_regions,
                           n_points=data.n_points, seed=data.seed,
-                          **dict(data.options))
+                          window=data.window, **dict(data.options))
             return fleet_windows(vals, data.window)
         from repro.data.streams import windows_from_matrix
         vals, _ = data.generate()

@@ -116,6 +116,8 @@ class Registry:
 #   ENGINES           repro.planning.engine  (host/host_loop | batched |
 #                                             sharded)
 #   RUNTIMES          repro.runtime          (event | scan | scan_steps)
+#   DRIFT_DETECTORS   repro.adaptive.drift   (threshold | page_hinkley |
+#                                             always | never)
 # --------------------------------------------------------------------------
 
 SOLVERS = Registry("solver")
@@ -130,6 +132,7 @@ IID_MODES = Registry("iid mode")
 DEMAND_SIGNALS = Registry("controller demand signal")
 ENGINES = Registry("plan engine")
 RUNTIMES = Registry("runtime")
+DRIFT_DETECTORS = Registry("drift detector")
 
 ALL_REGISTRIES: dict[str, Registry] = {
     "solvers": SOLVERS,
@@ -144,6 +147,7 @@ ALL_REGISTRIES: dict[str, Registry] = {
     "demand_signals": DEMAND_SIGNALS,
     "engines": ENGINES,
     "runtimes": RUNTIMES,
+    "drift_detectors": DRIFT_DETECTORS,
 }
 
 
@@ -154,6 +158,7 @@ def populate() -> dict[str, Registry]:
     want the complete picture (CI coverage check, ``docs/api.md`` tables)
     call this to force all registrations.
     """
+    import repro.adaptive           # noqa: F401  (drift detectors)
     import repro.core.planner       # noqa: F401  (pulls solver/epsilon/...)
     import repro.core.queries       # noqa: F401
     import repro.data.streams       # noqa: F401

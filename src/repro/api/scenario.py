@@ -24,6 +24,8 @@ from repro.core.types import PlannerConfig
 
 _reg.populate()        # component validation needs the registries filled
 
+from repro.adaptive import AdaptiveSpec  # noqa: E402  (needs populate())
+
 
 def _freeze(v):
     """Arrays/lists -> nested tuples so frozen configs compare and hash."""
@@ -223,6 +225,7 @@ class ScenarioConfig:
     queries: tuple = ("AVG", "VAR", "MIN", "MAX")
     runtime: str = "event"             # RUNTIMES: event | scan | scan_steps
     name: str = ""
+    adaptive: Optional[AdaptiveSpec] = None   # None = plan every window
 
     def __post_init__(self):
         # normalize array-like planner fields to tuples (JSON round trip +
@@ -268,6 +271,27 @@ class ScenarioConfig:
         if engine is not None:
             _reg.ENGINES.get(engine).check(planner)
 
+        # adaptive re-planning caches a fleet plan across windows.  That
+        # only makes sense for fleets (single-edge planning happens inside
+        # EdgeNode, per window by construction) and only for engines whose
+        # plan is sample-free: the host engine draws samples inside
+        # plan_window, so replaying a cached host plan would resend
+        # identical samples.  Refuse both here, not deep inside a run.
+        if self.adaptive is not None and isinstance(self.adaptive, dict):
+            object.__setattr__(self, "adaptive",
+                               AdaptiveSpec.from_dict(self.adaptive))
+        if self.adaptive is not None:
+            if not self.is_fleet:
+                raise ValueError(
+                    "adaptive re-planning requires a fleet topology (>1 "
+                    "site); single-edge runs plan per window inside "
+                    "EdgeNode and have no fleet plan to cache")
+            if engine in ("host", "host_loop"):
+                raise ValueError(
+                    "adaptive re-planning cannot reuse host-engine plans "
+                    "(plan_window draws samples inside the plan); use the "
+                    "batched or sharded engine")
+
         # the runtime choice validates the whole scenario against what it
         # can execute (the scan runtime refuses WAN timing it cannot model)
         _reg.RUNTIMES.get(self.runtime).check(self)
@@ -292,6 +316,8 @@ class ScenarioConfig:
             "queries": list(self.queries),
             "runtime": self.runtime,
             "name": self.name,
+            "adaptive": (None if self.adaptive is None
+                         else self.adaptive.to_dict()),
         }
         return d
 
@@ -317,6 +343,8 @@ class ScenarioConfig:
             queries=tuple(d.get("queries", ("AVG", "VAR", "MIN", "MAX"))),
             runtime=d.get("runtime", "event"),
             name=d.get("name", ""),
+            adaptive=(None if d.get("adaptive") is None
+                      else AdaptiveSpec.from_dict(d["adaptive"])),
         )
 
     @classmethod

@@ -103,7 +103,8 @@ def mvn_pair(rho: float, n_points: int = 4096, seed: int = 0,
 
 def fleet_like(n_sites: int = 16, n_regions: int = 4, k: int = 6,
                n_points: int = 2048, seed: int = 0,
-               region_strength=None, region_volatility=None):
+               region_strength=None, region_volatility=None,
+               window=None, strength_schedule=None):
     """Regionally-correlated fleet of edge sites (the fleet subsystem's
     evaluation input).
 
@@ -120,6 +121,17 @@ def fleet_like(n_sites: int = 16, n_regions: int = 4, k: int = 6,
     regions with volatile, weakly-coupled ones.  Both axes of spatial
     heterogeneity are what cross-edge budget rebalancing exploits.
 
+    ``strength_schedule`` makes the regional correlation *drift mid-run*
+    (the adaptive-planning evaluation input): a piecewise schedule
+    ``[(window_index, rho_per_region), ...]`` where each entry sets the
+    per-region strength from tuple ``window_index * window`` onward
+    (``window`` — the tumbling-window length — is required alongside it;
+    windows before the first entry keep ``region_strength``).  The
+    schedule only reshapes the mixing weight per tuple; every RNG draw
+    happens in the exact same order, so ``strength_schedule=None`` — and a
+    degenerate ``[(0, region_strength)]`` — are bit-for-bit the unscheduled
+    generator (pinned in tests/test_adaptive.py).
+
     Returns (values (E, k, T) float32, meta) with meta["regions"] the (E,)
     region index per site and meta["strength"] the per-region rho.
     """
@@ -132,6 +144,24 @@ def fleet_like(n_sites: int = 16, n_regions: int = 4, k: int = 6,
     region_volatility = np.asarray(region_volatility, np.float64)
     sites_per = int(np.ceil(n_sites / n_regions))
     regions = np.minimum(np.arange(n_sites) // sites_per, n_regions - 1)
+
+    rho_t = None                       # (n_regions, n_points) when scheduled
+    if strength_schedule is not None:
+        if window is None:
+            raise ValueError("strength_schedule needs the tumbling-window "
+                             "length: pass window= alongside it")
+        rho_t = np.repeat(region_strength[:, None], n_points, axis=1)
+        for wid, rhos in sorted(strength_schedule, key=lambda e: int(e[0])):
+            if int(wid) < 0:
+                raise ValueError(f"strength_schedule window index must be "
+                                 f">= 0, got {wid!r}")
+            rhos = np.asarray(rhos, np.float64)
+            if rhos.shape != (n_regions,):
+                raise ValueError(
+                    f"strength_schedule entry at window {wid} has "
+                    f"{rhos.shape} strengths; need one per region "
+                    f"({n_regions},)")
+            rho_t[:, int(wid) * int(window):] = rhos[:, None]
 
     t = np.arange(n_points)
     drivers = [np.sin(2 * np.pi * t / 288.0) + 0.5 * _ar1(rng, n_points, 0.97, 0.2)
@@ -147,11 +177,19 @@ def fleet_like(n_sites: int = 16, n_regions: int = 4, k: int = 6,
             local = local / max(np.std(local), 1e-9)
             offset = rng.uniform(20.0, 80.0)
             scale = rng.uniform(2.0, 6.0) * float(region_volatility[r])
-            x = rho * base + np.sqrt(max(1.0 - rho**2, 0.0)) * local
+            if rho_t is None:
+                x = rho * base + np.sqrt(max(1.0 - rho**2, 0.0)) * local
+            else:
+                rv = rho_t[r]
+                x = rv * base + np.sqrt(np.maximum(1.0 - rv**2, 0.0)) * local
             out[s, j] = (offset + scale * x
                          + rng.normal(0.0, 0.15 * scale, n_points))
     meta = {"name": "fleet", "k": k, "regions": regions,
             "strength": region_strength}
+    if strength_schedule is not None:
+        meta["strength_schedule"] = tuple(
+            (int(w), tuple(float(v) for v in np.asarray(r).ravel()))
+            for w, r in strength_schedule)
     return out, meta
 
 

@@ -20,12 +20,18 @@ def aggregate_fleet(*, topology, qnames, est, est_q, tru, ages,
                     bytes_per_site, cost_per_site, gaps, revisions,
                     late_drops, duplicates, arrival_lag_ms, plan_seconds,
                     plan_windows, budget_history, total_tuples,
-                    retransmits=0) -> dict:
+                    retransmits=0, adaptive=None) -> dict:
     """Roll per-window tables into the fleet result dict.
 
     est/est_q/tru: {query: (T, E, k)} float arrays (NaN where unanswered);
     ages: (T, E) window age at query time (ms); bytes/cost_per_site: (E,)
     totals over the run; budget_history: (T, E) executed budgets.
+
+    ``adaptive``: counters dict from the re-plan policy
+    (``repro.adaptive.gate_counters``) or None.  Keys are merged into the
+    result only when present, so plan-every-window runs keep the exact
+    legacy key set (the sweep goldens treat key presence as part of the
+    contract).
     """
     from repro.streaming.events import freshness_percentiles
     E = topology.n_sites
@@ -84,4 +90,11 @@ def aggregate_fleet(*, topology, qnames, est, est_q, tru, ages,
         "plan_seconds": float(plan_seconds),
         "plan_windows": int(plan_windows),
         "budget_history": np.asarray(budget_history),
+        **({} if adaptive is None else {
+            "planner_invocations": int(adaptive["planner_invocations"]),
+            "plans_reused": int(adaptive["plans_reused"]),
+            "drift_fires": int(adaptive["drift_fires"]),
+            "detection_lag_windows":
+                float(adaptive["detection_lag_windows"]),
+        }),
     }

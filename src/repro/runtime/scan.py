@@ -71,6 +71,7 @@ class ScanRuntime:
     budget_fraction: float = 0.25      # single-edge per-window budget frac
     use_kernel: Optional[bool] = None
     interpret: bool = False
+    adaptive: Optional["AdaptiveSpec"] = None   # None = plan every window
     is_scan = True                     # duck-typed runtime dispatch
 
     def __post_init__(self):
@@ -101,6 +102,10 @@ class ScanRuntime:
                 f"engine {self.engine.name!r} cannot run inside lax.scan; "
                 f"the scan runtime needs the 'batched' or 'sharded' engine")
         self.engine.check(cfg)
+        if self.adaptive is not None and self.topology is None:
+            raise ValueError("adaptive re-planning requires a fleet "
+                             "topology (>1 site); single-edge scans plan "
+                             "per window by construction")
         self.spec = MODELS.get(cfg.model)
         self.n_sites = 1 if self.topology is None else self.topology.n_sites
         if self.topology is not None:
@@ -137,7 +142,7 @@ class ScanRuntime:
             return cls(cfg=scenario.planner, ctrl=ctrl, topology=topo,
                        query_names=tuple(scenario.queries), mode=mode,
                        collect=collect, use_kernel=use_kernel,
-                       interpret=interpret)
+                       interpret=interpret, adaptive=scenario.adaptive)
         # single edge: the controller is inert (one site, static budget)
         ctrl = CtrlParams(total_budget=1.0, n_sites=1, mode="static")
         topo = (scenario.topology.build(1)
@@ -168,7 +173,9 @@ class ScanRuntime:
                     pool, seed=self.cfg_eff.seed, plan_fn=self._plan_fn,
                     qnames=self.query_names, multi=self.spec.multi,
                     mean=self.spec.mean, ctrl=self.ctrl,
-                    static_exec_budgets=exec_arr, collect=self.collect)
+                    static_exec_budgets=exec_arr, collect=self.collect,
+                    adaptive=self.adaptive, use_kernel=self.use_kernel,
+                    interpret=self.interpret)
                 return jax.lax.scan(step, state, wids)
 
             self._fns[static_exec] = jax.jit(fn, donate_argnums=0)
@@ -231,6 +238,19 @@ class ScanRuntime:
             w0 = (int(first_window) if first_window is not None
                   else int(np.asarray(state.window_id)))
             state = jax.tree.map(jnp.asarray, state)
+        if self.adaptive is not None and state.adaptive is None:
+            # fresh (or pre-adaptive) carry: a zero-filled plan with the
+            # exact structure/shapes/dtypes the live plan branch produces,
+            # via eval_shape, so both lax.cond branches agree
+            from repro.adaptive import make_adaptive_carry
+            plan_shapes = jax.eval_shape(
+                self._plan_fn,
+                jax.ShapeDtypeStruct((self.n_sites, k, n), jnp.float32),
+                jax.ShapeDtypeStruct((self.n_sites, k), jnp.int32),
+                jax.ShapeDtypeStruct((self.n_sites,), jnp.float32))
+            state = dataclasses.replace(
+                state,
+                adaptive=make_adaptive_carry(self.n_sites, k, plan_shapes))
         fn = self._scan_fn(static_exec)
         pool = jnp.asarray(pool_np)
         wids = jnp.arange(w0, w0 + T, dtype=jnp.int32)
@@ -354,14 +374,20 @@ class ScanRuntime:
                       k, n, scan_seconds, extras):
         from repro.runtime.report import aggregate_fleet
         ages = np.zeros((T, self.n_sites))
+        ad = None
+        plan_windows = T
+        if self.adaptive is not None and state.adaptive is not None:
+            from repro.adaptive import gate_counters
+            ad = gate_counters(state.adaptive.gate)
+            plan_windows = ad["planner_invocations"]
         raw = aggregate_fleet(
             topology=self.topology, qnames=self.query_names,
             est=est, est_q=est, tru=tru, ages=ages,
             bytes_per_site=bytes_site, cost_per_site=cost_site,
             gaps=0, revisions=0, late_drops=0, duplicates=0,
             arrival_lag_ms=np.asarray(state.controller.lag, np.float64),
-            plan_seconds=scan_seconds, plan_windows=T,
+            plan_seconds=scan_seconds, plan_windows=plan_windows,
             budget_history=ys["budgets"],
-            total_tuples=T * self.n_sites * k * n)
+            total_tuples=T * self.n_sites * k * n, adaptive=ad)
         raw.update(extras)
         return raw

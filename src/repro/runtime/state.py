@@ -19,6 +19,7 @@ run compiles to one XLA while-loop with donated carry buffers:
 from __future__ import annotations
 
 import dataclasses
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -57,6 +58,11 @@ class RuntimeState:
     window_id: Array     # () i32 — next window to ingest (RNG cursor)
     controller: ControllerState
     totals: StreamTotals
+    # adaptive re-planning carry (repro.adaptive.AdaptiveCarry: the EW gate
+    # + the cached FleetPlan) — None when the scenario plans every window.
+    # As a pytree, None is an empty subtree, so legacy states/checkpoints
+    # flatten to the same leaves as before this field existed.
+    adaptive: Optional[Any] = None
 
 
 def init_state(n_sites: int, k: int, equal_share: float) -> RuntimeState:

@@ -235,7 +235,8 @@ PAYLOAD_PLAN_FIELDS = ("n_real", "n_imputed", "predictor", "coeffs", "loc",
 def make_window_step(pool, *, seed: int, plan_fn, qnames, multi: bool,
                      mean: bool, ctrl: CtrlParams,
                      static_exec_budgets: Optional[np.ndarray] = None,
-                     collect: str = "estimates"):
+                     collect: str = "estimates", adaptive=None,
+                     use_kernel=None, interpret: bool = False):
     """Build ``step(state, wid) -> (state, outputs)`` for ``lax.scan``.
 
     pool: (P, E, k, N) f32 device array; window ``wid`` reads slot
@@ -244,6 +245,11 @@ def make_window_step(pool, *, seed: int, plan_fn, qnames, multi: bool,
     plan_fn: (values, counts, budgets) -> FleetPlan (batched or sharded).
     static_exec_budgets: host-computed executed budgets for static-mode
     parity with the f64 host controller (floor + >=2 clamp already done).
+    adaptive: an ``AdaptiveSpec`` (with ``state.adaptive`` carrying the
+    matching ``AdaptiveCarry``) gates the plan refresh behind the drift
+    detector: ``lax.cond(replan, plan_fn, cached_plan)``, so reused
+    windows skip the planning work entirely inside the while-loop body.
+    ``use_kernel``/``interpret`` route the gate's stream_stats pass.
     """
     p_, e, k, n = pool.shape
     counts = jnp.full((e, k), n, jnp.int32)
@@ -263,7 +269,27 @@ def make_window_step(pool, *, seed: int, plan_fn, qnames, multi: bool,
         else:
             budgets = jnp.maximum(jnp.floor(raw_b), 2.0)
 
-        plan = plan_fn(values, counts, budgets)
+        if adaptive is None:
+            plan = plan_fn(values, counts, budgets)
+            adaptive_carry = state.adaptive
+        else:
+            from repro.adaptive import AdaptiveCarry, gate_update
+            gate, replan = gate_update(adaptive, state.adaptive.gate,
+                                       values, counts,
+                                       use_kernel=use_kernel,
+                                       interpret=interpret)
+            if (adaptive.detector == "always"
+                    and int(adaptive.min_replan_interval) == 1):
+                # the cond is statically always-true; planning unwrapped
+                # keeps XLA's fusion of the plan reductions identical to
+                # the plan-every-window body (the bitwise parity pin)
+                plan = plan_fn(values, counts, budgets)
+            else:
+                plan = jax.lax.cond(
+                    replan,
+                    lambda: plan_fn(values, counts, budgets),
+                    lambda: state.adaptive.plan)
+            adaptive_carry = AdaptiveCarry(gate=gate, plan=plan)
         samples = sample_fleet(seed, wid, values, plan.n_real)
         imputed, ns, mask_i = _impute(plan, samples, plan.n_real,
                                       multi=multi, mean=mean)
@@ -293,7 +319,7 @@ def make_window_step(pool, *, seed: int, plan_fn, qnames, multi: bool,
                               s1=state.totals.s1 + values.sum(-1),
                               s2=state.totals.s2 + (values * values).sum(-1))
         new_state = RuntimeState(window_id=wid + 1, controller=ctrl2,
-                                 totals=totals)
+                                 totals=totals, adaptive=adaptive_carry)
 
         out = {"est": est, "tru": tru, "bytes": nbytes, "budgets": budgets,
                "obs_err": obs_err, "r2": plan.r2,

@@ -41,6 +41,13 @@ REPORT_SCHEMA_VERSION = 1
 _COUNTER_FIELDS = ("n_sites", "wan_bytes", "full_bytes", "gaps",
                    "revisions", "late_drops", "duplicates", "retransmits")
 
+# adaptive re-planning counters (repro.adaptive) — emitted only when the
+# run actually produced them, so plan-every-window goldens keep their
+# legacy key set while any silent change in re-plan behavior on an
+# adaptive scenario is a bitwise drift
+_ADAPTIVE_COUNTER_FIELDS = ("planner_invocations", "plans_reused",
+                            "drift_fires")
+
 # raw-dict arrays worth pinning when present (event + scan runtimes)
 _STREAM_RAW_FIELDS = ("window_age_ms", "revised_windows", "budget_history")
 
@@ -101,6 +108,9 @@ def serialize_report(report, *, name: str, tolerance: str) -> dict:
     counters["full_bytes"] = int(report.full_bytes)
     for region, b in sorted(report.wan_bytes_by_region.items()):
         counters[f"wan_bytes_by_region/{region}"] = int(b)
+    for f in _ADAPTIVE_COUNTER_FIELDS:
+        if f in raw:
+            counters[f] = int(raw[f])
 
     floats = {}
     for q, v in sorted(report.nrmse.items()):
@@ -115,6 +125,8 @@ def serialize_report(report, *, name: str, tolerance: str) -> dict:
     for region, qs in sorted(report.region_nrmse.items()):
         for q, v in sorted(qs.items()):
             floats[f"region_nrmse/{region}/{q}"] = _jsonf(v)
+    if "detection_lag_windows" in raw:
+        floats["detection_lag_windows"] = _jsonf(raw["detection_lag_windows"])
 
     streams = {}
     for q, arr in sorted(report.nrmse_per_stream.items()):

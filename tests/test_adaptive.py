@@ -1,0 +1,420 @@
+"""Adaptive planning (repro.adaptive): EW tracking, drift gate, re-plan.
+
+  * EW estimator properties (hypothesis over random fleet shapes): at
+    ``decay -> 1`` the carry preserves the batch ``stream_stats`` sums
+    bitwise, so ``ew_corr`` IS ``corr_from_sums`` on the ingested prefix;
+    correlations stay in [-1, 1] under any decay; the carry survives both
+    the JSON dict round trip and a ``repro.ckpt`` save/restore bitwise.
+  * Detector units ("threshold", "page_hinkley", "always", "never" — the
+    full DRIFT_DETECTORS surface) and AdaptiveSpec validation/round-trip.
+  * Parity pins: detector "always" reproduces the legacy plan-every-window
+    runtimes bit-for-bit (event loop AND scan runtime — the scan path
+    statically unwraps its lax.cond for exactly this config, docs/
+    adaptive.md); "never" plans once; ``adaptive=None`` leaves RunReport
+    and its raw dict key-for-key legacy.
+  * Payoff: on a drifting-correlation fleet the gated run re-plans on a
+    fraction of windows while the counters stay self-consistent.
+  * ``strength_schedule`` generator contract: a degenerate schedule is
+    bit-for-bit the unscheduled data; a real shift only touches tuples
+    after the boundary.
+  * Golden serializer: adaptive counters appear only for adaptive runs,
+    so the pre-adaptive goldens stay byte-identical.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import run_matrix  # noqa: F401  (imports conftest stub first)
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from repro.adaptive import (AdaptiveSpec, det_init, detector_update, ew_corr,
+                            ew_cov, ew_decay, ew_from_dict, ew_init,
+                            ew_to_dict, ew_update, gate_init, gate_update,
+                            window_sums)
+from repro.adaptive.stats import _as_mom
+from repro.api import (ControllerSpec, DataSpec, Experiment, ScenarioConfig,
+                       TopologySpec)
+from repro.api.registry import DRIFT_DETECTORS, UnknownComponentError
+from repro.core.stats import corr_from_sums
+from repro.core.types import PlannerConfig
+from repro.data.streams import fleet_like
+from repro.sweep.report import serialize_report
+
+SCHED = [[0, [0.9, 0.2]], [4, [0.2, 0.9]]]
+
+
+def _fleet_values(e=3, k=4, n=32, windows=4, seed=0):
+    rng = np.random.default_rng(seed)
+    vals = rng.normal(50.0, 5.0, (windows, e, k, n)).astype(np.float32)
+    counts = np.full((windows, e, k), n, np.int32)
+    return jnp.asarray(vals), jnp.asarray(counts)
+
+
+def _scenario(adaptive=None, runtime="event", schedule=None, seed=21,
+              windows=8):
+    opts = {"k": 4}
+    if schedule is not None:
+        opts["strength_schedule"] = schedule
+    return ScenarioConfig(
+        data=DataSpec(dataset="fleet", n_points=windows * 64, window=64,
+                      seed=seed, options=opts),
+        planner=PlannerConfig(solver="closed_form", seed=seed),
+        topology=TopologySpec(n_regions=2, sites_per_region=3, seed=seed,
+                              latency_scale=0.0),
+        controller=ControllerSpec(),
+        queries=("AVG", "VAR"), runtime=runtime, adaptive=adaptive)
+
+
+# --------------------------------------------------------- EW estimator
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 4), st.integers(2, 5), st.integers(4, 24),
+       st.integers(1, 5), st.integers(0, 2**31 - 1))
+def test_decay_one_preserves_batch_sums_bitwise(e, k, n, windows, seed):
+    """halflife=None (decay 1) keeps EXACTLY the running batch sums, so
+    the EW correlation is corr_from_sums on the ingested prefix — equality
+    is bitwise because it is the same function on the same buffers."""
+    vals, counts = _fleet_values(e, k, n, windows, seed)
+    state = ew_init(e, k)
+    cf = s1 = s2 = xxt = 0.0
+    for w in range(windows):
+        state = ew_update(state, vals[w], counts[w], ew_decay(None))
+        dc, d1, d2, dx = window_sums(vals[w], counts[w])
+        cf, s1, s2, xxt = cf + dc, s1 + d1, s2 + d2, xxt + dx
+    np.testing.assert_array_equal(np.asarray(state.weight), np.asarray(cf))
+    np.testing.assert_array_equal(np.asarray(state.xxt), np.asarray(xxt))
+    np.testing.assert_array_equal(
+        np.asarray(ew_corr(state)),
+        np.asarray(corr_from_sums(_as_mom(state), xxt, cf)))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 3), st.integers(2, 5), st.integers(4, 16),
+       st.integers(1, 4), st.floats(1.0, 64.0), st.integers(0, 2**31 - 1))
+def test_ew_corr_bounded(e, k, n, windows, halflife, seed):
+    vals, counts = _fleet_values(e, k, n, windows, seed)
+    state = ew_init(e, k)
+    for w in range(windows):
+        state = ew_update(state, vals[w], counts[w], ew_decay(halflife))
+    c = np.asarray(ew_corr(state))
+    assert np.all(np.isfinite(c))
+    assert np.all(np.abs(c) <= 1.0)
+    np.testing.assert_allclose(np.diagonal(c, axis1=-2, axis2=-1), 1.0,
+                               atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 3), st.integers(2, 4), st.integers(4, 16),
+       st.floats(1.0, 32.0), st.integers(0, 2**31 - 1))
+def test_ew_state_json_round_trip_bitwise(e, k, n, halflife, seed):
+    vals, counts = _fleet_values(e, k, n, 3, seed)
+    state = ew_init(e, k)
+    for w in range(3):
+        state = ew_update(state, vals[w], counts[w], ew_decay(halflife))
+    back = ew_from_dict(json.loads(json.dumps(ew_to_dict(state))))
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_ew_cov_matches_numpy_on_stationary_data():
+    """decay=1 EW covariance over many windows ~ np.cov of the whole run."""
+    rng = np.random.default_rng(5)
+    base = rng.normal(0.0, 1.0, 2048)
+    x = np.stack([base + rng.normal(0, 0.3, 2048) for _ in range(3)])
+    vals = jnp.asarray(x.reshape(1, 3, 16, 128).swapaxes(1, 2)
+                       .reshape(16, 1, 3, 128), jnp.float32)
+    counts = jnp.full((16, 1, 3), 128, jnp.int32)
+    state = ew_init(1, 3)
+    for w in range(16):
+        state = ew_update(state, vals[w], counts[w], 1.0)
+    np.testing.assert_allclose(np.asarray(ew_cov(state))[0],
+                               np.cov(x.reshape(3, -1)), rtol=2e-3)
+
+
+def test_ew_state_ckpt_round_trip_bitwise(tmp_path):
+    from repro.ckpt import restore, save
+    vals, counts = _fleet_values(2, 3, 8, 2, 9)
+    state = ew_init(2, 3)
+    for w in range(2):
+        state = ew_update(state, vals[w], counts[w], ew_decay(4.0))
+    save(state, 1, tmp_path)
+    out = restore(tmp_path, 1, jax.eval_shape(lambda: state))
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_ew_decay_validation():
+    assert ew_decay(None) == 1.0
+    assert 0.0 < ew_decay(8.0) < 1.0
+    with pytest.raises(ValueError, match="halflife"):
+        ew_decay(0.0)
+
+
+# ----------------------------------------------------------- detectors
+
+def _dev_seq(name, spec, devs):
+    state, out = det_init(), []
+    for d in devs:
+        state, fire, lag = detector_update(name, state,
+                                           jnp.float32(d), spec)
+        out.append((bool(fire), int(lag)))
+    return out
+
+
+def test_detector_registry_surface():
+    assert DRIFT_DETECTORS.names() == ("always", "never", "page_hinkley",
+                                       "threshold")
+    with pytest.raises(UnknownComponentError, match="drift detector"):
+        DRIFT_DETECTORS.get("psychic")
+
+
+def test_threshold_detector_fires_above_bound():
+    spec = AdaptiveSpec(detector="threshold", threshold=0.2)
+    assert _dev_seq("threshold", spec, [0.1, 0.19, 0.21, 0.05]) == [
+        (False, 0), (False, 0), (True, 0), (False, 0)]
+
+
+def test_page_hinkley_accumulates_and_lags():
+    """Small persistent deviations accumulate; the fire reports how many
+    windows the evidence was elevated before crossing ph_lambda."""
+    spec = AdaptiveSpec(detector="page_hinkley", ph_delta=0.05,
+                        ph_lambda=0.25)
+    seq = _dev_seq("page_hinkley", spec, [0.0, 0.2, 0.2, 0.2, 0.0])
+    assert [f for f, _ in seq] == [False, False, True, False, False]
+    assert seq[2][1] == 1          # elevated since window 1, fired at 2
+
+
+def test_always_and_never_detectors():
+    spec = AdaptiveSpec(detector="always")
+    assert all(f for f, _ in _dev_seq("always", spec, [0.0, 1.0, 0.0]))
+    spec = AdaptiveSpec(detector="never")
+    assert not any(f for f, _ in _dev_seq("never", spec, [0.0, 9.9, 1.0]))
+
+
+# ------------------------------------------------- spec + scenario surface
+
+def test_adaptive_spec_validation():
+    with pytest.raises(UnknownComponentError, match="drift detector"):
+        AdaptiveSpec(detector="vibes")
+    with pytest.raises(ValueError, match="min_replan_interval"):
+        AdaptiveSpec(min_replan_interval=0)
+    with pytest.raises(ValueError, match="halflife"):
+        AdaptiveSpec(halflife=-1.0)
+    with pytest.raises(ValueError, match="ph_lambda"):
+        AdaptiveSpec(ph_lambda=0.0)
+    with pytest.raises(ValueError, match="unknown AdaptiveSpec"):
+        AdaptiveSpec.from_dict({"detector": "always", "verbosity": 11})
+
+
+def test_adaptive_spec_round_trip():
+    spec = AdaptiveSpec(detector="page_hinkley", halflife=12.0,
+                        ph_delta=0.02, ph_lambda=0.3, min_replan_interval=2)
+    assert AdaptiveSpec.from_dict(
+        json.loads(json.dumps(spec.to_dict()))) == spec
+
+
+def test_scenario_round_trip_and_rejections():
+    sc = _scenario(adaptive=AdaptiveSpec(detector="threshold"),
+                   schedule=SCHED)
+    back = ScenarioConfig.from_dict(json.loads(json.dumps(sc.to_dict())))
+    assert back.adaptive == sc.adaptive
+    assert (json.loads(json.dumps(back.to_dict()))
+            == json.loads(json.dumps(sc.to_dict())))
+    # adaptive re-planning is a fleet feature
+    with pytest.raises(ValueError, match="fleet topology"):
+        ScenarioConfig(data=DataSpec(dataset="smartcity", n_points=256,
+                                     window=64),
+                       adaptive=AdaptiveSpec(detector="always"))
+    # ... and needs a device-side plan engine, not the host loop
+    with pytest.raises(ValueError, match="host"):
+        sc2 = _scenario(adaptive=AdaptiveSpec(detector="always"))
+        ScenarioConfig.from_dict({**sc2.to_dict(),
+                                  "planner": {**sc2.to_dict()["planner"],
+                                              "engine": "host_loop"}})
+
+
+# ------------------------------------------------------------ gate policy
+
+def test_gate_first_window_plans_and_never_fires():
+    spec = AdaptiveSpec(detector="threshold", threshold=1e-6)
+    vals, counts = _fleet_values(2, 3, 8, 1, 3)
+    gate, replan = gate_update(spec, gate_init(2, 3), vals[0], counts[0])
+    assert bool(replan)
+    assert int(gate.replans) == 1 and int(gate.fires) == 0
+
+
+def test_gate_cooldown_blocks_replans():
+    spec = AdaptiveSpec(detector="always", min_replan_interval=3)
+    vals, counts = _fleet_values(2, 3, 8, 6, 4)
+    gate = gate_init(2, 3)
+    replans = []
+    for w in range(6):
+        gate, replan = gate_update(spec, gate, vals[w], counts[w])
+        replans.append(bool(replan))
+    assert replans == [True, False, False, True, False, False]
+    assert int(gate.replans) + int(gate.reuses) == 6
+
+
+# ----------------------------------------------------- runtime parity pins
+
+def test_event_always_matches_legacy_bitwise():
+    legacy = Experiment.from_scenario(_scenario()).run()
+    adapt = Experiment.from_scenario(
+        _scenario(adaptive=AdaptiveSpec(detector="always"))).run()
+    assert adapt.nrmse == legacy.nrmse
+    assert adapt.wan_bytes == legacy.wan_bytes
+    for q in legacy.nrmse_per_stream:
+        np.testing.assert_array_equal(adapt.nrmse_per_stream[q],
+                                      legacy.nrmse_per_stream[q])
+    assert adapt.planner_invocations == 8 and adapt.plans_reused == 0
+
+
+def test_scan_always_matches_legacy_bitwise():
+    """The scan runtime statically bypasses its lax.cond for the
+    always/interval-1 config, so XLA fuses the plan exactly as the legacy
+    body does — equality is bitwise, not merely within f32 tolerance."""
+    legacy = Experiment.from_scenario(_scenario(runtime="scan"))
+    r0 = legacy.runtime.run(legacy.make_windows())
+    adapt = Experiment.from_scenario(
+        _scenario(adaptive=AdaptiveSpec(detector="always"), runtime="scan"))
+    r1 = adapt.runtime.run(adapt.make_windows())
+    assert r1["fleet_nrmse"] == r0["fleet_nrmse"]
+    assert r1["wan_bytes"] == r0["wan_bytes"]
+    np.testing.assert_array_equal(r1["budget_history"],
+                                  r0["budget_history"])
+    assert r1["planner_invocations"] == 8 and r1["plans_reused"] == 0
+
+
+def test_never_detector_plans_once():
+    rep = Experiment.from_scenario(
+        _scenario(adaptive=AdaptiveSpec(detector="never"))).run()
+    assert rep.planner_invocations == 1
+    assert rep.plans_reused == 7
+    assert all(np.isfinite(v) for v in rep.nrmse.values())
+
+
+def test_default_off_is_legacy_shape():
+    rep = Experiment.from_scenario(_scenario()).run()
+    assert rep.planner_invocations is None
+    assert rep.plans_reused is None
+    assert "planner_invocations" not in rep.raw
+    assert "detection_lag_windows" not in rep.raw
+    assert "planner_invocations" not in rep.to_dict()
+
+
+@pytest.mark.parametrize("runtime", ["event", "scan"])
+def test_gated_replans_on_drift(runtime):
+    """On a drifting fleet the threshold gate re-plans a strict subset of
+    windows, counters stay consistent, and accuracy stays finite."""
+    T = 12
+    rep = Experiment.from_scenario(
+        _scenario(adaptive=AdaptiveSpec(detector="threshold", halflife=16.0,
+                                        threshold=0.3),
+                  runtime=runtime, schedule=[[0, [0.9, 0.2]],
+                                             [6, [0.25, 0.85]]],
+                  windows=T)).run()
+    assert 1 <= rep.planner_invocations < T
+    assert rep.planner_invocations + rep.plans_reused == T
+    assert rep.detection_lag_windows >= 0.0
+    assert all(np.isfinite(v) for v in rep.nrmse.values())
+
+
+def test_event_scan_gate_decisions_agree():
+    """Same spec, same data: the two runtimes share gate_update, so the
+    planner-invocation trajectory is identical."""
+    kw = dict(adaptive=AdaptiveSpec(detector="page_hinkley", halflife=12.0,
+                                    ph_delta=0.02, ph_lambda=0.3,
+                                    min_replan_interval=2),
+              schedule=SCHED, windows=12)
+    ev = Experiment.from_scenario(_scenario(**kw)).run()
+    sc = Experiment.from_scenario(_scenario(runtime="scan", **kw)).run()
+    assert ev.planner_invocations == sc.planner_invocations
+    assert ev.plans_reused == sc.plans_reused
+    assert ev.raw["drift_fires"] == sc.raw["drift_fires"]
+
+
+def test_scan_adaptive_resumes_bitwise(tmp_path):
+    """Kill-and-restore with the adaptive carry (EW sums, cached plan,
+    cooldown clock) in the checkpoint: the tail replays bit-for-bit."""
+    from repro.ckpt import latest_step, restore, save
+    scenario = _scenario(adaptive=AdaptiveSpec(detector="threshold",
+                                               halflife=16.0, threshold=0.3),
+                         runtime="scan", schedule=SCHED, windows=8)
+    exp = Experiment.from_scenario(scenario)
+    windows = exp.make_windows()
+    T, cut = 8, 3
+    full = exp.runtime.run(windows)
+
+    rt1 = Experiment.from_scenario(scenario).runtime
+    head = rt1.run(windows, n_windows=cut)
+    save(head["final_state"], cut, tmp_path)
+
+    rt2 = Experiment.from_scenario(scenario).runtime
+    st_ = restore(tmp_path, latest_step(tmp_path),
+                  jax.eval_shape(lambda: head["final_state"]))
+    tail = rt2.run(windows, n_windows=T - cut, state=st_)
+
+    assert head["wan_bytes"] + tail["wan_bytes"] == full["wan_bytes"]
+    np.testing.assert_array_equal(tail["budget_history"],
+                                  full["budget_history"][cut:])
+    for a, b in zip(jax.tree.leaves(full["final_state"]),
+                    jax.tree.leaves(tail["final_state"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert (tail["planner_invocations"]
+            == full["planner_invocations"])
+
+
+# ------------------------------------------------- drifting-data generator
+
+def test_degenerate_schedule_is_bitwise_unscheduled():
+    base, _ = fleet_like(4, 2, 3, n_points=256, seed=11)
+    same, meta = fleet_like(4, 2, 3, n_points=256, seed=11, window=64,
+                            strength_schedule=[(0, [0.9, 0.15])],
+                            region_strength=[0.9, 0.15])
+    np.testing.assert_array_equal(
+        base, fleet_like(4, 2, 3, n_points=256, seed=11,
+                         region_strength=None)[0])
+    np.testing.assert_array_equal(base, same)
+    assert meta["strength_schedule"] == ((0, (0.9, 0.15)),)
+
+
+def test_schedule_shift_only_touches_post_boundary_tuples():
+    kw = dict(n_points=256, seed=11, window=64,
+              region_strength=[0.9, 0.15])
+    a, _ = fleet_like(4, 2, 3, strength_schedule=[(0, [0.9, 0.15])], **kw)
+    b, _ = fleet_like(4, 2, 3, strength_schedule=[(0, [0.9, 0.15]),
+                                                  (2, [0.15, 0.9])], **kw)
+    np.testing.assert_array_equal(a[..., :128], b[..., :128])
+    assert np.any(a[..., 128:] != b[..., 128:])
+
+
+def test_schedule_validation():
+    with pytest.raises(ValueError, match="window"):
+        fleet_like(4, 2, 3, n_points=256,
+                   strength_schedule=[(0, [0.9, 0.15])])
+    with pytest.raises(ValueError, match="per region"):
+        fleet_like(4, 2, 3, n_points=256, window=64,
+                   strength_schedule=[(0, [0.9])])
+    with pytest.raises(ValueError, match=">= 0"):
+        fleet_like(4, 2, 3, n_points=256, window=64,
+                   strength_schedule=[(-1, [0.9, 0.15])])
+
+
+# --------------------------------------------------------- golden surface
+
+def test_serializer_emits_adaptive_counters_only_when_present():
+    legacy = serialize_report(Experiment.from_scenario(_scenario()).run(),
+                              name="t", tolerance="ulp")
+    assert "planner_invocations" not in legacy["counters"]
+    assert "detection_lag_windows" not in legacy["floats"]
+    adapt = serialize_report(
+        Experiment.from_scenario(
+            _scenario(adaptive=AdaptiveSpec(detector="always"))).run(),
+        name="t", tolerance="ulp")
+    assert adapt["counters"]["planner_invocations"] == 8
+    assert adapt["counters"]["plans_reused"] == 0
+    assert adapt["counters"]["drift_fires"] == 7
+    assert adapt["floats"]["detection_lag_windows"] == 0.0
