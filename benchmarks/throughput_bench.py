@@ -34,8 +34,8 @@ if __package__ in (None, ""):                       # `python benchmarks/...`
 
 from benchmarks.common import (REPO_ROOT, fmt, read_bench_json, timed,
                                write_bench_json)
-from repro.api import (AdaptiveSpec, ControllerSpec, DataSpec, Experiment,
-                       ScenarioConfig, TopologySpec)
+from repro.api import (AdaptiveSpec, ChaosSpec, ControllerSpec, DataSpec,
+                       Experiment, ScenarioConfig, TopologySpec)
 from repro.core.types import PlannerConfig
 
 BENCH_PATH = REPO_ROOT / "BENCH_throughput.json"
@@ -68,6 +68,19 @@ ADAPTIVE_SCHEDULE = [[0, [0.9, 0.7, 0.3, 0.1]],
 # relative of plan-every-window
 ADAPTIVE_MAX_INVOCATION_FRAC = 0.25
 ADAPTIVE_MAX_REL_NRMSE = 0.10
+
+# chaos recovery (repro.chaos): the acceptance scenario of docs/chaos.md —
+# an E=64 fleet whose region 1 goes dark for 20 windows mid-run.  The row
+# must show the rebalancing controller re-spreading the freed budget within
+# CHAOS_MAX_RECOVERY_WINDOWS and gap-serving holding the outage NRMSE within
+# CHAOS_MAX_OUTAGE_RATIO x steady state, with every dark cell still answered
+CHAOS_E = 64
+CHAOS_WINDOW = 288
+CHAOS_WINDOWS = 48
+CHAOS_OUTAGE = (10, 20, 1)       # (start, n_windows, region)
+CHAOS_BUDGET_FRACTION = 0.08
+CHAOS_MAX_RECOVERY_WINDOWS = 2.0
+CHAOS_MAX_OUTAGE_RATIO = 2.0
 
 
 def _scenario(E: int, runtime: str) -> ScenarioConfig:
@@ -152,6 +165,60 @@ def _measure_adaptive(label: str, spec: AdaptiveSpec) -> dict:
             "plans_reused": int(r["plans_reused"])}
 
 
+def _chaos_scenario(E: int = CHAOS_E, windows: int = CHAOS_WINDOWS,
+                    window: int = CHAOS_WINDOW,
+                    outage: tuple = CHAOS_OUTAGE) -> ScenarioConfig:
+    return ScenarioConfig(
+        name=f"chaos/E{E}",
+        data=DataSpec(dataset="fleet", n_points=windows * window,
+                      window=window, seed=29, options={"k": K}),
+        planner=PlannerConfig(solver="closed_form", dependence="pearson",
+                              seed=29),
+        topology=TopologySpec(n_regions=4, sites_per_region=E // 4, seed=29,
+                              latency_scale=0.0),
+        controller=ControllerSpec(mode="rebalance"),
+        queries=("AVG", "VAR"),
+        budget_fraction=CHAOS_BUDGET_FRACTION,
+        runtime="scan",
+        chaos=ChaosSpec(outages=(outage,)))
+
+
+def _measure_chaos() -> dict:
+    exp = Experiment.from_scenario(_chaos_scenario())
+    exp.runtime.collect = "estimates"
+    windows = exp.make_windows()
+    exp.runtime.run(windows, n_windows=CHAOS_WINDOWS)      # compile + warm
+    r = exp.runtime.run(windows, n_windows=CHAOS_WINDOWS)  # steady-state
+    return {"scenario": f"chaos/E{CHAOS_E}/outage", "engine": "scan",
+            "n_sites": CHAOS_E, "n_windows": CHAOS_WINDOWS,
+            "windows_per_sec": float(r["windows_per_sec"]),
+            "streams_per_sec": float(r["windows_per_sec"]) * CHAOS_E * K,
+            "wan_bytes": int(r["wan_bytes"]),
+            "nrmse_avg": float(r["fleet_nrmse"]["AVG"]),
+            "recovery_windows": float(r["recovery_windows"]),
+            "outage_nrmse_avg": float(r["outage_nrmse"]["AVG"]),
+            "steady_nrmse_avg": float(r["steady_nrmse"]["AVG"]),
+            "down_site_windows": int(r["down_site_windows"]),
+            "gap_served_cells": int(r["gap_served_cells"])}
+
+
+def _check_chaos_recovery(row: dict) -> None:
+    """The bars the chaos row must clear (fresh or committed)."""
+    assert row["recovery_windows"] <= CHAOS_MAX_RECOVERY_WINDOWS, (
+        f"budgets must reconverge within {CHAOS_MAX_RECOVERY_WINDOWS:g} "
+        f"windows of a membership change, took "
+        f"{row['recovery_windows']:g}")
+    ratio = row["outage_nrmse_avg"] / row["steady_nrmse_avg"]
+    assert ratio <= CHAOS_MAX_OUTAGE_RATIO, (
+        f"gap-served outage NRMSE {row['outage_nrmse_avg']:.4g} is "
+        f"{ratio:.2f}x steady-state {row['steady_nrmse_avg']:.4g} "
+        f"(> {CHAOS_MAX_OUTAGE_RATIO:g}x)")
+    assert row["gap_served_cells"] == row["down_site_windows"], (
+        f"every dark (window, site) cell must still be answered from the "
+        f"site's last live window: served {row['gap_served_cells']} of "
+        f"{row['down_site_windows']}")
+
+
 def _check_adaptive_payoff(gated: dict, always: dict) -> None:
     """The bars the adaptive rows must clear (fresh or committed)."""
     budget = ADAPTIVE_MAX_INVOCATION_FRAC * gated["n_windows"]
@@ -196,6 +263,14 @@ def run() -> list[tuple[str, float, str]]:
                      f"{always['planner_invocations']}/{ADAPTIVE_WINDOWS} "
                      f"plans, nrmse {fmt(always['nrmse_avg'])} "
                      f"({fmt(always['windows_per_sec'])} win/s)"))
+    chaos, t_chaos = timed(_measure_chaos)
+    _check_chaos_recovery(chaos)
+    bench_rows.append(chaos)
+    csv_rows.append((f"chaos/E{CHAOS_E}/outage", t_chaos,
+                     f"recovery {fmt(chaos['recovery_windows'])} win, "
+                     f"outage/steady "
+                     f"{chaos['outage_nrmse_avg'] / chaos['steady_nrmse_avg']:.2f}x "
+                     f"({fmt(chaos['windows_per_sec'])} win/s)"))
     write_bench_json(BENCH_PATH, bench_rows)
     best = max(speedups.values())
     assert best >= 10.0, (
@@ -212,12 +287,23 @@ def run_smoke() -> list[tuple[str, float, str]]:
     rows = {r["scenario"]: r for r in payload["rows"]}
     _check_adaptive_payoff(rows[f"adaptive/E{ADAPTIVE_E}/gated"],
                            rows[f"adaptive/E{ADAPTIVE_E}/always"])
+    _check_chaos_recovery(rows[f"chaos/E{CHAOS_E}/outage"])
     mini, us = timed(_measure_scan, 4, 32)
     assert np.isfinite(mini["nrmse_avg"]), mini
     assert mini["wan_bytes"] > 0, mini
+    # miniature chaos run: a 2-window outage on a 4-site fleet must ship
+    # zero bytes from dark cells and still answer every query
+    exp = Experiment.from_scenario(_chaos_scenario(
+        E=4, windows=8, window=WINDOW, outage=(3, 2, 1)))
+    exp.runtime.collect = "estimates"
+    r = exp.runtime.run(exp.make_windows(), n_windows=8)
+    live = np.asarray(r["liveness"], bool)
+    assert (np.asarray(r["bytes_history"])[~live] == 0).all()
+    assert np.isfinite(r["fleet_nrmse"]["AVG"])
     return [("throughput/smoke", us,
              f"artifact ok ({len(payload['rows'])} rows), "
-             f"E=4 scan {fmt(mini['windows_per_sec'])} win/s")]
+             f"E=4 scan {fmt(mini['windows_per_sec'])} win/s, "
+             f"chaos E=4 recovery {fmt(r['recovery_windows'])} win")]
 
 
 def main(argv=None) -> int:

@@ -148,4 +148,31 @@ print("fleet smoke OK:", {q: round(v, 4) for q, v in res.nrmse.items()},
       f"age_p99={res.freshness_ms['p99_ms']:.0f}ms")
 PY
 
+echo "== chaos smoke (fault injection, membership, recovery metrics) =="
+python - <<'PY'
+import numpy as np
+from repro.api import (ChaosSpec, ControllerSpec, DataSpec, Experiment,
+                       ScenarioConfig, TopologySpec)
+from repro.core.types import PlannerConfig
+
+E, R, K, W = 6, 2, 4, 64
+scenario = ScenarioConfig(
+    data=DataSpec(dataset="fleet", n_points=8 * W, window=W, seed=5,
+                  options={"k": K}),
+    budget_fraction=0.25, planner=PlannerConfig(solver="closed_form"),
+    topology=TopologySpec(n_regions=R, sites_per_region=E // R, seed=5,
+                          latency_scale=0.0),
+    controller=ControllerSpec(mode="rebalance"), queries=("AVG", "VAR"),
+    chaos=ChaosSpec(outages=((3, 2, 1),), joins=((2, 0),)))
+res = Experiment.from_scenario(scenario).run()
+assert res.down_site_windows == 2 + 2 * 3, res.down_site_windows
+assert np.isfinite(res.nrmse["AVG"]), res
+assert np.isfinite(res.recovery_windows), res
+assert res.raw["liveness"].shape == (8, E)
+print("chaos smoke OK:", f"down={res.down_site_windows}",
+      f"gap_served={res.raw['gap_served_cells']}",
+      f"recovery={res.recovery_windows:g} win",
+      f"availability={ {k: round(v, 3) for k, v in res.availability_by_region.items()} }")
+PY
+
 echo "CI OK"

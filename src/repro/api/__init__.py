@@ -33,6 +33,7 @@ _LAZY = {
     "TransportSpec": "repro.api.scenario",
     "ControllerSpec": "repro.api.scenario",
     "AdaptiveSpec": "repro.adaptive",
+    "ChaosSpec": "repro.chaos",
     "Experiment": "repro.api.experiment",
     "RunReport": "repro.api.experiment",
     "SingleEdgeRuntime": "repro.api.experiment",

@@ -187,6 +187,7 @@ class FleetRuntime:
     retransmit_timeout_ms: Optional[float] = None
     max_retries: int = 0
     adaptive: Optional["AdaptiveSpec"] = None   # None = plan every window
+    chaos: Optional["ChaosSpec"] = None         # None = fixed membership
 
     def __post_init__(self):
         from repro.planning import ENGINES
@@ -209,6 +210,17 @@ class FleetRuntime:
             self._adaptive_policy = AdaptivePolicy(
                 self.adaptive, use_kernel=self.use_kernel,
                 interpret=self.interpret)
+        # trivial spec == no faults: run the exact legacy loop
+        self._chaos_active = (self.chaos is not None
+                              and not self.chaos.is_trivial)
+        if self._chaos_active:
+            if self.adaptive is not None:
+                raise ValueError(
+                    "chaos and adaptive re-planning cannot be combined: "
+                    "the drift gate's cached plan would replay allocations "
+                    "for dead sites")
+            self.chaos.validate_topology(
+                self.topology.n_sites, len(self.topology.region_names))
         self.transports = [AsyncTransport(
             drop_prob=s.link.drop_prob,
             seed=self.cfg.seed + s.site_id,
@@ -279,6 +291,11 @@ class FleetRuntime:
         tru = {q: np.full((T, E, k), np.nan) for q in qnames}
         ages = np.full((T, E), np.nan)
         budget_history = []
+        chaos_live = None
+        if self._chaos_active:
+            from repro.chaos import liveness_table
+            chaos_live = liveness_table(self.chaos, T, E,
+                                        self.topology.region_of())
 
         def _row(res):
             return {q: (np.asarray(res[q]) if len(res.get(q, [])) == k
@@ -300,7 +317,17 @@ class FleetRuntime:
                     for i in range(k):
                         if self.straggler_drop(wid, s, i):
                             counts[s, i] = 0
-            budgets = np.maximum(np.floor(self.controller.budgets()), 2.0)
+            live = None if chaos_live is None else chaos_live[wid]
+            if live is None:
+                budgets = np.maximum(np.floor(self.controller.budgets()),
+                                     2.0)
+            else:
+                # the >=2 clamp would resurrect dead sites' zero budgets
+                budgets = np.where(
+                    live,
+                    np.maximum(np.floor(self.controller.budgets(live=live)),
+                               2.0),
+                    0.0)
             budget_history.append(budgets)
             if self._adaptive_policy is not None:
                 # the gate decides whether this window pays for planning;
@@ -311,6 +338,12 @@ class FleetRuntime:
                     lambda: self._plan(wid, w, counts, budgets))
             else:
                 plan = self._plan(wid, w, counts, budgets)
+            if live is not None and "n_real" in plan:
+                # the planner floors every stream at 1 sample even on a
+                # zero budget; dead sites must truly ship nothing (and the
+                # masked n_real keeps device sampling bitwise with scan)
+                plan = dict(plan)
+                plan["n_real"] = np.asarray(plan["n_real"]) * live[:, None]
 
             fleet_samples = None
             if self.sampling == "device" and "payloads" not in plan:
@@ -324,6 +357,29 @@ class FleetRuntime:
             obs_err_tail = np.zeros(E) if split_on else None
             lag_obs = np.full(E, np.nan)
             for s in range(E):
+                if live is not None and not live[s]:
+                    # dark site: nothing is planned-for or sent, but
+                    # in-flight payloads still land and the cloud keeps
+                    # gap-serving its freshest reconstruction
+                    for ev in self.transports[s].drain(q_time):
+                        _apply(s, self.clouds[s].ingest_event(
+                            ev.payload, now_ms=ev.at_ms))
+                    rec, age, _ = self.clouds[s].serve(wid, q_time)
+                    res = _row(self.clouds[s].query(rec))
+                    res_true = _row(self.clouds[s].query(
+                        [w[s, i] for i in range(k)]))
+                    for q in qnames:
+                        est[q][wid, s] = res[q]
+                        est_q[q][wid, s] = res[q]
+                        tru[q][wid, s] = res_true[q]
+                    ages[wid, s] = age
+                    # no payload => no edge-local error observation; the
+                    # live-masked controller update freezes this site's
+                    # demand EWMA at its pre-outage value
+                    obs_err[s] = np.nan
+                    if split_on:
+                        obs_err_tail[s] = np.nan
+                    continue
                 payload = self._payload(
                     plan, s, wid, w[s], counts[s],
                     samples=(None if fleet_samples is None
@@ -367,7 +423,7 @@ class FleetRuntime:
             self.controller.update(obs_err, plan["r2"],
                                    objective=plan.get("objective"),
                                    arrival_lag=lag_obs,
-                                   obs_err_tail=obs_err_tail)
+                                   obs_err_tail=obs_err_tail, live=live)
 
         # drain in-flight payloads: late revisions and gap accounting
         for s in range(E):
@@ -375,6 +431,14 @@ class FleetRuntime:
                 _apply(s, self.clouds[s].ingest_event(ev.payload,
                                                       now_ms=ev.at_ms))
             self.clouds[s].finalize(T)
+
+        chaos_info = None
+        if chaos_live is not None:
+            from repro.chaos import chaos_metrics
+            chaos_info = chaos_metrics(
+                chaos_live, np.asarray(budget_history, np.float64),
+                self.controller.equal_share, est, tru, qnames,
+                self.topology.region_of(), self.topology.region_names)
 
         # aggregate errors/bytes/freshness through the shared roll-up the
         # scan runtime also reports through (repro.runtime.report)
@@ -396,7 +460,8 @@ class FleetRuntime:
             budget_history=np.asarray(budget_history),
             total_tuples=T * E * k * n,
             adaptive=(None if self._adaptive_policy is None
-                      else self._adaptive_policy.counters()))
+                      else self._adaptive_policy.counters()),
+            chaos=chaos_info)
 
 
 # ==========================================================================
@@ -438,6 +503,12 @@ class RunReport:
     planner_invocations: Optional[int] = None
     plans_reused: Optional[int] = None
     detection_lag_windows: Optional[float] = None
+    # chaos fault injection (repro.chaos); None = fixed-membership run
+    recovery_windows: Optional[float] = None
+    down_site_windows: Optional[int] = None
+    availability_by_region: Optional[dict] = None
+    outage_nrmse: Optional[dict] = None
+    steady_nrmse: Optional[dict] = None
 
     @property
     def wan_fraction(self) -> float:
@@ -471,6 +542,12 @@ class RunReport:
             d["planner_invocations"] = self.planner_invocations
             d["plans_reused"] = self.plans_reused
             d["detection_lag_windows"] = self.detection_lag_windows
+        if self.down_site_windows is not None:
+            d["recovery_windows"] = self.recovery_windows
+            d["down_site_windows"] = self.down_site_windows
+            d["availability_by_region"] = dict(self.availability_by_region)
+            d["outage_nrmse"] = dict(self.outage_nrmse)
+            d["steady_nrmse"] = dict(self.steady_nrmse)
         return d
 
     def summary(self) -> str:
@@ -528,7 +605,17 @@ def _report_fleet(scenario, r: dict, n_sites: int) -> RunReport:
         plans_reused=(int(r["plans_reused"])
                       if "plans_reused" in r else None),
         detection_lag_windows=(float(r["detection_lag_windows"])
-                               if "detection_lag_windows" in r else None))
+                               if "detection_lag_windows" in r else None),
+        recovery_windows=(float(r["recovery_windows"])
+                          if "recovery_windows" in r else None),
+        down_site_windows=(int(r["down_site_windows"])
+                           if "down_site_windows" in r else None),
+        availability_by_region=(dict(r["availability_by_region"])
+                                if "availability_by_region" in r else None),
+        outage_nrmse=(dict(r["outage_nrmse"])
+                      if "outage_nrmse" in r else None),
+        steady_nrmse=(dict(r["steady_nrmse"])
+                      if "steady_nrmse" in r else None))
 
 
 # ==========================================================================
@@ -583,7 +670,8 @@ class Experiment:
                                        else tspec.staleness_deadline_ms),
                 retransmit_timeout_ms=tspec.retransmit_timeout_ms,
                 max_retries=tspec.max_retries,
-                adaptive=scenario.adaptive)
+                adaptive=scenario.adaptive,
+                chaos=scenario.chaos)
             return cls(scenario=scenario, runtime=runtime)
 
         # single edge — the E=1 degenerate fleet.  A one-site topology

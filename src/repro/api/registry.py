@@ -118,6 +118,7 @@ class Registry:
 #   RUNTIMES          repro.runtime          (event | scan | scan_steps)
 #   DRIFT_DETECTORS   repro.adaptive.drift   (threshold | page_hinkley |
 #                                             always | never)
+#   FAULTS            repro.chaos.spec       (flap | join | outage | random)
 # --------------------------------------------------------------------------
 
 SOLVERS = Registry("solver")
@@ -133,6 +134,7 @@ DEMAND_SIGNALS = Registry("controller demand signal")
 ENGINES = Registry("plan engine")
 RUNTIMES = Registry("runtime")
 DRIFT_DETECTORS = Registry("drift detector")
+FAULTS = Registry("fault family")
 
 ALL_REGISTRIES: dict[str, Registry] = {
     "solvers": SOLVERS,
@@ -148,6 +150,7 @@ ALL_REGISTRIES: dict[str, Registry] = {
     "engines": ENGINES,
     "runtimes": RUNTIMES,
     "drift_detectors": DRIFT_DETECTORS,
+    "faults": FAULTS,
 }
 
 
@@ -159,6 +162,7 @@ def populate() -> dict[str, Registry]:
     call this to force all registrations.
     """
     import repro.adaptive           # noqa: F401  (drift detectors)
+    import repro.chaos              # noqa: F401  (fault families)
     import repro.core.planner       # noqa: F401  (pulls solver/epsilon/...)
     import repro.core.queries       # noqa: F401
     import repro.data.streams       # noqa: F401

@@ -25,6 +25,7 @@ from repro.core.types import PlannerConfig
 _reg.populate()        # component validation needs the registries filled
 
 from repro.adaptive import AdaptiveSpec  # noqa: E402  (needs populate())
+from repro.chaos import ChaosSpec  # noqa: E402  (needs populate())
 
 
 def _freeze(v):
@@ -226,6 +227,7 @@ class ScenarioConfig:
     runtime: str = "event"             # RUNTIMES: event | scan | scan_steps
     name: str = ""
     adaptive: Optional[AdaptiveSpec] = None   # None = plan every window
+    chaos: Optional[ChaosSpec] = None         # None = fixed membership
 
     def __post_init__(self):
         # normalize array-like planner fields to tuples (JSON round trip +
@@ -292,6 +294,27 @@ class ScenarioConfig:
                     "(plan_window draws samples inside the plan); use the "
                     "batched or sharded engine")
 
+        # chaos fault injection varies fleet membership, so it needs a
+        # fleet, and it cannot combine with adaptive re-planning (the
+        # drift gate's cached plan would replay allocations for dead
+        # sites).  Fault indices are checked against the topology here so
+        # a typo'd site/region id fails at construction, not mid-run.
+        if self.chaos is not None and isinstance(self.chaos, dict):
+            object.__setattr__(self, "chaos",
+                               ChaosSpec.from_dict(self.chaos))
+        if self.chaos is not None:
+            if not self.is_fleet:
+                raise ValueError(
+                    "chaos fault injection requires a fleet topology; a "
+                    "single edge has no membership to vary")
+            if self.adaptive is not None and not self.chaos.is_trivial:
+                raise ValueError(
+                    "chaos and adaptive re-planning cannot be combined: "
+                    "the drift gate's cached plan would replay "
+                    "allocations for dead sites")
+            self.chaos.validate_topology(self.topology.n_sites,
+                                         self.topology.n_regions)
+
         # the runtime choice validates the whole scenario against what it
         # can execute (the scan runtime refuses WAN timing it cannot model)
         _reg.RUNTIMES.get(self.runtime).check(self)
@@ -318,6 +341,8 @@ class ScenarioConfig:
             "name": self.name,
             "adaptive": (None if self.adaptive is None
                          else self.adaptive.to_dict()),
+            "chaos": (None if self.chaos is None
+                      else self.chaos.to_dict()),
         }
         return d
 
@@ -345,6 +370,8 @@ class ScenarioConfig:
             name=d.get("name", ""),
             adaptive=(None if d.get("adaptive") is None
                       else AdaptiveSpec.from_dict(d["adaptive"])),
+            chaos=(None if d.get("chaos") is None
+                   else ChaosSpec.from_dict(d["chaos"])),
         )
 
     @classmethod

@@ -1,0 +1,21 @@
+"""repro.chaos — declarative fault injection + dynamic fleet membership.
+
+Chaos scenarios (``ScenarioConfig.chaos``) describe site flaps, regional
+outages, mid-run joins and a deterministic random-flap process; everything
+reduces to one host-computed boolean liveness table shared exactly by the
+event loop and the scan runtime (docs/chaos.md).
+
+The jax-side carry (:class:`ChaosCarry`) lives in its own module so spec
+validation and metrics stay importable without touching the device.
+"""
+from __future__ import annotations
+
+from repro.chaos.carry import ChaosCarry, make_chaos_carry
+from repro.chaos.metrics import chaos_metrics, masked_nrmse, \
+    recovery_windows
+from repro.chaos.spec import FAULTS, ChaosSpec, liveness_table
+
+__all__ = [
+    "FAULTS", "ChaosCarry", "ChaosSpec", "chaos_metrics", "liveness_table",
+    "make_chaos_carry", "masked_nrmse", "recovery_windows",
+]

@@ -34,9 +34,44 @@ def _flatten(state):
     return {keystr(p): np.asarray(jax.device_get(v)) for p, v in leaves}, treedef
 
 
+def _pid_alive(pid: int) -> bool:
+    try:
+        os.kill(pid, 0)
+    except ProcessLookupError:
+        return False
+    except PermissionError:
+        return True               # exists, owned by someone else
+    return True
+
+
+def _gc_orphan_tmp(directory: Path) -> None:
+    """Remove ``.tmp-*`` staging dirs left by crashed savers.
+
+    A save that dies between ``tmp.mkdir()`` and the ``os.rename`` leaks
+    its staging directory forever (the atomic-rename design never revisits
+    it).  Each tmp name embeds the writer's pid, so on the next save we can
+    tell an orphan from a concurrent writer: dirs whose pid is dead (or
+    whose legacy name carries no pid) are torn down, our own and live
+    writers' dirs are left alone.
+    """
+    for d in directory.glob(".tmp-*"):
+        if not d.is_dir():
+            continue
+        parts = d.name.split("-")
+        try:
+            pid = int(parts[2])
+        except (IndexError, ValueError):
+            shutil.rmtree(d, ignore_errors=True)   # pre-pid legacy name
+            continue
+        if pid == os.getpid() or _pid_alive(pid):
+            continue
+        shutil.rmtree(d, ignore_errors=True)
+
+
 def save(state, step: int, directory: str | Path) -> Path:
     directory = Path(directory)
     directory.mkdir(parents=True, exist_ok=True)
+    _gc_orphan_tmp(directory)
     tmp = directory / f".tmp-{step}-{os.getpid()}"
     if tmp.exists():
         shutil.rmtree(tmp)

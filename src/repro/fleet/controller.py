@@ -80,8 +80,18 @@ def water_fill(demand: np.ndarray, total: float, lo: np.ndarray,
 
     Iterative clip-and-redistribute; exact when the box constraints leave
     slack, best-effort (total preserved up to the feasible box) otherwise.
+
+    Degenerate demand is guarded here rather than NaN-poisoning the fleet:
+    non-finite entries (an edge reporting inf error) are treated as absent,
+    and when no site reports positive demand at all the split falls back to
+    uniform within the box.  Positive finite demand takes the exact legacy
+    arithmetic path.
     """
-    d = np.maximum(np.asarray(demand, np.float64), 1e-12)
+    d = np.asarray(demand, np.float64)
+    d = np.where(np.isfinite(d), d, 0.0)
+    if not (d > 0).any():
+        d = np.ones_like(d)          # no usable signal: uniform in the box
+    d = np.maximum(d, 1e-12)
     lo = np.broadcast_to(np.asarray(lo, np.float64), d.shape)
     hi = np.broadcast_to(np.asarray(hi, np.float64), d.shape)
     b = np.clip(total * d / d.sum(), lo, hi)
@@ -146,7 +156,7 @@ class BudgetController:
     def equal_share(self) -> float:
         return self.total_budget / self.n_sites
 
-    def budgets(self) -> np.ndarray:
+    def budgets(self, live: Optional[np.ndarray] = None) -> np.ndarray:
         """(E,) per-site budgets for the next window (floats; callers floor).
 
         With ``cost_aware`` on, demand is discounted by the uplink's
@@ -156,16 +166,39 @@ class BudgetController:
         yield budget first at equal error pressure, cutting fleet WAN $
         while conserving the fleet-wide sample total.  Off (the default)
         this is bit-for-bit the cost-blind controller.
+
+        ``live`` (chaos/membership, repro.chaos): an (E,) bool mask.  Dead
+        sites get budget 0 and their share water-fills over the live ones
+        (their floor/ceiling collapse to 0 so the redistribution happens
+        inside the same allocator).  ``None`` — and an all-True mask — is
+        the legacy fixed-membership arithmetic, bitwise.  The equal share
+        stays ``total/n_sites`` (the membership-invariant reference the
+        floors, ceilings and recovery metrics are defined against).
         """
+        liv = None
+        if live is not None:
+            liv = np.asarray(live, bool)
+            if liv.shape != (self.n_sites,):
+                raise ValueError(f"live mask shape {liv.shape} != "
+                                 f"({self.n_sites},)")
+            if liv.all():
+                liv = None               # all-live == legacy, bitwise
         eq = self.equal_share
         hi = np.full(self.n_sites, self.ceil_mult * eq)
         if self.site_capacity is not None:
             hi = np.minimum(hi, np.asarray(self.site_capacity, np.float64))
         if self.mode == "static" or not self._seen:
             b = np.minimum(np.full(self.n_sites, eq), hi)
+            if liv is not None:          # static never redistributes
+                b = b * liv
+        elif liv is not None and not liv.any():
+            b = np.zeros(self.n_sites)   # an all-dead fleet ships nothing
         else:
             lo = np.minimum(np.full(self.n_sites, self.floor_mult * eq), hi)
             demand = self._demand
+            if liv is not None:
+                lo, hi = lo * liv, hi * liv
+                demand = demand * liv
             discount = None
             if self.cost_aware and self.link_cost is not None:
                 c = np.asarray(self.link_cost, np.float64)
@@ -181,6 +214,8 @@ class BudgetController:
                 # [lo, hi] and the fleet total is conserved
                 w = self.query_split
                 tail = self._demand_tail
+                if liv is not None:
+                    tail = tail * liv
                 if discount is not None:
                     tail = tail / discount
                 b = (water_fill(demand, (1 - w) * self.total_budget,
@@ -192,7 +227,7 @@ class BudgetController:
 
     def update(self, obs_err: np.ndarray, r2: np.ndarray,
                objective=None, arrival_lag=None,
-               obs_err_tail=None) -> None:
+               obs_err_tail=None, live=None) -> None:
         """Feed one window's per-site observations.
 
         obs_err: (E,) edge-local reconstruction error (any consistent scale).
@@ -208,7 +243,17 @@ class BudgetController:
         obs_err_tail: (E,) edge-local error of the tail queries (VAR/MAX),
             feeding the tail tranche when ``query_split`` is set; ``None``
             falls back to ``obs_err`` through the tail demand signal.
+        live: (E,) bool membership mask (chaos runs).  Dead sites shipped
+            nothing, so their demand/r2 EWMAs are frozen at the pre-outage
+            value — a rejoining site restarts from its last known demand
+            instead of the nan->1.0 default, which is what makes recovery
+            fast.  ``None``/all-True is the legacy arithmetic, bitwise.
         """
+        liv = None
+        if live is not None:
+            liv = np.asarray(live, bool)
+            if liv.all():
+                liv = None               # all-live == legacy, bitwise
         if arrival_lag is not None:
             lag = np.asarray(arrival_lag, np.float64)
             ok = np.isfinite(lag)
@@ -233,6 +278,8 @@ class BudgetController:
         demand_tail = np.sqrt(np.maximum(tail_err, 1e-9) * b)
         a = self.ewma
         r2c = np.clip(np.nan_to_num(np.asarray(r2, np.float64)), 0.0, 1.0)
+        prev_demand, prev_tail, prev_r2 = (
+            self._demand, self._demand_tail, self._r2)
         if not self._seen:
             self._demand, self._r2 = demand, r2c
             self._demand_tail = demand_tail
@@ -241,3 +288,7 @@ class BudgetController:
             self._demand = (1 - a) * self._demand + a * demand
             self._demand_tail = (1 - a) * self._demand_tail + a * demand_tail
             self._r2 = (1 - a) * self._r2 + a * r2c
+        if liv is not None:              # dead sites: hold pre-outage EWMAs
+            self._demand = np.where(liv, self._demand, prev_demand)
+            self._demand_tail = np.where(liv, self._demand_tail, prev_tail)
+            self._r2 = np.where(liv, self._r2, prev_r2)

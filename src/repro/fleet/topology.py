@@ -80,6 +80,10 @@ class FleetTopology:
         name_idx = {n: i for i, n in enumerate(self.region_names)}
         return np.asarray([name_idx[s.region] for s in self.sites], np.int64)
 
+    def sites_in_region(self, r: int) -> np.ndarray:
+        """Site ids belonging to region index ``r`` (chaos outage targets)."""
+        return np.flatnonzero(self.region_of() == r)
+
 
 def make_topology(n_regions: int, sites_per_region: int, k: int,
                   seed: int = 0, drop_prob: float = 0.0,

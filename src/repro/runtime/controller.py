@@ -57,7 +57,11 @@ class CtrlParams:
 
 def water_fill(demand, total: float, lo, hi, iters: int = 8):
     """jnp mirror of ``repro.fleet.controller.water_fill`` (unrolled)."""
-    d = jnp.maximum(demand, 1e-12)
+    d = jnp.where(jnp.isfinite(demand), demand, 0.0)
+    # no usable signal (all zero/non-finite, e.g. every site dark):
+    # uniform in the box instead of NaN-poisoning the carry
+    d = jnp.where(jnp.any(d > 0), d, jnp.ones_like(d))
+    d = jnp.maximum(d, 1e-12)
     b = jnp.clip(total * d / jnp.sum(d), lo, hi)
     for _ in range(iters):
         excess = total - jnp.sum(b)
@@ -72,19 +76,36 @@ def water_fill(demand, total: float, lo, hi, iters: int = 8):
     return b
 
 
-def controller_budgets(state: ControllerState, p: CtrlParams):
-    """(E,) raw per-window budgets — ``BudgetController.budgets()``."""
+def controller_budgets(state: ControllerState, p: CtrlParams, live=None):
+    """(E,) raw per-window budgets — ``BudgetController.budgets(live=)``.
+
+    ``live`` is a traced (E,) bool membership mask (chaos runs): dead
+    sites' floor/ceiling/demand collapse to 0 so the water-fill
+    redistributes their share over the live fleet.  ``None`` (static
+    Python, decided at trace time) compiles the legacy mask-free graph —
+    chaos-off scenarios keep their exact XLA program.
+    """
     eq = p.equal_share
     e = p.n_sites
     hi = jnp.full((e,), p.ceil_mult * eq, jnp.float32)
     static_b = jnp.minimum(jnp.full((e,), eq, jnp.float32), hi)
+    if live is not None:
+        livf = live.astype(jnp.float32)
+        hi = hi * livf
+        static_b = static_b * livf
     if p.mode == "static":
         return static_b
     lo = jnp.minimum(jnp.full((e,), p.floor_mult * eq, jnp.float32), hi)
     demand = state.demand
+    if live is not None:
+        demand = demand * livf
     if p.cost_discount is not None:
         demand = demand / jnp.asarray(p.cost_discount, jnp.float32)
     reb = water_fill(demand, p.total_budget, lo, hi)
+    if live is not None:
+        # all-dead window: the uniform fallback inside water_fill fills a
+        # degenerate [0, 0] box, but keep the contract explicit — ship 0
+        reb = reb * livf
     return jnp.where(state.seen, reb, static_b)
 
 
@@ -102,8 +123,13 @@ def _signal(name: str, obs, pred):
 
 def controller_update(state: ControllerState, p: CtrlParams, raw_budgets,
                       obs_err, r2, objective,
-                      arrival_lag=None) -> ControllerState:
-    """``BudgetController.update`` with ``last_budgets = raw_budgets``."""
+                      arrival_lag=None, live=None) -> ControllerState:
+    """``BudgetController.update`` with ``last_budgets = raw_budgets``.
+
+    ``live`` (traced (E,) bool, or static None): dead sites' demand/r2
+    EWMAs hold their pre-outage value, so a rejoining site resumes from
+    its last known demand instead of the nan->1.0 default.
+    """
     a = p.ewma
     if arrival_lag is None:          # zero-latency scan: every lag obs is 0
         lag_obs = jnp.zeros_like(state.lag)
@@ -125,6 +151,9 @@ def controller_update(state: ControllerState, p: CtrlParams, raw_budgets,
     demand = jnp.where(state.seen,
                        (1 - a) * state.demand + a * demand_new, demand_new)
     r2_mix = jnp.where(state.seen, (1 - a) * state.r2 + a * r2_new, r2_new)
+    if live is not None:             # dead sites: hold pre-outage EWMAs
+        demand = jnp.where(live, demand, state.demand)
+        r2_mix = jnp.where(live, r2_mix, state.r2)
     return ControllerState(demand=demand, r2=r2_mix, lag=lag,
                            lag_seen=lag_seen, seen=jnp.asarray(True),
                            last_budgets=raw_budgets)

@@ -20,7 +20,7 @@ def aggregate_fleet(*, topology, qnames, est, est_q, tru, ages,
                     bytes_per_site, cost_per_site, gaps, revisions,
                     late_drops, duplicates, arrival_lag_ms, plan_seconds,
                     plan_windows, budget_history, total_tuples,
-                    retransmits=0, adaptive=None) -> dict:
+                    retransmits=0, adaptive=None, chaos=None) -> dict:
     """Roll per-window tables into the fleet result dict.
 
     est/est_q/tru: {query: (T, E, k)} float arrays (NaN where unanswered);
@@ -32,6 +32,10 @@ def aggregate_fleet(*, topology, qnames, est, est_q, tru, ages,
     result only when present, so plan-every-window runs keep the exact
     legacy key set (the sweep goldens treat key presence as part of the
     contract).
+
+    ``chaos``: the recovery/degradation metric dict from
+    ``repro.chaos.chaos_metrics`` or None — merged under the same
+    only-when-present contract.
     """
     from repro.streaming.events import freshness_percentiles
     E = topology.n_sites
@@ -96,5 +100,14 @@ def aggregate_fleet(*, topology, qnames, est, est_q, tru, ages,
             "drift_fires": int(adaptive["drift_fires"]),
             "detection_lag_windows":
                 float(adaptive["detection_lag_windows"]),
+        }),
+        **({} if chaos is None else {
+            "liveness": chaos["liveness"],
+            "down_site_windows": int(chaos["down_site_windows"]),
+            "gap_served_cells": int(chaos["gap_served_cells"]),
+            "availability_by_region": chaos["availability_by_region"],
+            "recovery_windows": float(chaos["recovery_windows"]),
+            "outage_nrmse": chaos["outage_nrmse"],
+            "steady_nrmse": chaos["steady_nrmse"],
         }),
     }

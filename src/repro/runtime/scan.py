@@ -72,6 +72,7 @@ class ScanRuntime:
     use_kernel: Optional[bool] = None
     interpret: bool = False
     adaptive: Optional["AdaptiveSpec"] = None   # None = plan every window
+    chaos: Optional["ChaosSpec"] = None         # None = fixed membership
     is_scan = True                     # duck-typed runtime dispatch
 
     def __post_init__(self):
@@ -106,6 +107,21 @@ class ScanRuntime:
             raise ValueError("adaptive re-planning requires a fleet "
                              "topology (>1 site); single-edge scans plan "
                              "per window by construction")
+        if self.chaos is not None and self.topology is None:
+            raise ValueError("chaos fault injection requires a fleet "
+                             "topology; a single edge has no membership "
+                             "to vary")
+        # trivial spec == no faults: compile the exact legacy graph
+        self._chaos_active = (self.chaos is not None
+                              and not self.chaos.is_trivial)
+        if self._chaos_active:
+            if self.adaptive is not None:
+                raise ValueError(
+                    "chaos and adaptive re-planning cannot be combined: "
+                    "the drift gate's cached plan would replay allocations "
+                    "for dead sites")
+            self.chaos.validate_topology(
+                self.topology.n_sites, len(self.topology.region_names))
         self.spec = MODELS.get(cfg.model)
         self.n_sites = 1 if self.topology is None else self.topology.n_sites
         if self.topology is not None:
@@ -142,7 +158,8 @@ class ScanRuntime:
             return cls(cfg=scenario.planner, ctrl=ctrl, topology=topo,
                        query_names=tuple(scenario.queries), mode=mode,
                        collect=collect, use_kernel=use_kernel,
-                       interpret=interpret, adaptive=scenario.adaptive)
+                       interpret=interpret, adaptive=scenario.adaptive,
+                       chaos=scenario.chaos)
         # single edge: the controller is inert (one site, static budget)
         ctrl = CtrlParams(total_budget=1.0, n_sites=1, mode="static")
         topo = (scenario.topology.build(1)
@@ -168,15 +185,16 @@ class ScanRuntime:
             exec_arr = (None if static_exec is None
                         else np.asarray(static_exec, np.float32))
 
-            def fn(state, wids, pool):
+            def fn(state, xs, pool):
+                # xs: wids, or (wids, live rows) on an active chaos run
                 step = make_window_step(
                     pool, seed=self.cfg_eff.seed, plan_fn=self._plan_fn,
                     qnames=self.query_names, multi=self.spec.multi,
                     mean=self.spec.mean, ctrl=self.ctrl,
                     static_exec_budgets=exec_arr, collect=self.collect,
                     adaptive=self.adaptive, use_kernel=self.use_kernel,
-                    interpret=self.interpret)
-                return jax.lax.scan(step, state, wids)
+                    interpret=self.interpret, chaos=self._chaos_active)
+                return jax.lax.scan(step, state, xs)
 
             self._fns[static_exec] = jax.jit(fn, donate_argnums=0)
         return self._fns[static_exec]
@@ -251,19 +269,33 @@ class ScanRuntime:
             state = dataclasses.replace(
                 state,
                 adaptive=make_adaptive_carry(self.n_sites, k, plan_shapes))
+        live_tbl = None
+        if self._chaos_active:
+            from repro.chaos import liveness_table, make_chaos_carry
+            live_tbl = liveness_table(self.chaos, T, self.n_sites,
+                                      self.topology.region_of(),
+                                      first_window=w0)
+            if state.chaos is None:
+                # fresh run (or a legacy checkpoint resumed into chaos):
+                # empty gap-serving memory, everyone live
+                state = dataclasses.replace(
+                    state, chaos=make_chaos_carry(self.n_sites, k,
+                                                  self.query_names))
         fn = self._scan_fn(static_exec)
         pool = jnp.asarray(pool_np)
         wids = jnp.arange(w0, w0 + T, dtype=jnp.int32)
+        xs = wids if live_tbl is None else (wids, jnp.asarray(live_tbl))
 
         t0 = time.perf_counter()
         if self.mode == "scan":
-            state, ys = fn(state, wids, pool)
+            state, ys = fn(state, xs, pool)
         else:
             chunks = []
             for w in range(T):
-                state, y = fn(state, wids[w:w + 1], pool)
+                state, y = fn(state, jax.tree.map(lambda a: a[w:w + 1], xs),
+                              pool)
                 chunks.append(y)
-            ys = jax.tree.map(lambda *xs: jnp.concatenate(xs), *chunks)
+            ys = jax.tree.map(lambda *xs_: jnp.concatenate(xs_), *chunks)
         ys = jax.block_until_ready(ys)
         scan_seconds = time.perf_counter() - t0
         self.plan_seconds += scan_seconds
@@ -271,8 +303,8 @@ class ScanRuntime:
         state = jax.tree.map(np.asarray, state)
 
         if self.collect == "payloads":
-            est, tru, bytes_site, cost_site = self._replay(ys, pool_np, T,
-                                                           windows, w0=w0)
+            est, tru, bytes_site, cost_site = self._replay(
+                ys, pool_np, T, windows, w0=w0, live_tbl=live_tbl)
         else:
             est = {q: np.asarray(ys["est"][q], np.float64)
                    for q in self.query_names}
@@ -295,20 +327,27 @@ class ScanRuntime:
             "controller_demand": state.controller.demand,
             "plan_raw": {f: ys[f] for f in
                          ("budgets", "obs_err", "r2", "objective")},
+            "bytes_history": ys["bytes"],
         }
         if single:
             return self._result_single(est, tru, bytes_site, cost_site, T,
                                        k, n, scan_seconds, extras)
         return self._result_fleet(est, tru, bytes_site, cost_site, ys,
-                                  state, T, k, n, scan_seconds, extras)
+                                  state, T, k, n, scan_seconds, extras,
+                                  live_tbl=live_tbl)
 
     # ------------------------------------------------------------- results
-    def _replay(self, ys, pool_np, T, windows, w0: int = 0):
+    def _replay(self, ys, pool_np, T, windows, w0: int = 0, live_tbl=None):
         """Host replay of the collected payloads through the event path's
         own assemble/reconstruct/query code — the bitwise report mode.
 
         ``w0`` is the first window id of a resumed run: output row ``t``
         holds window ``w0 + t``, which read pool slot ``(w0 + t) % P``.
+
+        ``live_tbl`` (chaos runs): dead (window, site) cells skip payload
+        assembly entirely — zero WAN bytes — and are gap-served from the
+        site's last live reconstruction, mirroring
+        ``ReorderCloudNode.serve`` (NaN before the first live window).
         """
         from repro.core.reconstruct import reconstruct_window
         from repro.planning.engine import assemble_payload
@@ -320,10 +359,23 @@ class ScanRuntime:
         bytes_site = np.zeros(E, np.int64)
         cost_site = np.zeros(E, np.float64)
         samples = ys["samples"]
+        last_rec = [None] * E          # gap-serving memory (chaos only)
         for t in range(T):
             plan_t = {f: ys[f][t] for f in PAYLOAD_PLAN_FIELDS}
             vals = pool_np[(w0 + t) % P]
             for s in range(E):
+                if live_tbl is not None and not live_tbl[t, s]:
+                    vals_true = [vals[s, i] for i in range(k)]
+                    if last_rec[s] is not None:
+                        for q in qnames:
+                            fn = Q.QUERIES[q]
+                            est[q][t, s] = [fn(r) for r in last_rec[s]]
+                            tru[q][t, s] = [fn(r) for r in vals_true]
+                    else:
+                        for q in qnames:
+                            fn = Q.QUERIES[q]
+                            tru[q][t, s] = [fn(r) for r in vals_true]
+                    continue
                 real = [samples[t, s, i, :int(plan_t["n_real"][s, i])]
                         for i in range(k)]
                 payload = assemble_payload(self.spec, plan_t, s, w0 + t,
@@ -332,6 +384,8 @@ class ScanRuntime:
                 bytes_site[s] += nb
                 cost_site[s] += nb * self._cost[s]
                 rec = reconstruct_window(payload)
+                if live_tbl is not None:
+                    last_rec[s] = rec
                 if self.topology is None:
                     # event oracle computes truth from the original window
                     # values (possibly f64), not the f32 device pool
@@ -371,7 +425,7 @@ class ScanRuntime:
         }
 
     def _result_fleet(self, est, tru, bytes_site, cost_site, ys, state, T,
-                      k, n, scan_seconds, extras):
+                      k, n, scan_seconds, extras, live_tbl=None):
         from repro.runtime.report import aggregate_fleet
         ages = np.zeros((T, self.n_sites))
         ad = None
@@ -380,14 +434,24 @@ class ScanRuntime:
             from repro.adaptive import gate_counters
             ad = gate_counters(state.adaptive.gate)
             plan_windows = ad["planner_invocations"]
+        gaps = 0
+        chaos_info = None
+        if live_tbl is not None:
+            from repro.chaos import chaos_metrics
+            gaps = int((~live_tbl).sum())
+            chaos_info = chaos_metrics(
+                live_tbl, np.asarray(ys["budgets"], np.float64),
+                self.ctrl.equal_share, est, tru, self.query_names,
+                self.topology.region_of(), self.topology.region_names)
         raw = aggregate_fleet(
             topology=self.topology, qnames=self.query_names,
             est=est, est_q=est, tru=tru, ages=ages,
             bytes_per_site=bytes_site, cost_per_site=cost_site,
-            gaps=0, revisions=0, late_drops=0, duplicates=0,
+            gaps=gaps, revisions=0, late_drops=0, duplicates=0,
             arrival_lag_ms=np.asarray(state.controller.lag, np.float64),
             plan_seconds=scan_seconds, plan_windows=plan_windows,
             budget_history=ys["budgets"],
-            total_tuples=T * self.n_sites * k * n, adaptive=ad)
+            total_tuples=T * self.n_sites * k * n, adaptive=ad,
+            chaos=chaos_info)
         raw.update(extras)
         return raw

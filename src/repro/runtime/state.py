@@ -63,6 +63,10 @@ class RuntimeState:
     # As a pytree, None is an empty subtree, so legacy states/checkpoints
     # flatten to the same leaves as before this field existed.
     adaptive: Optional[Any] = None
+    # chaos carry (repro.chaos.ChaosCarry: last liveness mask + the
+    # gap-serving estimate memory) — None outside chaos runs, same
+    # empty-subtree contract as ``adaptive``.
+    chaos: Optional[Any] = None
 
 
 def init_state(n_sites: int, k: int, equal_share: float) -> RuntimeState:

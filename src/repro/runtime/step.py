@@ -24,6 +24,7 @@ RNG parity (bit-for-bit with the event-loop paths):
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Optional
 
@@ -236,8 +237,9 @@ def make_window_step(pool, *, seed: int, plan_fn, qnames, multi: bool,
                      mean: bool, ctrl: CtrlParams,
                      static_exec_budgets: Optional[np.ndarray] = None,
                      collect: str = "estimates", adaptive=None,
-                     use_kernel=None, interpret: bool = False):
-    """Build ``step(state, wid) -> (state, outputs)`` for ``lax.scan``.
+                     use_kernel=None, interpret: bool = False,
+                     chaos: bool = False):
+    """Build ``step(state, xs) -> (state, outputs)`` for ``lax.scan``.
 
     pool: (P, E, k, N) f32 device array; window ``wid`` reads slot
     ``wid % P`` (P == T for materialized runs; a small cycled pool for
@@ -250,6 +252,16 @@ def make_window_step(pool, *, seed: int, plan_fn, qnames, multi: bool,
     detector: ``lax.cond(replan, plan_fn, cached_plan)``, so reused
     windows skip the planning work entirely inside the while-loop body.
     ``use_kernel``/``interpret`` route the gate's stream_stats pass.
+
+    chaos: when True, ``xs`` is ``(wid, live)`` — ``live`` the window's
+    (E,) bool membership row — instead of a bare ``wid``, and the step
+    masks dead sites end to end: zero budget (the controller water-fills
+    their share over the live fleet), zero samples/bytes (the planner's
+    >=1-sample floor is masked off), NaN raw estimates (which freeze the
+    controller's demand EWMA exactly like the event loop's missing
+    payloads), frozen ingest totals, and gap-served output estimates from
+    the ``ChaosCarry`` memory.  When False the compiled graph is the
+    legacy one — no mask ops are traced at all.
     """
     p_, e, k, n = pool.shape
     counts = jnp.full((e, k), n, jnp.int32)
@@ -260,14 +272,23 @@ def make_window_step(pool, *, seed: int, plan_fn, qnames, multi: bool,
     if static_exec_budgets is not None:
         static_exec = jnp.asarray(static_exec_budgets, jnp.float32)
 
-    def step(state: RuntimeState, wid):
+    def step(state: RuntimeState, xs):
+        if chaos:
+            wid, live = xs
+            livf = live.astype(jnp.float32)
+        else:
+            wid, live = xs, None
         values = jax.lax.dynamic_index_in_dim(pool, jnp.mod(wid, p_),
                                               keepdims=False)
-        raw_b = controller_budgets(state.controller, ctrl)
+        raw_b = controller_budgets(state.controller, ctrl, live=live)
         if static_exec_budgets is not None:
-            budgets = static_exec
-        else:
+            budgets = static_exec if live is None else static_exec * livf
+        elif live is None:
             budgets = jnp.maximum(jnp.floor(raw_b), 2.0)
+        else:
+            # the >=2 clamp would resurrect dead sites' zero budgets
+            budgets = jnp.where(live, jnp.maximum(jnp.floor(raw_b), 2.0),
+                                0.0)
 
         if adaptive is None:
             plan = plan_fn(values, counts, budgets)
@@ -290,6 +311,14 @@ def make_window_step(pool, *, seed: int, plan_fn, qnames, multi: bool,
                     lambda: plan_fn(values, counts, budgets),
                     lambda: state.adaptive.plan)
             adaptive_carry = AdaptiveCarry(gate=gate, plan=plan)
+        if live is not None:
+            # closed_form_alloc floors every stream at 1 sample even on a
+            # zero budget; dead sites must truly ship nothing.  Masking
+            # n_real leaves live rows' FY draws bitwise intact (the
+            # shuffle's stop = max(n_real) still covers every live row).
+            plan = dataclasses.replace(
+                plan, n_real=plan.n_real * live[:, None].astype(
+                    plan.n_real.dtype))
         samples = sample_fleet(seed, wid, values, plan.n_real)
         imputed, ns, mask_i = _impute(plan, samples, plan.n_real,
                                       multi=multi, mean=mean)
@@ -298,9 +327,25 @@ def make_window_step(pool, *, seed: int, plan_fn, qnames, multi: bool,
         est = _masked_queries([(samples, mask_r), (imputed, mask_i)], qnames)
         tru = _masked_queries([(values, full_mask)], qnames)
 
+        if live is None:
+            served = est
+            chaos_carry = state.chaos
+        else:
+            # gap-serving: dead rows answer from the freshest estimate
+            # that ever arrived (ReorderCloudNode.serve semantics); live
+            # rows refresh the memory
+            served = {q: jnp.where(live[:, None], est[q],
+                                   state.chaos.served[q])
+                      for q in qnames}
+            from repro.chaos import ChaosCarry
+            chaos_carry = ChaosCarry(live=live, served=served)
+
         # WAN accounting — EdgePayload.wan_bytes() per site
         nbytes = (4 * plan.n_real.sum(-1) + header
                   + per_model * (ns > 0).sum(-1)).astype(jnp.int32)
+        if live is not None:
+            # a dark site ships nothing, not even the header
+            nbytes = jnp.where(live, nbytes, 0)
 
         # edge-local error proxy -> controller (FleetRuntime.run semantics)
         e_avg = est.get("AVG")
@@ -314,16 +359,27 @@ def make_window_step(pool, *, seed: int, plan_fn, qnames, multi: bool,
         obs_err = jnp.nanmean(rel, axis=1)
 
         ctrl2 = controller_update(state.controller, ctrl, raw_b, obs_err,
-                                  plan.r2, plan.objective)
-        totals = StreamTotals(count=state.totals.count + n,
-                              s1=state.totals.s1 + values.sum(-1),
-                              s2=state.totals.s2 + (values * values).sum(-1))
+                                  plan.r2, plan.objective, live=live)
+        if live is None:
+            totals = StreamTotals(
+                count=state.totals.count + n,
+                s1=state.totals.s1 + values.sum(-1),
+                s2=state.totals.s2 + (values * values).sum(-1))
+        else:                        # dead sites ingest nothing
+            lcol = livf[:, None]
+            totals = StreamTotals(
+                count=state.totals.count + n * lcol,
+                s1=state.totals.s1 + values.sum(-1) * lcol,
+                s2=state.totals.s2 + (values * values).sum(-1) * lcol)
         new_state = RuntimeState(window_id=wid + 1, controller=ctrl2,
-                                 totals=totals, adaptive=adaptive_carry)
+                                 totals=totals, adaptive=adaptive_carry,
+                                 chaos=chaos_carry)
 
-        out = {"est": est, "tru": tru, "bytes": nbytes, "budgets": budgets,
-               "obs_err": obs_err, "r2": plan.r2,
+        out = {"est": served, "tru": tru, "bytes": nbytes,
+               "budgets": budgets, "obs_err": obs_err, "r2": plan.r2,
                "objective": plan.objective}
+        if live is not None:
+            out["live"] = live
         if collect == "payloads":
             out["samples"] = samples
             for f in PAYLOAD_PLAN_FIELDS:

@@ -180,6 +180,7 @@ class ReorderCloudNode(CloudNode):
     revisions: int = 0
     late_drops: int = 0
     duplicates: int = 0
+    stale_serves: int = 0           # queries answered from an older window
 
     def __post_init__(self):
         # O(1) state per cloud: experiment queries are monotone in wid and a
@@ -233,6 +234,8 @@ class ReorderCloudNode(CloudNode):
         self._frontier = max(self._frontier, wid)
         if self._best_rec is None or self._best_wid > wid:
             return [], float("nan"), None
+        if self._best_wid < wid:    # gap-serving (chaos/outage telemetry)
+            self.stale_serves += 1
         age = now_ms - (self._best_sent_at + self.window_period_ms)
         return self._best_rec, float(age), self._best_wid
 

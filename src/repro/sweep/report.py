@@ -48,8 +48,15 @@ _COUNTER_FIELDS = ("n_sites", "wan_bytes", "full_bytes", "gaps",
 _ADAPTIVE_COUNTER_FIELDS = ("planner_invocations", "plans_reused",
                             "drift_fires")
 
-# raw-dict arrays worth pinning when present (event + scan runtimes)
-_STREAM_RAW_FIELDS = ("window_age_ms", "revised_windows", "budget_history")
+# chaos fault-injection counters (repro.chaos) — same only-when-present
+# contract: fixed-membership goldens keep their legacy key set
+_CHAOS_COUNTER_FIELDS = ("down_site_windows", "gap_served_cells")
+
+# raw-dict arrays worth pinning when present (event + scan runtimes);
+# "liveness" is the chaos membership table — bitwise, a fault schedule
+# that drifts by one cell is a semantics change
+_STREAM_RAW_FIELDS = ("window_age_ms", "revised_windows", "budget_history",
+                      "liveness")
 
 
 def _jsonf(v) -> float | None:
@@ -111,6 +118,9 @@ def serialize_report(report, *, name: str, tolerance: str) -> dict:
     for f in _ADAPTIVE_COUNTER_FIELDS:
         if f in raw:
             counters[f] = int(raw[f])
+    for f in _CHAOS_COUNTER_FIELDS:
+        if f in raw:
+            counters[f] = int(raw[f])
 
     floats = {}
     for q, v in sorted(report.nrmse.items()):
@@ -127,6 +137,15 @@ def serialize_report(report, *, name: str, tolerance: str) -> dict:
             floats[f"region_nrmse/{region}/{q}"] = _jsonf(v)
     if "detection_lag_windows" in raw:
         floats["detection_lag_windows"] = _jsonf(raw["detection_lag_windows"])
+    if "recovery_windows" in raw:
+        floats["recovery_windows"] = _jsonf(raw["recovery_windows"])
+    for table in ("outage_nrmse", "steady_nrmse"):
+        if table in raw:
+            for q, v in sorted(raw[table].items()):
+                floats[f"{table}/{q}"] = _jsonf(v)
+    if "availability_by_region" in raw:
+        for region, v in sorted(raw["availability_by_region"].items()):
+            floats[f"availability/{region}"] = _jsonf(v)
 
     streams = {}
     for q, arr in sorted(report.nrmse_per_stream.items()):

@@ -131,3 +131,51 @@ def test_restored_scan_runtime_resumes_bitwise(tmp_path):
                     jax.tree.leaves(tail["final_state"])):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     assert int(np.asarray(tail["final_state"].window_id)) == T
+
+
+# ------------------------------------------------ orphan staging-dir GC
+
+def test_orphan_tmp_from_killed_writer_gcd_on_next_save(tmp_path):
+    """A writer killed between ``tmp.mkdir()`` and the atomic rename leaks
+    its staging dir; the next save() tears it down (its pid is dead)."""
+    import subprocess
+    import sys
+    code = ("import os, sys; from pathlib import Path; "
+            "d = Path(sys.argv[1]); "
+            "tmp = d / f'.tmp-9-{os.getpid()}'; tmp.mkdir(parents=True); "
+            "(tmp / 'data.npz').write_bytes(b'partial'); "
+            "print(os.getpid())")
+    out = subprocess.run([sys.executable, "-c", code, str(tmp_path)],
+                         capture_output=True, text=True, check=True)
+    pid = int(out.stdout)
+    orphan = tmp_path / f".tmp-9-{pid}"
+    assert orphan.exists()          # the "crash" left its staging dir
+    save(_state(), 1, tmp_path)
+    assert not orphan.exists()
+    assert latest_step(tmp_path) == 1
+
+
+def test_tmp_dirs_of_live_writers_survive_gc(tmp_path):
+    """Our own staging dir and a live concurrent writer's (pid 1 always
+    exists) are never mistaken for orphans; a pre-pid legacy name is."""
+    own = tmp_path / f".tmp-3-{os.getpid()}"
+    live = tmp_path / ".tmp-4-1"
+    legacy = tmp_path / ".tmp-5"
+    for d in (own, live, legacy):
+        d.mkdir(parents=True)
+    save(_state(), 2, tmp_path)
+    assert own.exists() and live.exists()
+    assert not legacy.exists()
+    assert latest_step(tmp_path) == 2
+
+
+def test_async_manager_save_gcs_orphans(tmp_path):
+    """The async writer thread goes through the same save() path, so a
+    leaked staging dir is collected by the next managed save too."""
+    orphan = tmp_path / ".tmp-7-999999999"      # no such pid
+    orphan.mkdir(parents=True)
+    mgr = CheckpointManager(tmp_path, keep=2, async_save=True)
+    mgr.save(_state(), 11)
+    mgr.wait()
+    assert not orphan.exists()
+    assert latest_step(tmp_path) == 11

@@ -218,6 +218,10 @@ def test_committed_scenarios_lint_and_cover_matrix():
     assert {s.config.runtime for s in scenarios} >= {"event", "scan",
                                                      "scan_steps"}
     assert sum("smoke" in s.tags for s in scenarios) >= 3
+    # chaos coverage: at least one fault-injection scenario per runtime
+    chaos_runtimes = {s.config.runtime for s in scenarios
+                      if s.config.chaos is not None}
+    assert chaos_runtimes >= {"event", "scan"}
     for s in scenarios:
         assert sweep_runner.golden_path(s).exists(), s.name
 
