@@ -3,7 +3,8 @@
 Measures end-to-end windows/sec of the ``repro.runtime`` scan engine at
 fleet sizes E in {16, 64, 256} over 1000 windows, against the event-driven
 ``FleetRuntime`` on the identical scenario (zero-latency links, rebalance
-controller, batched closed-form planning).  Both paths run the same jitted
+controller, batched closed-form planning), plus the shard_map-over-sites
+``scan_sharded`` runtime at E in {64, 256, 1024}.  Both paths run the same jitted
 fleet planner; the delta is the runtime harness — the scan engine keeps the
 whole loop (controller EWMAs, per-site budgets, sampling, query tables) on
 device under one ``lax.scan`` with a donated carry, while the event loop
@@ -48,6 +49,14 @@ SCAN_WINDOWS = 1000
 # the event loop is host-bound: a handful of windows gives a stable
 # per-window cost without minutes of wall time at E=256
 EVENT_WINDOWS = {16: 16, 64: 8, 256: 4}
+# sharded scan runtime (repro.runtime.sharded): the whole window step under
+# shard_map over the site mesh.  On the single-device bench box this rides
+# the same executables as the scan rows (the mesh is 1-wide), so the rows
+# track harness overhead; multi-device speedups are pinned functionally in
+# tests/test_scan_runtime.py under 8 forced host devices.  E=1024 gets
+# fewer windows to bound wall time at the largest fleet.
+SHARDED_FLEET_SIZES = (64, 256, 1024)
+SHARDED_WINDOWS = {64: 1000, 256: 500, 1024: 125}
 
 # adaptive re-planning payoff (repro.adaptive): a drifting E=64 fleet where
 # the per-region coupling to the shared signal is re-shuffled three times;
@@ -97,13 +106,13 @@ def _scenario(E: int, runtime: str) -> ScenarioConfig:
         runtime=runtime)
 
 
-def _measure_scan(E: int, n_windows: int) -> dict:
-    exp = Experiment.from_scenario(_scenario(E, "scan"))
+def _measure_scan(E: int, n_windows: int, runtime: str = "scan") -> dict:
+    exp = Experiment.from_scenario(_scenario(E, runtime))
     exp.runtime.collect = "estimates"    # device-only tables; no host replay
     windows = exp.make_windows()
     exp.runtime.run(windows, n_windows=n_windows)        # compile + warm
     r = exp.runtime.run(windows, n_windows=n_windows)    # steady-state
-    return {"scenario": f"throughput/E{E}", "engine": "scan",
+    return {"scenario": f"throughput/E{E}", "engine": runtime,
             "n_sites": E, "n_windows": n_windows,
             "windows_per_sec": float(r["windows_per_sec"]),
             "streams_per_sec": float(r["windows_per_sec"]) * E * K,
@@ -247,6 +256,12 @@ def run() -> list[tuple[str, float, str]]:
                          f"({fmt(speedups[E])}x event)"))
         csv_rows.append((f"throughput/E{E}/event", t_event,
                          f"{fmt(event['windows_per_sec'])} win/s"))
+    for E in SHARDED_FLEET_SIZES:
+        sharded, t_sharded = timed(_measure_scan, E, SHARDED_WINDOWS[E],
+                                   "scan_sharded")
+        bench_rows.append(sharded)
+        csv_rows.append((f"throughput/E{E}/scan_sharded", t_sharded,
+                         f"{fmt(sharded['windows_per_sec'])} win/s"))
     gated, t_gated = timed(
         _measure_adaptive, "gated",
         AdaptiveSpec(detector="threshold", halflife=12.0, threshold=0.25,
@@ -283,7 +298,7 @@ def run_smoke() -> list[tuple[str, float, str]]:
     """CI gate: schema-validate the committed artifact + a tiny live scan."""
     payload = read_bench_json(BENCH_PATH)
     engines = {r["engine"] for r in payload["rows"]}
-    assert engines == {"scan", "event"}, engines
+    assert engines == {"scan", "event", "scan_sharded"}, engines
     rows = {r["scenario"]: r for r in payload["rows"]}
     _check_adaptive_payoff(rows[f"adaptive/E{ADAPTIVE_E}/gated"],
                            rows[f"adaptive/E{ADAPTIVE_E}/always"])
@@ -291,6 +306,10 @@ def run_smoke() -> list[tuple[str, float, str]]:
     mini, us = timed(_measure_scan, 4, 32)
     assert np.isfinite(mini["nrmse_avg"]), mini
     assert mini["wan_bytes"] > 0, mini
+    # the sharded runtime must execute too, and on one device it carries
+    # the batched scan's bitwise byte contract
+    mini_sh, _ = timed(_measure_scan, 4, 32, "scan_sharded")
+    assert mini_sh["wan_bytes"] == mini["wan_bytes"], (mini, mini_sh)
     # miniature chaos run: a 2-window outage on a 4-site fleet must ship
     # zero bytes from dark cells and still answer every query
     exp = Experiment.from_scenario(_chaos_scenario(

@@ -116,6 +116,16 @@ echo "== planning-engine multi-device smoke (8 forced host devices) =="
 XLA_FLAGS="--xla_force_host_platform_device_count=8" \
     python -m pytest -q tests/test_planning_engine.py
 
+echo "== sharded scan runtime multi-device smoke (8 forced host devices) =="
+# the whole per-window cycle under shard_map (runtime='scan_sharded'): run
+# the parity/padding/checkpoint asserts with the site mesh genuinely 8
+# wide.  The slow-marked subprocess pin in tier-1 covers the same ground;
+# this stage keeps the in-process path (donation, specs, collectives)
+# exercised even when slow tests are deselected
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python -m pytest -q -m "not slow" tests/test_scan_runtime.py \
+    -k "sharded_runtime or sharded_ckpt or sharded_padding"
+
 echo "== scenario-API smoke (benchmarks/run.py --smoke, incl. batched/sharded engines) =="
 python -m benchmarks.run --smoke
 

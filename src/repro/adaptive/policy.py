@@ -115,7 +115,8 @@ def gate_init(n_sites: int, k: int) -> GateState:
 
 
 def gate_update(spec: AdaptiveSpec, gate: GateState, values: Array,
-                counts: Array, *, use_kernel=None, interpret: bool = False
+                counts: Array, *, use_kernel=None, interpret: bool = False,
+                axis_name: Optional[str] = None
                 ) -> Tuple[GateState, Array]:
     """One window of the re-plan policy; returns ``(gate', replan () bool)``.
 
@@ -130,6 +131,13 @@ def gate_update(spec: AdaptiveSpec, gate: GateState, values: Array,
     k = corr.shape[-1]
     off = ~jnp.eye(k, dtype=bool)
     dev = jnp.max(jnp.abs(corr - gate.assumed_corr) * off).astype(jnp.float32)
+    if axis_name is not None:
+        # sharded scan: close the max over the site mesh.  Max is exact
+        # under reassociation, so the fire/replan decision (and every
+        # replicated detector scalar downstream) is bitwise the
+        # single-device gate's; padded sites (zero values, zero assumed
+        # corr) contribute dev = 0.
+        dev = jax.lax.pmax(dev, axis_name)
 
     det_state, fire, lag = drift_mod.detector_update(
         spec.detector, {"accum": gate.det_accum, "age": gate.det_age},

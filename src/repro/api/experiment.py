@@ -643,7 +643,7 @@ class Experiment:
         from repro.streaming.events import AsyncTransport
         from repro.streaming.runtime import CloudNode, EdgeNode
         tspec = scenario.transport
-        if scenario.runtime in ("scan", "scan_steps"):
+        if scenario.runtime in ("scan", "scan_steps", "scan_sharded"):
             from repro.runtime.scan import ScanRuntime
             if straggler_drop is not None:
                 raise ValueError("runtime='scan' plans full windows only; "
@@ -652,9 +652,13 @@ class Experiment:
                 scenario = dataclasses.replace(
                     scenario, planner=dataclasses.replace(scenario.planner,
                                                           engine=planning))
-            runtime = ScanRuntime.from_scenario(scenario,
-                                                use_kernel=use_kernel,
-                                                interpret=interpret)
+            rt_cls = ScanRuntime
+            if scenario.runtime == "scan_sharded":
+                from repro.runtime.sharded import ShardedScanRuntime
+                rt_cls = ShardedScanRuntime
+            runtime = rt_cls.from_scenario(scenario,
+                                           use_kernel=use_kernel,
+                                           interpret=interpret)
             return cls(scenario=scenario, runtime=runtime)
         if scenario.is_fleet:
             topo = scenario.topology.build(cls._fleet_k(scenario))

@@ -13,9 +13,11 @@ from __future__ import annotations
 from repro.chaos.carry import ChaosCarry, make_chaos_carry
 from repro.chaos.metrics import chaos_metrics, masked_nrmse, \
     recovery_windows
-from repro.chaos.spec import FAULTS, ChaosSpec, liveness_table
+from repro.chaos.spec import (FAULTS, ChaosSpec, liveness_table,
+                              padded_liveness_table)
 
 __all__ = [
     "FAULTS", "ChaosCarry", "ChaosSpec", "chaos_metrics", "liveness_table",
-    "make_chaos_carry", "masked_nrmse", "recovery_windows",
+    "make_chaos_carry", "masked_nrmse", "padded_liveness_table",
+    "recovery_windows",
 ]

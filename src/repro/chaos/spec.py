@@ -215,3 +215,33 @@ def liveness_table(spec: ChaosSpec, n_windows: int, n_sites: int,
     for name in _FAULT_ORDER:
         FAULTS.get(name)(live, wids, spec, region_of)
     return live
+
+
+def padded_liveness_table(spec, n_windows: int, n_sites: int,
+                          n_padded: int, region_of: np.ndarray,
+                          first_window: int = 0) -> np.ndarray:
+    """(T, E_pad) bool — the chaos table widened with permanently-dead
+    padding columns.
+
+    Sites beyond the declared topology (``n_sites <= s < n_padded`` — the
+    rows a sharded runtime adds to round E up to the device multiple) are
+    not a separate masking mechanism: they are ordinary dead sites in the
+    same liveness mask chaos faults flow through, so every dead-site
+    guarantee (zero budget, zero bytes, frozen EWMAs, no ingest) covers
+    them with the one code path ``make_window_step(chaos=True)`` already
+    implements.  ``spec`` may be None or trivial — all real sites up —
+    which is how a fault-free sharded run expresses pure padding.
+    """
+    if int(n_padded) < int(n_sites):
+        raise ValueError(f"n_padded ({n_padded}) must be >= n_sites "
+                         f"({n_sites})")
+    if spec is None or spec.is_trivial:
+        live = np.ones((int(n_windows), int(n_sites)), bool)
+    else:
+        live = liveness_table(spec, n_windows, n_sites, region_of,
+                              first_window=first_window)
+    if int(n_padded) > int(n_sites):
+        live = np.concatenate(
+            [live, np.zeros((int(n_windows), int(n_padded) - int(n_sites)),
+                            bool)], axis=1)
+    return live

@@ -48,22 +48,67 @@ def _fit_one(y: Array, x_pred: Array, pair_mask: Array, degree: int):
     return coeffs, loc, scale, ev
 
 
-@functools.partial(jax.jit, static_argnames=("degree",))
-def fit_models(values: Array, counts: Array, predictor: Array, degree: int = 3) -> CompactModel:
-    """Fit E[X_i | X_{p_i}] for every stream i in one vmapped pass."""
+@functools.partial(jax.jit, static_argnames=("degree", "use_kernel",
+                                             "interpret"))
+def fit_models(values: Array, counts: Array, predictor: Array,
+               degree: int = 3, use_kernel=None,
+               interpret: bool = False) -> CompactModel:
+    """Fit E[X_i | X_{p_i}] for every stream i in one vmapped pass.
+
+    ``use_kernel=True`` routes the normal-equation accumulations through
+    the fused Pallas ``vandermonde_moments`` kernel (one pass over the
+    window instead of materializing the (N, 4) feature matrix); any other
+    value keeps the reference least-squares path bit-for-bit.  Both solve
+    the same ridge system, so they agree to f32 association noise (pinned
+    in tests/test_models_fit.py).
+    """
     n_max = values.shape[-1]
     idx = jnp.arange(n_max)[None, :]
     mask = (idx < counts[:, None]).astype(values.dtype)
     xp = values[predictor]          # (k, N)
     mp = mask[predictor]            # predictor validity
     pair = mask * mp
+    if use_kernel is True:
+        coeffs, loc, scale, ev = _fit_fused(values, xp, pair, degree,
+                                            interpret)
+    else:
+        def one(y, x, w):
+            return _fit_one(y, x, w, degree)
 
-    def one(y, x, w):
-        return _fit_one(y, x, w, degree)
-
-    coeffs, loc, scale, ev = jax.vmap(one)(values, xp, pair)
+        coeffs, loc, scale, ev = jax.vmap(one)(values, xp, pair)
     return CompactModel(coeffs=coeffs, loc=loc, scale=scale,
                         explained_var=ev, predictor=predictor)
+
+
+def _fit_fused(values: Array, xp: Array, pair: Array, degree: int,
+               interpret: bool):
+    """The `_fit_one` system assembled from fused Vandermonde moments.
+
+    With the 0/1 pair mask w folded into the standardized predictor,
+    ``(u*w)**m == (u**m)*w`` for m >= 1, so one kernel pass over
+    ``(y*w, u*w)`` yields every masked power sum the 4x4 normal equations
+    and the explained-variance identity ``(sum f^2 w - (sum f w)^2/n)``
+    need; only the m=0 count is fed in explicitly.
+    """
+    from repro.kernels.polyfit.ops import (solve_normal_equations,
+                                           vandermonde_moments)
+    pair_n = jnp.sum(pair, axis=-1)                  # (k,) true pair counts
+    n = jnp.maximum(pair_n, 1.0)
+    loc = jnp.sum(xp * pair, axis=-1) / n
+    var_p = jnp.sum(((xp - loc[:, None]) ** 2) * pair, axis=-1) / n
+    scale = jnp.sqrt(jnp.maximum(var_p, 1e-12))
+    uw = ((xp - loc[:, None]) / scale[:, None]) * pair
+    pu, py = vandermonde_moments(values * pair, uw, use_kernel=True,
+                                 interpret=interpret, counts=pair_n)
+    coeffs = solve_normal_equations(pu, py, degree=degree, ridge=_RIDGE)
+    idx4 = jnp.arange(4)
+    keep = (idx4 <= degree).astype(pu.dtype)
+    c = coeffs * keep[None, :]
+    gram = pu[:, idx4[:, None] + idx4[None, :]]      # (k, 4, 4) Hankel
+    s = jnp.einsum("km,km->k", c, pu[:, :4])         # sum of fitted*w
+    ss = jnp.einsum("ki,kij,kj->k", c, gram, c)      # sum of fitted^2*w
+    ev = jnp.maximum(ss - s * s / n, 0.0) / jnp.maximum(n - 1.0, 1.0)
+    return coeffs, loc, scale, ev
 
 
 def mean_model(values: Array, counts: Array, predictor: Array) -> CompactModel:

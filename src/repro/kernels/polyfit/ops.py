@@ -15,11 +15,16 @@ from repro.kernels.polyfit.ref import polyfit_ref
 @functools.partial(jax.jit, static_argnames=("use_kernel", "interpret",
                                              "degree"))
 def vandermonde_moments(y: jax.Array, u: jax.Array, use_kernel: bool = True,
-                        interpret: bool = False, degree: int = 3):
+                        interpret: bool = False, degree: int = 3,
+                        counts=None):
     """Vandermonde power sums for E[y|u] polynomial fits.
 
     Zero padding is exact for every sum except m=0 (the count), which is
-    fixed up with the true N.
+    fixed up with the true N — or, when ``counts`` (k,) is given, with the
+    caller's per-row valid count.  That is what makes *masked* fits work
+    through this kernel: with y and u pre-multiplied by a 0/1 mask w,
+    ``(u*w)**m == (u**m)*w`` for every m >= 1, so all higher moments are
+    the masked sums already and only the m=0 row needs the true count.
     """
     k, n = y.shape
     if not use_kernel:
@@ -33,7 +38,10 @@ def vandermonde_moments(y: jax.Array, u: jax.Array, use_kernel: bool = True,
         up = jnp.pad(u, ((0, kp - k), (0, np_ - n)))
         pu, py = polyfit_pallas(yp, up, tk=tk, tn=tn, interpret=interpret)
         pu, py = pu[:k], py[:k]
-    pu = pu.at[:, 0].set(float(n))      # zero-padding fixup for the count
+    if counts is None:
+        pu = pu.at[:, 0].set(float(n))  # zero-padding fixup for the count
+    else:
+        pu = pu.at[:, 0].set(counts.astype(pu.dtype))
     return pu, py
 
 

@@ -18,6 +18,7 @@ import threading
 from typing import Optional
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 _state = threading.local()
@@ -51,6 +52,26 @@ def site_mesh(n_devices: Optional[int] = None) -> Mesh:
     if n_devices is not None:
         devices = devices[:n_devices]
     return Mesh(np.asarray(devices), ("sites",))
+
+
+def site_pad(n_sites: int, n_devices: int) -> int:
+    """Rows to append so the site axis divides the device count."""
+    return (-int(n_sites)) % int(n_devices)
+
+
+def pad_site_axis(x, n_padded: int, fill=0):
+    """Pad a site-leading array with ``fill`` rows up to ``n_padded`` sites.
+
+    Shared by the sharded plan engine and the sharded scan runtime so every
+    shard_map consumer rounds E up the same way; callers mask the extra
+    rows as permanently-dead sites (``repro.chaos.padded_liveness_table``)
+    or slice them back off the result.
+    """
+    e = x.shape[0]
+    if int(n_padded) == e:
+        return x
+    pad = jnp.full((int(n_padded) - e,) + tuple(x.shape[1:]), fill, x.dtype)
+    return jnp.concatenate([x, pad])
 
 # logical activation axis -> mesh axes (None = replicated)
 ACTIVATION_RULES = {

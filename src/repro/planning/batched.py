@@ -115,7 +115,9 @@ def fleet_plan(values: Array, counts: Array, budgets: Array,
         else:
             degree = 1 if model == "linear" else 3
             fitted = jax.vmap(
-                lambda v, c, p: models_mod.fit_models(v, c, p, degree=degree)
+                lambda v, c, p: models_mod.fit_models(
+                    v, c, p, degree=degree, use_kernel=use_kernel,
+                    interpret=interpret)
             )(values, counts, predictor)
         coeffs, loc, scale = fitted.coeffs, fitted.loc, fitted.scale
         explained_var = fitted.explained_var

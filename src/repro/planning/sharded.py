@@ -22,7 +22,8 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.api.registry import ENGINES
-from repro.parallel.sharding import shard_map_compat, site_mesh
+from repro.parallel.sharding import (pad_site_axis, shard_map_compat,
+                                     site_mesh, site_pad)
 from repro.planning.batched import BatchedEngine, fleet_plan
 
 
@@ -54,14 +55,11 @@ class ShardedEngine(BatchedEngine):
         mesh = site_mesh()
         d = mesh.shape["sites"]
         e = values.shape[0]
-        pad = (-e) % d
+        pad = site_pad(e, d)
         if pad:
-            values = jnp.concatenate(
-                [values, jnp.zeros((pad,) + values.shape[1:], values.dtype)])
-            counts = jnp.concatenate(
-                [counts, jnp.zeros((pad, counts.shape[1]), counts.dtype)])
-            budgets = jnp.concatenate(
-                [budgets, jnp.full((pad,), 2.0, budgets.dtype)])
+            values = pad_site_axis(values, e + pad)
+            counts = pad_site_axis(counts, e + pad)
+            budgets = pad_site_axis(budgets, e + pad, fill=2.0)
 
         fn = _sharded_plan_fn(tuple(dev.id for dev in mesh.devices.flat),
                               float(cfg.epsilon_scale), cfg.dependence,

@@ -14,6 +14,10 @@ Scenarios select it through the RUNTIMES registry defined here:
   * ``"scan_steps"`` — the same compiled step driven one window at a
     time; matches a scan run's discrete trajectory exactly and its float
     tables to f32 association (the incremental, checkpointable cadence).
+  * ``"scan_sharded"`` — the whole window step under ``shard_map`` over
+    the 1-D site mesh (:mod:`repro.runtime.sharded`): fleets only, E
+    padded to the device multiple with the padding masked as permanently
+    dead sites, counters/bytes bitwise against ``"scan"``.
 """
 from __future__ import annotations
 
@@ -22,6 +26,7 @@ from repro.runtime.controller import CtrlParams, controller_budgets, \
     controller_update, water_fill
 from repro.runtime.report import aggregate_fleet
 from repro.runtime.scan import ScanRuntime
+from repro.runtime.sharded import ShardedScanRuntime
 from repro.runtime.state import (ControllerState, RuntimeState, StreamTotals,
                                  init_state)
 from repro.runtime.step import (SCAN_QUERIES, draw_fleet_samples,
@@ -29,9 +34,9 @@ from repro.runtime.step import (SCAN_QUERIES, draw_fleet_samples,
 
 __all__ = [
     "CtrlParams", "ControllerState", "RuntimeState", "StreamTotals",
-    "ScanRuntime", "SCAN_QUERIES", "aggregate_fleet", "controller_budgets",
-    "controller_update", "draw_fleet_samples", "init_state",
-    "make_window_step", "sample_fleet", "water_fill",
+    "ScanRuntime", "SCAN_QUERIES", "ShardedScanRuntime", "aggregate_fleet",
+    "controller_budgets", "controller_update", "draw_fleet_samples",
+    "init_state", "make_window_step", "sample_fleet", "water_fill",
 ]
 
 
@@ -45,6 +50,10 @@ class _RuntimeChoice:
     def check(self, scenario) -> None:
         if self.scan:
             check_scan_scenario(scenario)
+        if self.name == "scan_sharded" and not scenario.is_fleet:
+            raise ValueError(
+                "runtime='scan_sharded' shards the fleet site axis; a "
+                "single edge has nothing to shard (use runtime='scan')")
 
 
 def check_scan_scenario(scenario) -> None:
@@ -107,3 +116,4 @@ def check_scan_scenario(scenario) -> None:
 RUNTIMES.register("event", _RuntimeChoice("event", scan=False))
 RUNTIMES.register("scan", _RuntimeChoice("scan", scan=True))
 RUNTIMES.register("scan_steps", _RuntimeChoice("scan_steps", scan=True))
+RUNTIMES.register("scan_sharded", _RuntimeChoice("scan_sharded", scan=True))

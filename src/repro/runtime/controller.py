@@ -24,6 +24,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -55,19 +56,36 @@ class CtrlParams:
         return tuple(np.sqrt(c).tolist())
 
 
-def water_fill(demand, total: float, lo, hi, iters: int = 8):
-    """jnp mirror of ``repro.fleet.controller.water_fill`` (unrolled)."""
+def water_fill(demand, total: float, lo, hi, iters: int = 8,
+               axis_name: Optional[str] = None):
+    """jnp mirror of ``repro.fleet.controller.water_fill`` (unrolled).
+
+    ``axis_name`` (sharded scan runtime): the arrays are the local site
+    shard and every reduction becomes a global ``psum`` over the mesh axis
+    — the only cross-device traffic in the whole window step.  ``None``
+    (the default) emits the exact legacy single-device graph.
+    """
+    if axis_name is None:
+        gsum = jnp.sum
+        def gany(x):                            # noqa: E306
+            return jnp.any(x)
+    else:
+        def gsum(x):
+            return jax.lax.psum(jnp.sum(x), axis_name)
+
+        def gany(x):
+            return jax.lax.pmax(jnp.any(x).astype(jnp.int32), axis_name) > 0
     d = jnp.where(jnp.isfinite(demand), demand, 0.0)
     # no usable signal (all zero/non-finite, e.g. every site dark):
     # uniform in the box instead of NaN-poisoning the carry
-    d = jnp.where(jnp.any(d > 0), d, jnp.ones_like(d))
+    d = jnp.where(gany(d > 0), d, jnp.ones_like(d))
     d = jnp.maximum(d, 1e-12)
-    b = jnp.clip(total * d / jnp.sum(d), lo, hi)
+    b = jnp.clip(total * d / gsum(d), lo, hi)
     for _ in range(iters):
-        excess = total - jnp.sum(b)
+        excess = total - gsum(b)
         movable = jnp.where(excess > 0, b < hi, b > lo)
         w = d * movable
-        wsum = jnp.sum(w)
+        wsum = gsum(w)
         moved = jnp.clip(b + excess * w / jnp.where(wsum > 0, wsum, 1.0),
                          lo, hi)
         # host loop breaks on tiny excess / nothing movable; here those
@@ -76,7 +94,8 @@ def water_fill(demand, total: float, lo, hi, iters: int = 8):
     return b
 
 
-def controller_budgets(state: ControllerState, p: CtrlParams, live=None):
+def controller_budgets(state: ControllerState, p: CtrlParams, live=None,
+                       axis_name: Optional[str] = None):
     """(E,) raw per-window budgets — ``BudgetController.budgets(live=)``.
 
     ``live`` is a traced (E,) bool membership mask (chaos runs): dead
@@ -84,9 +103,14 @@ def controller_budgets(state: ControllerState, p: CtrlParams, live=None):
     redistributes their share over the live fleet.  ``None`` (static
     Python, decided at trace time) compiles the legacy mask-free graph —
     chaos-off scenarios keep their exact XLA program.
+
+    ``axis_name`` (sharded scan runtime): ``state``/``live`` hold the local
+    site shard — shapes come from the state, not ``p.n_sites`` (which stays
+    the *global* count so ``equal_share`` and the water-fill total keep
+    fleet-wide semantics) — and the water-fill reduces with ``psum``.
     """
     eq = p.equal_share
-    e = p.n_sites
+    e = state.demand.shape[0]        # local shard size under shard_map
     hi = jnp.full((e,), p.ceil_mult * eq, jnp.float32)
     static_b = jnp.minimum(jnp.full((e,), eq, jnp.float32), hi)
     if live is not None:
@@ -101,7 +125,7 @@ def controller_budgets(state: ControllerState, p: CtrlParams, live=None):
         demand = demand * livf
     if p.cost_discount is not None:
         demand = demand / jnp.asarray(p.cost_discount, jnp.float32)
-    reb = water_fill(demand, p.total_budget, lo, hi)
+    reb = water_fill(demand, p.total_budget, lo, hi, axis_name=axis_name)
     if live is not None:
         # all-dead window: the uniform fallback inside water_fill fills a
         # degenerate [0, 0] box, but keep the contract explicit — ship 0

@@ -131,6 +131,9 @@ class ScanRuntime:
             self._cost = np.ones(1)
         self.plan_seconds = 0.0
         self._fns = {}                 # static_exec key -> jitted scan fn
+        # site rows the compiled step carries: == n_sites here; the sharded
+        # runtime overrides it with E padded to the device multiple
+        self._run_sites = self.n_sites
 
     @classmethod
     def from_scenario(cls, scenario, *, use_kernel=None, interpret=False,
@@ -213,6 +216,32 @@ class ScanRuntime:
             return tuple(np.maximum(np.floor(b), 2.0).tolist())
         return None                    # rebalance: budgets live on device
 
+    # ------------------------------------------------- overridable plumbing
+    # The sharded runtime (repro.runtime.sharded) reuses this run() driver
+    # and specializes exactly four seams: how a resumed state enters the
+    # device (padding), which liveness table the step consumes (padding
+    # columns as permanently-dead sites), how the pool lands on device,
+    # and how results/state leave (slicing the padding back off).
+
+    def _adopt_state(self, state):
+        """A checkpointed RuntimeState entering this run's device layout."""
+        return jax.tree.map(jnp.asarray, state)
+
+    def _liveness_table(self, T: int, w0: int):
+        """(T, run_sites) bool mask for the step, or None (all live)."""
+        if not self._chaos_active:
+            return None
+        from repro.chaos import liveness_table
+        return liveness_table(self.chaos, T, self.n_sites,
+                              self.topology.region_of(), first_window=w0)
+
+    def _device_pool(self, pool_np):
+        return jnp.asarray(pool_np)
+
+    def _finalize(self, ys, state, live_tbl):
+        """Host-side (ys, final_state, live_tbl) right after the scan."""
+        return ys, state, live_tbl
+
     # ----------------------------------------------------------------- run
     def run(self, windows, n_windows: Optional[int] = None, *,
             state=None, first_window: Optional[int] = None) -> dict:
@@ -250,12 +279,12 @@ class ScanRuntime:
         static_exec = self._static_exec(k, n)
         eq = (static_exec[0] if single else self.ctrl.equal_share)
         if state is None:
-            state = init_state(self.n_sites, k, float(eq))
+            state = init_state(self._run_sites, k, float(eq))
             w0 = int(first_window) if first_window is not None else 0
         else:
             w0 = (int(first_window) if first_window is not None
                   else int(np.asarray(state.window_id)))
-            state = jax.tree.map(jnp.asarray, state)
+            state = self._adopt_state(state)
         if self.adaptive is not None and state.adaptive is None:
             # fresh (or pre-adaptive) carry: a zero-filled plan with the
             # exact structure/shapes/dtypes the live plan branch produces,
@@ -263,26 +292,22 @@ class ScanRuntime:
             from repro.adaptive import make_adaptive_carry
             plan_shapes = jax.eval_shape(
                 self._plan_fn,
-                jax.ShapeDtypeStruct((self.n_sites, k, n), jnp.float32),
-                jax.ShapeDtypeStruct((self.n_sites, k), jnp.int32),
-                jax.ShapeDtypeStruct((self.n_sites,), jnp.float32))
+                jax.ShapeDtypeStruct((self._run_sites, k, n), jnp.float32),
+                jax.ShapeDtypeStruct((self._run_sites, k), jnp.int32),
+                jax.ShapeDtypeStruct((self._run_sites,), jnp.float32))
             state = dataclasses.replace(
                 state,
-                adaptive=make_adaptive_carry(self.n_sites, k, plan_shapes))
-        live_tbl = None
-        if self._chaos_active:
-            from repro.chaos import liveness_table, make_chaos_carry
-            live_tbl = liveness_table(self.chaos, T, self.n_sites,
-                                      self.topology.region_of(),
-                                      first_window=w0)
-            if state.chaos is None:
-                # fresh run (or a legacy checkpoint resumed into chaos):
-                # empty gap-serving memory, everyone live
-                state = dataclasses.replace(
-                    state, chaos=make_chaos_carry(self.n_sites, k,
-                                                  self.query_names))
+                adaptive=make_adaptive_carry(self._run_sites, k, plan_shapes))
+        live_tbl = self._liveness_table(T, w0)
+        if live_tbl is not None and state.chaos is None:
+            # fresh run (or a legacy checkpoint resumed into chaos/padding):
+            # empty gap-serving memory, everyone live
+            from repro.chaos import make_chaos_carry
+            state = dataclasses.replace(
+                state, chaos=make_chaos_carry(self._run_sites, k,
+                                              self.query_names))
         fn = self._scan_fn(static_exec)
-        pool = jnp.asarray(pool_np)
+        pool = self._device_pool(pool_np)
         wids = jnp.arange(w0, w0 + T, dtype=jnp.int32)
         xs = wids if live_tbl is None else (wids, jnp.asarray(live_tbl))
 
@@ -301,6 +326,7 @@ class ScanRuntime:
         self.plan_seconds += scan_seconds
         ys = jax.tree.map(np.asarray, ys)
         state = jax.tree.map(np.asarray, state)
+        ys, state, live_tbl = self._finalize(ys, state, live_tbl)
 
         if self.collect == "payloads":
             est, tru, bytes_site, cost_site = self._replay(

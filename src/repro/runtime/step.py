@@ -67,7 +67,7 @@ def _site_keys(seed: int, wid, n_sites: int):
         jnp.arange(n_sites, dtype=jnp.int32))
 
 
-def _fy_sample(key, values, n_real):
+def _fy_sample(key, values, n_real, sample_slice=None):
     """Batched partial Fisher-Yates SRS for every (site, stream) row.
 
     One uniform draw per position up front, then fori_loop steps of
@@ -77,10 +77,29 @@ def _fy_sample(key, values, n_real):
     position ``i`` is final after its own iteration and the caller masks
     everything past ``n_real``, so the loop stops at ``max(n_real)`` —
     identical output, typically far fewer than N iterations.
+
+    ``sample_slice`` = ``(e_rng, e_pad, offset)`` (sharded scan runtime):
+    ``values`` is the local shard of a fleet padded to ``e_pad`` sites, of
+    which the first ``e_rng`` are real.  Threefry draws are NOT prefix-
+    stable across shapes, so every device draws the uniform tensor at the
+    *global unpadded* shape ``(e_rng, k, n)`` — the exact tensor the
+    batched scan draws — zero-pads it to ``e_pad`` rows and slices its own
+    rows at ``offset``.  Real rows therefore consume bitwise the batched
+    run's uniforms (replicated RNG generation is the price of parity);
+    padded rows see u = 0, i.e. identity swaps, and are masked to zero by
+    ``n_real = 0`` anyway.
     """
     e, k, n = values.shape
     idx_dtype = jnp.uint8 if n <= 256 else jnp.uint16
-    u = jax.random.uniform(key, (e, k, n))
+    if sample_slice is None:
+        u = jax.random.uniform(key, (e, k, n))
+    else:
+        e_rng, e_pad, offset = sample_slice
+        u_full = jax.random.uniform(key, (e_rng, k, n))
+        if e_pad > e_rng:
+            u_full = jnp.concatenate(
+                [u_full, jnp.zeros((e_pad - e_rng, k, n), u_full.dtype)])
+        u = jax.lax.dynamic_slice_in_dim(u_full, offset, e, axis=0)
     ei = jnp.arange(e)[:, None]
     ki = jnp.arange(k)[None, :]
     perm0 = jnp.broadcast_to(jnp.arange(n, dtype=idx_dtype), (e, k, n))
@@ -101,7 +120,7 @@ def _fy_sample(key, values, n_real):
                      shuffled, 0.0)
 
 
-def sample_fleet(seed: int, wid, values, n_real):
+def sample_fleet(seed: int, wid, values, n_real, sample_slice=None):
     """SRS without replacement for every site/stream in one pass.
 
     values (E, k, N) f32, n_real (E, k) int -> (E, k, N) f32 where row
@@ -118,7 +137,7 @@ def sample_fleet(seed: int, wid, values, n_real):
     """
     e, k, n = values.shape
     iota = jnp.arange(n)
-    if e == 1:
+    if e == 1 and sample_slice is None:
         keys = _site_keys(seed, wid, e)
         skeys = jax.vmap(lambda b: _stream_keys(b, k))(keys)
 
@@ -130,7 +149,8 @@ def sample_fleet(seed: int, wid, values, n_real):
     base = jax.random.PRNGKey(
         jnp.bitwise_xor(jnp.asarray(seed, jnp.int32),
                         jnp.asarray(wid, jnp.int32)))
-    return _fy_sample(jax.random.fold_in(base, 0x5A), values, n_real)
+    return _fy_sample(jax.random.fold_in(base, 0x5A), values, n_real,
+                      sample_slice=sample_slice)
 
 
 @functools.lru_cache(maxsize=8)
@@ -238,7 +258,8 @@ def make_window_step(pool, *, seed: int, plan_fn, qnames, multi: bool,
                      static_exec_budgets: Optional[np.ndarray] = None,
                      collect: str = "estimates", adaptive=None,
                      use_kernel=None, interpret: bool = False,
-                     chaos: bool = False):
+                     chaos: bool = False, axis_name: Optional[str] = None,
+                     sample_slice: Optional[tuple] = None):
     """Build ``step(state, xs) -> (state, outputs)`` for ``lax.scan``.
 
     pool: (P, E, k, N) f32 device array; window ``wid`` reads slot
@@ -262,6 +283,17 @@ def make_window_step(pool, *, seed: int, plan_fn, qnames, multi: bool,
     payloads), frozen ingest totals, and gap-served output estimates from
     the ``ChaosCarry`` memory.  When False the compiled graph is the
     legacy one — no mask ops are traced at all.
+
+    axis_name / sample_slice (the sharded scan runtime,
+    :mod:`repro.runtime.sharded`): the step body is being traced inside
+    ``shard_map`` over a 1-D site mesh, so ``pool``/``state``/``live``
+    hold only the local site shard.  ``axis_name`` routes the two
+    fleet-global reductions — the water-fill sums (psum) and the adaptive
+    gate's deviation max (pmax) — across the mesh; everything else in the
+    step is per-site and stays collective-free.  ``sample_slice``
+    ``(e_rng, e_pad, offset)`` makes the Fisher-Yates draw consume the
+    batched run's exact global uniforms (see :func:`_fy_sample`).  Both
+    default to None, which traces the unchanged single-device graph.
     """
     p_, e, k, n = pool.shape
     counts = jnp.full((e, k), n, jnp.int32)
@@ -280,7 +312,8 @@ def make_window_step(pool, *, seed: int, plan_fn, qnames, multi: bool,
             wid, live = xs, None
         values = jax.lax.dynamic_index_in_dim(pool, jnp.mod(wid, p_),
                                               keepdims=False)
-        raw_b = controller_budgets(state.controller, ctrl, live=live)
+        raw_b = controller_budgets(state.controller, ctrl, live=live,
+                                   axis_name=axis_name)
         if static_exec_budgets is not None:
             budgets = static_exec if live is None else static_exec * livf
         elif live is None:
@@ -298,7 +331,8 @@ def make_window_step(pool, *, seed: int, plan_fn, qnames, multi: bool,
             gate, replan = gate_update(adaptive, state.adaptive.gate,
                                        values, counts,
                                        use_kernel=use_kernel,
-                                       interpret=interpret)
+                                       interpret=interpret,
+                                       axis_name=axis_name)
             if (adaptive.detector == "always"
                     and int(adaptive.min_replan_interval) == 1):
                 # the cond is statically always-true; planning unwrapped
@@ -319,7 +353,8 @@ def make_window_step(pool, *, seed: int, plan_fn, qnames, multi: bool,
             plan = dataclasses.replace(
                 plan, n_real=plan.n_real * live[:, None].astype(
                     plan.n_real.dtype))
-        samples = sample_fleet(seed, wid, values, plan.n_real)
+        samples = sample_fleet(seed, wid, values, plan.n_real,
+                               sample_slice=sample_slice)
         imputed, ns, mask_i = _impute(plan, samples, plan.n_real,
                                       multi=multi, mean=mean)
         mask_r = jnp.arange(n)[None, None, :] < plan.n_real[..., None]

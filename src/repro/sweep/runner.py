@@ -179,12 +179,15 @@ def update_floors(bench_path: Path = BENCH_PATH,
                   floors_path: Path = FLOORS_PATH,
                   safety_factor: float = DEFAULT_SAFETY_FACTOR,
                   log=print) -> dict:
-    """Re-derive floors from the committed artifact's scan rows."""
+    """Re-derive floors from the committed artifact's scan rows (the
+    device-resident engines: plain and sharded scan; the event loop is
+    host-bound and not floor-gated)."""
     payload = _read_bench(bench_path)
     floors = [{"scenario": r["scenario"], "engine": r["engine"],
                "windows_per_sec_min": round(
                    safety_factor * float(r["windows_per_sec"]), 2)}
-              for r in payload["rows"] if r["engine"] == "scan"]
+              for r in payload["rows"]
+              if r["engine"] in ("scan", "scan_sharded")]
     out = {"schema_version": FLOORS_SCHEMA_VERSION,
            "benchmark": payload["benchmark"],
            "safety_factor": safety_factor,

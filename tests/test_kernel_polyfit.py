@@ -49,3 +49,24 @@ def test_normal_equations_recover_polynomial(degree):
                                  use_kernel=True, interpret=True)
     c = np.asarray(solve_normal_equations(pu, py, degree=degree))
     np.testing.assert_allclose(c, coeffs_true, atol=5e-3)
+
+
+def test_counts_param_gives_masked_moments():
+    """The masked-fit identity the fused model fit leans on: with a 0/1
+    mask w folded into both inputs, every moment of order >= 1 is already
+    the masked sum, and ``counts`` supplies the m=0 row exactly."""
+    rng = np.random.default_rng(5)
+    k, n = 4, 200
+    y = rng.normal(0, 1, (k, n)).astype(np.float32)
+    u = rng.normal(0, 1, (k, n)).astype(np.float32)
+    w = (rng.random((k, n)) < 0.7).astype(np.float32)
+    counts = jnp.asarray(w.sum(axis=1))
+    pu, py = vandermonde_moments(jnp.asarray(y * w), jnp.asarray(u * w),
+                                 use_kernel=True, interpret=True,
+                                 counts=counts)
+    pu_want = np.stack([(u**m * w).sum(axis=1) for m in range(7)], axis=1)
+    pu_want[:, 0] = w.sum(axis=1)
+    py_want = np.stack([(y * u**m * w).sum(axis=1) for m in range(4)],
+                       axis=1)
+    np.testing.assert_allclose(np.asarray(pu), pu_want, rtol=2e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(py), py_want, rtol=2e-4, atol=1e-3)

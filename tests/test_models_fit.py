@@ -52,3 +52,53 @@ def test_explained_var_bounded_by_target_var(rng):
         counts = jnp.full((2,), 300, jnp.int32)
         m = M.fit_models(vals, counts, jnp.asarray([1, 0]), degree=3)
         assert float(m.explained_var[0]) <= y.var(ddof=1) * 1.05
+
+
+def test_fused_kernel_fit_matches_lsq_oracle(rng):
+    """use_kernel=True assembles the same ridge system from fused
+    Vandermonde moments; against the materialized-feature LSQ oracle the
+    standardization is exact, explained variance and predictions agree to
+    f32 association noise.  Raw cubic coefficients are individually
+    ill-conditioned, so parity is asserted on what the planner and the
+    imputer actually consume."""
+    k, n = 6, 96
+    vals = rng.normal(0, 1, (k, n)).astype(np.float32)
+    vals[1] = 0.3 * vals[0] ** 3 + 0.2 * vals[0] + vals[1] * 0.1
+    values = jnp.asarray(vals)
+    counts = jnp.asarray(rng.integers(8, n + 1, k).astype(np.int32))
+    predictor = jnp.asarray((np.arange(k) + 1) % k)
+    for degree in (1, 3):
+        ref = M.fit_models(values, counts, predictor, degree=degree)
+        fused = M.fit_models(values, counts, predictor, degree=degree,
+                             use_kernel=True, interpret=True)
+        np.testing.assert_array_equal(np.asarray(ref.loc),
+                                      np.asarray(fused.loc))
+        np.testing.assert_array_equal(np.asarray(ref.scale),
+                                      np.asarray(fused.scale))
+        np.testing.assert_allclose(np.asarray(fused.explained_var),
+                                   np.asarray(ref.explained_var),
+                                   rtol=1e-4, atol=1e-5)
+        xp = values[predictor]
+        np.testing.assert_allclose(np.asarray(M.evaluate_model(fused, xp)),
+                                   np.asarray(M.evaluate_model(ref, xp)),
+                                   rtol=1e-3, atol=1e-3)
+
+
+def test_fused_kernel_fit_through_fleet_plan(rng):
+    """End-to-end through fleet_plan: the fused fit must leave the integer
+    allocation untouched and the float tables at f32 noise."""
+    from repro.planning.batched import fleet_plan
+    E, k, n = 4, 3, 48
+    values = jnp.asarray(rng.normal(0, 1, (E, k, n)).astype(np.float32))
+    counts = jnp.asarray(np.full((E, k), n, np.int32))
+    budgets = jnp.asarray(np.full(E, 12.0, np.float32))
+    ref = fleet_plan(values, counts, budgets)
+    ker = fleet_plan(values, counts, budgets, use_kernel=True,
+                     interpret=True)
+    for f in ("n_real", "n_imputed", "predictor"):
+        np.testing.assert_array_equal(np.asarray(getattr(ref, f)),
+                                      np.asarray(getattr(ker, f)), err_msg=f)
+    for f in ("explained_var", "r2", "objective"):
+        np.testing.assert_allclose(np.asarray(getattr(ker, f)),
+                                   np.asarray(getattr(ref, f)),
+                                   rtol=1e-4, atol=1e-5, err_msg=f)

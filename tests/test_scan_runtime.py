@@ -434,3 +434,222 @@ def test_sharded_scan_parity_under_forced_devices():
                          capture_output=True, text=True, timeout=600)
     assert out.returncode == 0, out.stderr[-4000:]
     assert "OK 8" in out.stdout
+
+
+# ==========================================================================
+# ShardedScanRuntime: the whole window step under shard_map over sites
+# ==========================================================================
+
+import dataclasses
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.adaptive import AdaptiveSpec
+from repro.chaos import ChaosSpec
+from repro.runtime.sharded import ShardedScanRuntime
+
+_SHARDED_E = 6
+
+
+def _sharded_scenario(runtime, mode="rebalance", chaos=None, adaptive=None,
+                      n_windows=6):
+    kw = {}
+    if chaos is not None:
+        kw["chaos"] = chaos
+    if adaptive is not None:
+        kw["adaptive"] = adaptive
+    return ScenarioConfig(
+        name=f"sharded-test/{runtime}/{mode}",
+        data=DataSpec(dataset="fleet", n_points=n_windows * WINDOW,
+                      window=WINDOW, seed=1, options={"k": K}),
+        planner=PlannerConfig(solver="closed_form", seed=3),
+        topology=TopologySpec(n_regions=2, sites_per_region=_SHARDED_E // 2,
+                              seed=0, latency_scale=0.0),
+        controller=ControllerSpec(mode=mode),
+        queries=("AVG", "VAR", "MIN", "MAX"), budget_fraction=0.25,
+        runtime=runtime, **kw)
+
+
+def _assert_sharded_report_matches(rb, rs, *, bitwise_budgets):
+    """The ISSUE-10 parity contract: integer counters, WAN bytes and byte
+    histories bitwise; budgets bitwise under static mode (host-f64
+    constants) and f32-class under rebalance (psum reassociation); every
+    carry float at f32 association noise with NaN masks aligned."""
+    for f in ("wan_bytes", "full_bytes", "duplicates", "gaps"):
+        assert rb[f] == rs[f], (f, rb[f], rs[f])
+    np.testing.assert_array_equal(np.asarray(rb["bytes_history"]),
+                                  np.asarray(rs["bytes_history"]))
+    if bitwise_budgets:
+        np.testing.assert_array_equal(np.asarray(rb["budget_history"]),
+                                      np.asarray(rs["budget_history"]))
+    else:
+        np.testing.assert_allclose(np.asarray(rs["budget_history"]),
+                                   np.asarray(rb["budget_history"]),
+                                   rtol=2e-5, atol=1e-4)
+    sb, ss = rb["final_state"], rs["final_state"]
+    assert jax.tree.structure(sb) == jax.tree.structure(ss)
+    flat_b = jax.tree_util.tree_flatten_with_path(sb)[0]
+    flat_s = jax.tree_util.tree_leaves(ss)
+    for (path, xb), xs in zip(flat_b, flat_s):
+        a, b = np.asarray(xb), np.asarray(xs)
+        label = jax.tree_util.keystr(path)
+        if a.dtype.kind in "iub":
+            np.testing.assert_array_equal(a, b, err_msg=label)
+        else:
+            np.testing.assert_allclose(b, a, rtol=2e-4, atol=2e-4,
+                                       equal_nan=True, err_msg=label)
+
+
+def _run_sharded_pair(mode="rebalance", chaos=None, adaptive=None,
+                      n_windows=6):
+    sc_b = _sharded_scenario("scan", mode, chaos, adaptive, n_windows)
+    sc_s = _sharded_scenario("scan_sharded", mode, chaos, adaptive,
+                             n_windows)
+    eb = Experiment.from_scenario(sc_b)
+    windows = eb.make_windows()
+    rb = eb.runtime.run(windows)
+    rs = Experiment.from_scenario(sc_s).runtime.run(windows)
+    return rb, rs
+
+
+def _assert_sharded_runtime_static_parity():
+    rb, rs = _run_sharded_pair(mode="static")
+    _assert_sharded_report_matches(rb, rs, bitwise_budgets=True)
+
+
+def _assert_sharded_runtime_rebalance_parity():
+    rb, rs = _run_sharded_pair(mode="rebalance")
+    _assert_sharded_report_matches(rb, rs, bitwise_budgets=False)
+
+
+def _assert_sharded_runtime_chaos_parity():
+    spec = ChaosSpec(flaps=((1, 1, "down"), (3, 1, "up")),
+                     outages=((2, 1, 0),))
+    rb, rs = _run_sharded_pair(chaos=spec)
+    _assert_sharded_report_matches(rb, rs, bitwise_budgets=False)
+    np.testing.assert_array_equal(np.asarray(rb["liveness"]),
+                                  np.asarray(rs["liveness"]))
+
+
+def _assert_sharded_runtime_adaptive_parity():
+    spec = AdaptiveSpec(detector="page_hinkley", ph_delta=0.01,
+                        ph_lambda=0.05)
+    rb, rs = _run_sharded_pair(adaptive=spec)
+    _assert_sharded_report_matches(rb, rs, bitwise_budgets=False)
+    # the pmax'd gate must fire on exactly the same windows
+    assert rb["planner_invocations"] == rs["planner_invocations"]
+    assert rb["plans_reused"] == rs["plans_reused"]
+
+
+def _assert_sharded_ckpt_interchange(cut=3, n_windows=6):
+    """Sharded and batched carries are interchangeable in both directions:
+    a run killed after `cut` windows resumes on the other runtime and
+    replays the remaining byte trajectory bitwise."""
+    sc_b = _sharded_scenario("scan", "rebalance", n_windows=n_windows)
+    sc_s = _sharded_scenario("scan_sharded", "rebalance",
+                             n_windows=n_windows)
+    exp = Experiment.from_scenario(sc_b)
+    windows = exp.make_windows()
+    full = exp.runtime.run(windows)
+    for head_sc, tail_sc in ((sc_s, sc_b), (sc_b, sc_s)):
+        head = Experiment.from_scenario(head_sc).runtime.run(
+            windows, n_windows=cut)
+        tail = Experiment.from_scenario(tail_sc).runtime.run(
+            windows, n_windows=n_windows - cut, state=head["final_state"])
+        assert head["wan_bytes"] + tail["wan_bytes"] == full["wan_bytes"]
+        np.testing.assert_array_equal(
+            np.asarray(tail["bytes_history"]),
+            np.asarray(full["bytes_history"])[cut:])
+        assert int(np.asarray(tail["final_state"].window_id)) == n_windows
+
+
+def _assert_sharded_runtime_all_parity():
+    _assert_sharded_runtime_static_parity()
+    _assert_sharded_runtime_rebalance_parity()
+    _assert_sharded_runtime_chaos_parity()
+    _assert_sharded_runtime_adaptive_parity()
+    _assert_sharded_ckpt_interchange()
+
+
+def test_sharded_runtime_static_parity():
+    _assert_sharded_runtime_static_parity()
+
+
+def test_sharded_runtime_rebalance_parity():
+    _assert_sharded_runtime_rebalance_parity()
+
+
+def test_sharded_runtime_chaos_parity():
+    _assert_sharded_runtime_chaos_parity()
+
+
+def test_sharded_runtime_adaptive_parity():
+    _assert_sharded_runtime_adaptive_parity()
+
+
+def test_sharded_ckpt_interchange():
+    _assert_sharded_ckpt_interchange()
+
+
+@pytest.mark.slow
+def test_sharded_runtime_parity_under_forced_devices():
+    """The tentpole pin: under 8 forced host devices the sharded runtime
+    reproduces the batched scan's RunReport on the static, rebalance,
+    chaos and adaptive scenarios, and checkpoints interchange with the
+    batched runtime in both directions."""
+    prog = textwrap.dedent("""
+        import jax
+        assert len(jax.devices()) == 8, jax.devices()
+        import test_scan_runtime as t
+        t._assert_sharded_runtime_all_parity()
+        print("OK", len(jax.devices()))
+    """)
+    out = subprocess.run([sys.executable, "-c", prog],
+                         env=subprocess_env(8),
+                         cwd=Path(__file__).parent,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "OK 8" in out.stdout
+
+
+def _assert_sharded_padding_invariant(extra):
+    """Scan results must not depend on how far E is padded: padded rows
+    are permanently dead sites, so any pad >= E that the mesh accepts
+    (extra whole rows per device) yields the same counters bitwise and
+    the same floats to f32 noise."""
+    sc_s = _sharded_scenario("scan_sharded", "rebalance")
+    exp = Experiment.from_scenario(sc_s)
+    windows = exp.make_windows()
+    base = exp.runtime.run(windows)
+    rt0 = Experiment.from_scenario(sc_s).runtime
+    d = int(rt0._mesh.shape["sites"])
+    rt = dataclasses.replace(rt0, pad_sites=rt0._run_sites + extra * d)
+    padded = rt.run(windows)
+    _assert_sharded_report_matches(base, padded, bitwise_budgets=False)
+
+
+@pytest.mark.parametrize("extra", [1, 3])
+def test_sharded_padding_invariance(extra):
+    _assert_sharded_padding_invariant(extra)
+
+
+@given(st.integers(min_value=0, max_value=6))
+@settings(max_examples=6, deadline=None)
+def test_sharded_padding_invariance_property(extra):
+    _assert_sharded_padding_invariant(extra)
+
+
+def test_sharded_runtime_construction_rejections():
+    # a single edge has no site axis to shard: refused at scenario
+    # construction, before any compilation
+    with pytest.raises(ValueError, match="nothing to shard"):
+        ScenarioConfig(
+            data=DataSpec(dataset="mvn", n_points=96, window=24, seed=1),
+            planner=PlannerConfig(solver="closed_form"),
+            runtime="scan_sharded")
+    # pad_sites below E or off the device multiple: refused up front
+    rt = Experiment.from_scenario(
+        _sharded_scenario("scan_sharded")).runtime
+    with pytest.raises(ValueError, match="pad_sites"):
+        dataclasses.replace(rt, pad_sites=_SHARDED_E - 2)
